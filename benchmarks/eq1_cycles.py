@@ -1,0 +1,26 @@
+"""Eq. 1 — convolution cycle counts N_C = 2 h_o c_o lcm(S, n)/S, swept over
+stride and kernel size, validated against the explicit RS/SW/ColP schedule.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import mapping
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for n in (3, 5):
+        for s in range(1, n + 1):
+            spec = mapping.FPCASpec(
+                image_h=64, image_w=64, out_channels=8, kernel=n, stride=s, max_kernel=n
+            )
+            n_c = mapping.n_cycles(spec)
+            explicit = sum(1 for _ in mapping.schedule(spec))
+            phases = spec.horizontal_phases
+            rows.append(
+                (f"eq1_n{n}_s{s}", 0.0,
+                 f"N_C={n_c} schedule={explicit} match={n_c == explicit} "
+                 f"phases=lcm({s};{n})/{s}={phases}")
+            )
+    return rows

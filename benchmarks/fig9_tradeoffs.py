@@ -1,0 +1,56 @@
+"""Fig. 9 — frontend energy (a), max frame rate (b), bandwidth reduction (c)
+vs stride size, for several output-channel counts and binning factors
+(kernel 5x5, 224x224 RGB input; constants per paper §5 / DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import analysis, mapping
+
+
+def _spec(stride: int, c_o: int, binning: int = 1) -> mapping.FPCASpec:
+    return mapping.FPCASpec(
+        image_h=224, image_w=224, out_channels=c_o, kernel=5, stride=stride, binning=binning
+    )
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    base = analysis.conventional_cis(224, 224)
+    rows.append(
+        ("fig9_baseline_rgb_cis", 0.0,
+         f"E={base['e_total']*1e6:.1f}uJ fps={base['fps']:.1f}")
+    )
+    for c_o in (4, 8, 16, 32):
+        for stride in (1, 2, 3, 4, 5):
+            spec = _spec(stride, c_o)
+            e = analysis.frontend_energy(spec)
+            lat = analysis.frontend_latency(spec)
+            br = analysis.bandwidth_reduction(spec)
+            rows.append(
+                (f"fig9_c{c_o}_s{stride}", 0.0,
+                 f"E={e['e_total']*1e6:.1f}uJ ({e['e_total']/base['e_total']:.2f}x base) "
+                 f"fps={lat['fps']:.2f} BR={br:.1f} N_C={e['n_cycles']}")
+            )
+    for binning in (2, 4):
+        spec = _spec(5, 8, binning)
+        lat = analysis.frontend_latency(spec)
+        rows.append(
+            (f"fig9b_bin{binning}x{binning}_c8_s5", 0.0,
+             f"fps={lat['fps']:.2f} (binning recovers frame rate)")
+        )
+    # region skipping (paper §3.4.5): half-frame skip halves cycles/energy
+    import numpy as np
+
+    spec = _spec(5, 8)
+    mask = np.zeros((28, 28), dtype=bool)
+    mask[:14] = True
+    e_skip = analysis.frontend_energy(spec, block_mask=mask)
+    e_full = analysis.frontend_energy(spec)
+    rows.append(
+        ("fig9_region_skip_half", 0.0,
+         f"E={e_skip['e_total']*1e6:.1f}uJ vs {e_full['e_total']*1e6:.1f}uJ "
+         f"({e_skip['e_total']/e_full['e_total']:.2f}x)")
+    )
+    return rows

@@ -1,0 +1,100 @@
+"""fpca_conv execution-path comparison on CPU (jit-compiled XLA):
+
+* ``oracle``      — fixed-point circuit solve (deployment ground truth);
+* ``bucket_ref``  — paper's sigmoid bucket model, naive per-pixel layout
+                    (the pre-TPU-adaptation formulation);
+* ``basis_form``  — the kernel's basis-expanded matmul-bank math in pure
+                    jnp (what the Pallas kernel executes per tile).
+
+The interesting derived number is the speedup of the basis form over the
+naive bucket evaluation — the payoff of the MXU-native reformulation
+(DESIGN.md §2); Pallas interpret-mode timings are not meaningful and are
+not reported.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.core.adc import ADCConfig
+from repro.core.curvefit import fit_bucket_model, predict_sigmoid
+from repro.core.device_models import CircuitParams, analog_dot_product
+from repro.kernels.fpca_conv.kernel import _bucket_tables, precompute_weight_planes
+from repro.kernels.fpca_conv.ref import fpca_conv_ref
+
+
+def _basis_form(patches, w, model):
+    """The kernel's math (one weight phase) as a flat jnp program."""
+    mask = jnp.ones((patches.shape[1],), jnp.float32)
+    planes = precompute_weight_planes(w, mask, model)
+    tables = _bucket_tables(model)
+    n_real = patches.shape[1]
+    x = patches
+    x2, x3 = x * x, x * x * x
+    xp = {1: x, 2: x2, 3: x3}
+    maskv = mask[:, None]
+    rv = {a: xp[a] @ maskv for a in (1, 2, 3)}
+    mean_i = rv[1] / n_real
+    a_i = jnp.concatenate([mean_i ** int(a) for a, _ in model.f_avg.exps], axis=1)
+    mm = {(a, b): xp[a] @ planes["w_pows"][b - 1] for (a, b) in ((1, 1), (1, 2), (2, 1))}
+    v_est = a_i @ planes["aw"]
+    xg = v_est / model.v_range
+    edges = np.arange(model.n_buckets, dtype=np.float32) / model.n_buckets
+    v_pred = jnp.zeros_like(xg)
+    for i in range(model.n_buckets):
+        gate = (
+            jax.nn.sigmoid(model.sharpness * (xg - edges[i]))
+            + jax.nn.sigmoid(model.sharpness * (edges[i] + 1.0 / model.n_buckets - xg))
+            - 1.0
+        )
+        acc = jnp.full_like(xg, tables["const"][i])
+        for (a, b), c in tables["by_pair"].items():
+            ci = float(c[i])
+            if a == 0:
+                acc += ci * planes["cs"][b][None, :]
+            elif b == 0:
+                acc += ci * rv[a]
+            else:
+                acc += ci * mm[(a, b)]
+        v_pred += gate * acc
+    return v_pred
+
+
+def run() -> list[Row]:
+    params = CircuitParams()
+    model = fit_bucket_model(params)
+    rng = np.random.default_rng(0)
+    M, N, C = 4096, 75, 64
+    patches = jnp.asarray(rng.uniform(0, 1, (M, N)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 1, (N, C)), jnp.float32)
+
+    oracle = jax.jit(
+        lambda p, ww: analog_dot_product(
+            jnp.broadcast_to(p[:, None, :], (M, C, N)), ww.T[None], params
+        )
+    )
+    naive = jax.jit(
+        lambda p, ww: predict_sigmoid(
+            model, jnp.broadcast_to(p[:, None, :], (M, C, N)), ww.T[None]
+        )
+    )
+    basis = jax.jit(lambda p, ww: _basis_form(p, ww, model))
+
+    us_oracle = time_fn(oracle, patches, w, iters=5)
+    us_naive = time_fn(naive, patches, w, iters=5)
+    us_basis = time_fn(basis, patches, w, iters=5)
+
+    # correctness tie-back: basis form == naive bucket model
+    err = float(jnp.max(jnp.abs(basis(patches, w) - naive(patches, w))))
+
+    rows: list[Row] = [
+        ("kernel_oracle_fixed_point", us_oracle, f"M={M} C={C} (deploy ground truth)"),
+        ("kernel_bucket_naive", us_naive, "per-pixel polynomial layout"),
+        ("kernel_bucket_basis_form", us_basis,
+         f"speedup_vs_naive={us_naive/us_basis:.1f}x max|dV|={err:.2e} "
+         "(MXU-native matmul-bank reformulation)"),
+    ]
+    return rows

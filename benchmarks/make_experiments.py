@@ -1,0 +1,147 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts.  §Perf and the narrative sections are hand-authored and
+preserved (everything outside the AUTOGEN markers).
+
+    PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+ARTIFACTS = ROOT / "artifacts" / "dryrun"
+EXPERIMENTS = ROOT / "EXPERIMENTS.md"
+
+ARCH_ORDER = [
+    "granite-moe-3b-a800m", "qwen2-moe-a2.7b", "seamless-m4t-medium",
+    "internvl2-76b", "h2o-danube-1.8b", "phi3-medium-14b", "qwen3-1.7b",
+    "yi-9b", "zamba2-7b", "mamba2-2.7b", "fpca-frontend",
+]
+SHAPE_ORDER = [
+    "train_4k", "prefill_32k", "decode_32k", "long_500k",
+    "video_1080", "sensor_4k",
+]
+
+
+def _load(tag: str, mesh: str) -> dict[tuple[str, str], dict]:
+    out = {}
+    for p in sorted((ARTIFACTS / tag).glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        arch, shape, _ = p.stem.split("__")
+        out[(arch, shape)] = rec
+    return out
+
+
+def _fmt_bytes(x: float) -> str:
+    if x >= 1e9:
+        return f"{x/1e9:.2f}G"
+    if x >= 1e6:
+        return f"{x/1e6:.1f}M"
+    return f"{x/1e3:.0f}K"
+
+
+def dryrun_table(tag: str = "baseline") -> str:
+    lines = [
+        "| arch | shape | mesh | compile | HLO GFLOPs/dev | bytes/dev | temp HBM/dev | wire bytes/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for mesh in ("single", "multi"):
+        recs = _load(tag, mesh)
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                rec = recs.get((arch, shape))
+                if rec is None:
+                    if (arch == "fpca-frontend") != (shape in ("video_1080", "sensor_4k")):
+                        continue  # shape not defined for this arch
+                    lines.append(f"| {arch} | {shape} | {mesh} | — | — | — | — | — | MISSING |")
+                elif "skipped" in rec:
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | — | — | — | — | — | skipped (full-attn; DESIGN.md §4) |"
+                    )
+                else:
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | {rec['compile_s']}s "
+                        f"| {rec['flops_per_device']/1e9:.1f} "
+                        f"| {_fmt_bytes(rec['bytes_per_device'])} "
+                        f"| {_fmt_bytes(rec['memory']['temp_bytes'])} "
+                        f"| {_fmt_bytes(rec['collectives']['total_wire_bytes'])} "
+                        f"| ok |"
+                    )
+    return "\n".join(lines)
+
+
+def _lever(rec: dict) -> str:
+    """One sentence: what would move the dominant term down (per assignment)."""
+    t = rec["terms"]
+    dom = t["dominant"]
+    shape = rec["shape"]
+    arch = rec["arch"]
+    kind = (
+        "train" if "train" in shape else
+        "prefill" if "prefill" in shape else
+        "frontend" if shape in ("video_1080", "sensor_4k") else "decode"
+    )
+    if dom == "collective_s":
+        if kind == "decode":
+            return "serve with fsdp=False + seq-sharded cache (§Perf T2: 54x)"
+        if "moe" in arch or "granite" in arch or "qwen2" in arch:
+            return "local MoE dispatch + capacity 1.0 (§Perf T1: -45%); EP blocked by E%16"
+        return "cut FSDP gather rounds: fewer microbatches or selective remat"
+    if dom == "memory_s":
+        if kind == "frontend":
+            return "row-group layout sharding + fused phases + bf16 (§Perf T3: 30x)"
+        if kind == "decode":
+            return "HBM-bound weights+cache reads: int8/kv-quant or larger batch"
+        if rec["useful_flop_ratio"] < 0.5:
+            return "recompute + padding waste: selective remat; pad-free head sharding"
+        return "fuse epilogues into matmuls; bf16 activations end-to-end"
+    return "raise arithmetic intensity: bigger per-device tiles (less TP padding)"
+
+
+def roofline_table(tag: str = "baseline") -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | MODEL_FLOPS/HLO | roofline MFU | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = _load(tag, "single")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = recs.get((arch, shape))
+            if rec is None or "skipped" in rec:
+                continue
+            if (arch == "fpca-frontend") != (shape in ("video_1080", "sensor_4k")):
+                continue
+            t = rec["terms"]
+            lines.append(
+                f"| {arch} | {shape} "
+                f"| {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} "
+                f"| {t['collective_s']*1e3:.2f} | {t['dominant'].replace('_s','')} "
+                f"| {rec['useful_flop_ratio']:.2f} | {rec['roofline_mfu']*100:.1f}% "
+                f"| {_lever(rec)} |"
+            )
+    return "\n".join(lines)
+
+
+def replace_block(text: str, marker: str, content: str) -> str:
+    pattern = re.compile(
+        rf"(<!-- AUTOGEN:{marker} -->).*?(<!-- /AUTOGEN:{marker} -->)", re.DOTALL
+    )
+    repl = rf"\1\n{content}\n\2"
+    if not pattern.search(text):
+        raise SystemExit(f"marker {marker} not found in EXPERIMENTS.md")
+    return pattern.sub(repl, text)
+
+
+def main() -> None:
+    text = EXPERIMENTS.read_text()
+    text = replace_block(text, "dryrun", dryrun_table())
+    text = replace_block(text, "roofline", roofline_table())
+    EXPERIMENTS.write_text(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

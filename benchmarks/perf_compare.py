@@ -1,0 +1,51 @@
+"""Compare two dry-run artifact tags (baseline vs a hillclimb variant).
+
+    PYTHONPATH=src python -m benchmarks.perf_compare baseline hc_granite_dots \
+        --cell granite-moe-3b-a800m__train_4k__single
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(tag: str, cell: str) -> dict:
+    p = ARTIFACTS / tag / f"{cell}.json"
+    return json.loads(p.read_text())
+
+
+def fmt(rec: dict) -> str:
+    t = rec["terms"]
+    return (
+        f"compute={t['compute_s']*1e3:9.2f}ms memory={t['memory_s']*1e3:9.2f}ms "
+        f"collective={t['collective_s']*1e3:9.2f}ms bound={t['bound_s']*1e3:9.2f}ms "
+        f"dom={t['dominant'].replace('_s',''):10s} useful={rec['useful_flop_ratio']:.3f} "
+        f"mfu={rec['roofline_mfu']*100:.2f}% temp={rec['memory']['temp_bytes']/1e9:.1f}GB"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("base_tag")
+    ap.add_argument("new_tag")
+    ap.add_argument("--cell", required=True)
+    args = ap.parse_args()
+    a = load(args.base_tag, args.cell)
+    b = load(args.new_tag, args.cell)
+    print(f"cell: {args.cell}")
+    print(f"  {args.base_tag:>16s}: {fmt(a)}")
+    print(f"  {args.new_tag:>16s}: {fmt(b)}")
+    ta, tb = a["terms"], b["terms"]
+    for k in ("compute_s", "memory_s", "collective_s", "bound_s"):
+        if ta[k] > 0:
+            print(f"  {k:14s}: {tb[k]/ta[k]:.3f}x")
+    print(f"  mfu: {a['roofline_mfu']*100:.2f}% -> {b['roofline_mfu']*100:.2f}% "
+          f"({b['roofline_mfu']/max(a['roofline_mfu'],1e-12):.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

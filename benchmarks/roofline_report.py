@@ -1,0 +1,42 @@
+"""Roofline table from dry-run artifacts (artifacts/dryrun/<tag>/*.json).
+
+Not a timing benchmark: it summarises the compiled-artifact analysis that
+EXPERIMENTS.md §Roofline reports (terms in ms, dominant bottleneck, useful
+FLOP ratio, roofline-bounded MFU).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records(tag: str = "baseline", mesh: str = "single") -> list[dict]:
+    recs = []
+    for p in sorted((ARTIFACTS / tag).glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if "skipped" not in rec:
+            recs.append(rec)
+    return recs
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh=mesh)
+        if not recs:
+            rows.append((f"roofline_{mesh}", 0.0, "no artifacts — run launch/dryrun.py"))
+            continue
+        for r in recs:
+            t = r["terms"]
+            rows.append(
+                (f"roofline_{mesh}_{r['arch']}_{r['shape']}", 0.0,
+                 f"compute={t['compute_s']*1e3:.1f}ms memory={t['memory_s']*1e3:.1f}ms "
+                 f"collective={t['collective_s']*1e3:.1f}ms dom={t['dominant'].replace('_s','')} "
+                 f"useful={r['useful_flop_ratio']:.2f} mfu_bound={r['roofline_mfu']:.3f}")
+            )
+    return rows

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure + system reports.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig8 eq1   # substring filter
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "benchmarks.fig7_transfer",
+    "benchmarks.fig8_curvefit",
+    "benchmarks.fig9_tradeoffs",
+    "benchmarks.eq1_cycles",
+    "benchmarks.kernel_bench",
+    "benchmarks.roofline_report",
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    failures = 0
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if filters and not any(f in modname for f in filters):
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            emit(mod.run())
+        except Exception:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{modname},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

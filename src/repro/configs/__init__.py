@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+
+from repro.configs import (
+    granite_moe_3b_a800m,
+    h2o_danube_1_8b,
+    internvl2_76b,
+    mamba2_2_7b,
+    phi3_medium_14b,
+    qwen2_moe_a2_7b,
+    qwen3_1_7b,
+    seamless_m4t_medium,
+    yi_9b,
+    zamba2_7b,
+)
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, reduce_for_smoke, shape_applicable
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        granite_moe_3b_a800m,
+        qwen2_moe_a2_7b,
+        seamless_m4t_medium,
+        internvl2_76b,
+        h2o_danube_1_8b,
+        phi3_medium_14b,
+        qwen3_1_7b,
+        yi_9b,
+        zamba2_7b,
+        mamba2_2_7b,
+    )
+}
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "reduce_for_smoke",
+    "shape_applicable",
+]

@@ -1,0 +1,13 @@
+"""The paper's own workload: a small CNN with an FPCA first layer
+(VWW-class visual wake-word classification, paper §1/§5).
+
+Not part of the assigned LM pool — this is the FPCA technique's native
+application, used by examples/train_fpca_cnn.py and the Fig. 9 benchmarks.
+"""
+from repro.core.mapping import FPCASpec
+
+# 5x5x3 kernel, 8 output channels, stride 5 (the paper's energy sweet spot)
+FRONTEND_SPEC = FPCASpec(
+    image_h=120, image_w=120, out_channels=8, kernel=5, stride=5, max_kernel=5
+)
+N_CLASSES = 2

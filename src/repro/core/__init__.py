@@ -1,0 +1,79 @@
+"""FPCA core — the paper's contribution as composable JAX modules.
+
+* :mod:`repro.core.device_models` — physics-inspired analog circuit oracle
+  (the SPICE stand-in);
+* :mod:`repro.core.curvefit`      — two-step bucket-select curvefit model
+  (paper §4), hard and differentiable variants;
+* :mod:`repro.core.mapping`       — RS/SW/ColP/switch-matrix schedule, Eq. 1
+  cycle model, region skipping;
+* :mod:`repro.core.adc`           — up/down SS-ADC with BN fold + ReLU clamp;
+* :mod:`repro.core.fpca_sim`      — end-to-end functional frontend simulator;
+* :mod:`repro.core.frontend`      — trainable FPCAFrontend layer;
+* :mod:`repro.core.analysis`      — energy / latency / bandwidth models
+  (Eqs. 2--8, Fig. 9).
+"""
+
+from repro.core.adc import ADCConfig, quantize_voltage, updown_readout
+from repro.core.analysis import (
+    FrontendConstants,
+    bandwidth_reduction,
+    conventional_cis,
+    frontend_energy,
+    frontend_latency,
+)
+from repro.core.curvefit import (
+    BucketCurvefitModel,
+    PolySurface,
+    fit_bucket_model,
+    predict_hard,
+    predict_sigmoid,
+)
+from repro.core.device_models import CircuitParams, analog_dot_product, pixel_drive
+from repro.core.fpca_sim import (
+    WeightEncoding,
+    calibrate_gain,
+    encode_weights,
+    extract_windows,
+    fpca_forward,
+)
+from repro.core.frontend import FPCAFrontend, FPCAFrontendConfig
+from repro.core.mapping import (
+    FPCASpec,
+    active_window_mask,
+    n_cycles,
+    n_cycles_with_skipping,
+    output_dims,
+    schedule,
+)
+
+__all__ = [
+    "ADCConfig",
+    "BucketCurvefitModel",
+    "CircuitParams",
+    "FPCAFrontend",
+    "FPCAFrontendConfig",
+    "FPCASpec",
+    "FrontendConstants",
+    "PolySurface",
+    "WeightEncoding",
+    "active_window_mask",
+    "analog_dot_product",
+    "bandwidth_reduction",
+    "calibrate_gain",
+    "conventional_cis",
+    "encode_weights",
+    "extract_windows",
+    "fit_bucket_model",
+    "fpca_forward",
+    "frontend_energy",
+    "frontend_latency",
+    "n_cycles",
+    "n_cycles_with_skipping",
+    "output_dims",
+    "pixel_drive",
+    "predict_hard",
+    "predict_sigmoid",
+    "quantize_voltage",
+    "schedule",
+    "updown_readout",
+]

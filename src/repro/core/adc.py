@@ -1,0 +1,74 @@
+"""Peripheral single-slope ADC model (paper §2, inherited from P²M).
+
+The SS-ADC integrates the FPCA's two-cycle weight scheme into ReLU + BN:
+
+* the counter is *initialised* with the folded BatchNorm offset (in counts);
+* during the positive-kernel cycle (``CH_i``) it counts **up** while the ramp
+  crosses the bitline voltage;
+* during the negative-kernel cycle (``CH_i_bar``) it counts **down**;
+* the final count is clamped to ``[0, 2^b - 1]`` — the lower clamp (via the
+  CDS circuit) *is* the ReLU, the upper clamp is ADC saturation.
+
+Everything here is bit-exact integer arithmetic in the forward pass, with a
+straight-through estimator so the FPCA frontend can train through it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ADCConfig", "quantize_voltage", "updown_readout", "ste_round"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ADCConfig:
+    bits: int = 8          # b_ADC (paper uses 8-bit activations)
+    v_ref: float = 1.0     # full-scale ramp voltage
+
+    @property
+    def levels(self) -> int:
+        return 2**self.bits
+
+    @property
+    def lsb(self) -> float:
+        return self.v_ref / self.levels
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """Round with a straight-through gradient (identity backward)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def quantize_voltage(v: jax.Array, cfg: ADCConfig, *, hard: bool = True) -> jax.Array:
+    """Single-slope conversion of a bitline voltage to a ramp count.
+
+    ``hard=True`` returns exact integer counts (deployment semantics);
+    ``hard=False`` uses the STE so gradients flow (training semantics).
+    """
+    counts = v / cfg.lsb
+    counts = jnp.round(counts) if hard else ste_round(counts)
+    return jnp.clip(counts, 0, cfg.levels - 1)
+
+
+def updown_readout(
+    v_pos: jax.Array,
+    v_neg: jax.Array,
+    cfg: ADCConfig,
+    bn_offset_counts: jax.Array | float = 0.0,
+    *,
+    hard: bool = True,
+) -> jax.Array:
+    """Two-cycle up/down SS-ADC readout: BN offset + ReLU + saturation.
+
+    count = clip( offset + Q(v_pos) - Q(v_neg), 0, 2^b - 1 )
+
+    The lower clamp implements ReLU (paper §2: "the final ADC count, post CDS
+    operation ... results in a non-negative value").
+    """
+    up = quantize_voltage(v_pos, cfg, hard=hard)
+    down = quantize_voltage(v_neg, cfg, hard=hard)
+    count = bn_offset_counts + up - down
+    return jnp.clip(count, 0, cfg.levels - 1)

@@ -1,0 +1,106 @@
+"""Frontend energy / latency / bandwidth models (paper §5, Eqs. 2--8, Fig. 9).
+
+The constants marked "paper" are taken directly from the paper (TSMC 28nm
+simulation + cited IO work); timing constants the paper uses but does not
+print (exposure, ADC ramp) are stated assumptions, documented in DESIGN.md §7.
+What we reproduce is the *model* and the shape of the Fig. 9 trade-off curves,
+with property tests on their qualitative claims (energy falls with stride,
+c_o=32 erases the savings, BR grows with stride, binning buys frame rate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import mapping
+
+__all__ = [
+    "FrontendConstants",
+    "frontend_energy",
+    "frontend_latency",
+    "bandwidth_reduction",
+    "conventional_cis",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConstants:
+    e_px: float = 148e-12       # J / convolution read cycle        [paper §5.0.1]
+    e_adc: float = 41.9e-12     # J / ADC read                       [paper, Kaiser'23]
+    e_io: float = 12.34e-12     # J / bit, LVDS                      [paper, Teja'21]
+    b_adc: int = 8              # ADC bit precision                  [paper]
+    bw_io: float = 1e9          # bit/s per IO pad                   [paper §5.0.2]
+    n_io_pads: int = 24         # IO pads                            [paper §5.0.2]
+    raw_bits: int = 12          # raw Bayer bit depth                [paper Eq. 6]
+    t_exp: float = 20e-6        # s, exposure per read cycle         [assumption]
+    t_adc: float = 1.28e-6      # s, SS ramp: 2^8 counts @ 200 MHz   [assumption]
+
+    @property
+    def e_px_unit(self) -> float:
+        """Per-pixel share of the 75-pixel convolution read energy, used for
+        the conventional-CIS baseline (one pixel read at a time)."""
+        return self.e_px / 75.0
+
+
+# ---------------------------------------------------------------------------
+# FPCA frontend (Eqs. 1--5)
+# ---------------------------------------------------------------------------
+
+
+def frontend_energy(
+    spec: mapping.FPCASpec,
+    const: FrontendConstants = FrontendConstants(),
+    block_mask: np.ndarray | None = None,
+) -> dict[str, float]:
+    """Eq. 2 + Eq. 3: ``E = N_C (e_PX + e_ADC) + E_IO``."""
+    n_c = mapping.n_cycles_with_skipping(spec, block_mask)
+    h_o, w_o = mapping.output_dims(spec)
+    if block_mask is not None:
+        active = int(mapping.active_window_mask(spec, block_mask).sum())
+    else:
+        active = h_o * w_o
+    e_io = active * spec.out_channels * const.b_adc * const.e_io
+    e_total = n_c * (const.e_px + const.e_adc) + e_io
+    return {"n_cycles": n_c, "e_io": e_io, "e_total": e_total}
+
+
+def frontend_latency(
+    spec: mapping.FPCASpec, const: FrontendConstants = FrontendConstants()
+) -> dict[str, float]:
+    """Eq. 4 + Eq. 5: per-cycle exposure + ramp + IO; frame rate = 1/T."""
+    n_c = mapping.n_cycles(spec)
+    _, w_o = mapping.output_dims(spec)
+    t_io = w_o * const.b_adc / (const.bw_io * const.n_io_pads)
+    t_total = n_c * (const.t_exp + const.t_adc + t_io)
+    return {"n_cycles": n_c, "t_io": t_io, "t_total": t_total, "fps": 1.0 / t_total}
+
+
+def bandwidth_reduction(spec: mapping.FPCASpec) -> float:
+    """Eq. 6: ``BR = (I / O) * (4/3) * (12 / b_ADC)``."""
+    h_o, w_o = mapping.output_dims(spec)
+    i_elems = spec.image_h * spec.image_w * spec.in_channels
+    o_elems = h_o * w_o * spec.out_channels
+    return (i_elems / o_elems) * (4.0 / 3.0) * (12.0 / 8.0)
+
+
+# ---------------------------------------------------------------------------
+# Conventional RGB CIS baseline (the red dotted line of Fig. 9(a))
+# ---------------------------------------------------------------------------
+
+
+def conventional_cis(
+    image_h: int, image_w: int, const: FrontendConstants = FrontendConstants()
+) -> dict[str, float]:
+    """Plain sensor readout: every pixel digitised once, raw Bayer shipped out.
+
+    Rolling shutter with column-parallel ADCs: exposure pipelines with the
+    row readout, so frame time ≈ rows x (ramp + row IO).
+    """
+    n_px = image_h * image_w
+    e_total = n_px * (const.e_px_unit + const.e_adc) + n_px * const.raw_bits * const.e_io
+    t_row_io = image_w * const.raw_bits / (const.bw_io * const.n_io_pads)
+    t_total = image_h * (const.t_adc + t_row_io)
+    return {"e_total": e_total, "t_total": t_total, "fps": 1.0 / t_total}

@@ -1,0 +1,310 @@
+"""Bucket-select curvefit model of the FPCA analog convolution (paper §4).
+
+Two-step method, fitted against the circuit oracle in
+:mod:`repro.core.device_models` (the SPICE stand-in):
+
+* **Step 1** — a *generic* surface ``f_avg(I, W)`` is fitted to the oracle
+  output when all ``N`` activated pixels share the same ``(I, W)``, swept over
+  a 2-D grid.  For a heterogeneous window the step-1 estimate is
+  ``V_est = f_avg(mean I, mean W)`` (the output is a strong function of the
+  *cumulative* pixel state; see DESIGN.md §2 for why mean-field is the right
+  reading of the paper).
+* **Step 2** — ``V_est`` selects one of ``n_buckets`` range-specific surfaces
+  ``f_buc_i``.  Bucket ``i`` is fitted by sweeping a small subset of
+  ``n_sweep`` pixels while the remaining ``N - n_sweep`` are pinned at a
+  centre operating point ``(I_C_i, W_C_i)`` chosen so the output sits at the
+  bucket's centre voltage.  The final prediction applies the per-pixel bucket
+  correction (paper's step-2 equation):
+
+      V_pd = sum_j [f_buc_s(I_j, W_j) - v_c_s] / n_sweep + v_c_s
+
+* The **differentiable single equation** replaces the bucket argmax with
+  paired sigmoids ``sigma(k (x - lo_i)) + sigma(k (hi_i - x)) - 1`` (paper
+  Fig. 6(b)), so the whole model backpropagates inside an ML framework.
+
+Every surface is a bivariate polynomial; this is what makes the model
+MXU-friendly: windowed sums of polynomials factor into dot products between
+elementwise powers of the image patch and of the kernel (see
+``repro/kernels/fpca_conv``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_models import CircuitParams, analog_dot_product
+
+__all__ = [
+    "PolySurface",
+    "BucketCurvefitModel",
+    "fit_poly_surface",
+    "fit_bucket_model",
+    "predict_hard",
+    "predict_sigmoid",
+]
+
+
+def _exponent_pairs(degree: int) -> np.ndarray:
+    """All (a, b) with a + b <= degree, deterministic order."""
+    return np.array(
+        [(a, b) for total in range(degree + 1) for a in range(total + 1) for b in [total - a]],
+        dtype=np.int32,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PolySurface:
+    """Bivariate polynomial surface ``f(I, W) = sum_t c_t I^a_t W^b_t``."""
+
+    coeffs: jax.Array  # (n_terms,) float32
+    exps: np.ndarray   # (n_terms, 2) int — static, shared across buckets
+
+    @property
+    def degree(self) -> int:
+        return int(self.exps.sum(axis=1).max())
+
+    def __call__(self, I: jax.Array, W: jax.Array) -> jax.Array:
+        basis = _design(jnp.asarray(I, jnp.float32), jnp.asarray(W, jnp.float32), self.exps)
+        return basis @ self.coeffs
+
+
+def _design(I: jax.Array, W: jax.Array, exps: np.ndarray) -> jax.Array:
+    """Design matrix of monomials, shape ``I.shape + (n_terms,)``."""
+    max_deg = int(exps.max())
+    # powers[k] = x**k computed once, reused across terms.
+    pow_i = [jnp.ones_like(I)]
+    pow_w = [jnp.ones_like(W)]
+    for _ in range(max_deg):
+        pow_i.append(pow_i[-1] * I)
+        pow_w.append(pow_w[-1] * W)
+    cols = [pow_i[a] * pow_w[b] for a, b in exps]
+    return jnp.stack(cols, axis=-1)
+
+
+def fit_poly_surface(
+    I: np.ndarray, W: np.ndarray, V: np.ndarray, degree: int
+) -> PolySurface:
+    """Least-squares fit of a bivariate polynomial to samples ``V(I, W)``."""
+    exps = _exponent_pairs(degree)
+    A = np.asarray(_design(jnp.asarray(I.ravel()), jnp.asarray(W.ravel()), exps))
+    coeffs, *_ = np.linalg.lstsq(A, V.ravel(), rcond=None)
+    return PolySurface(coeffs=jnp.asarray(coeffs, jnp.float32), exps=exps)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketCurvefitModel:
+    """Fitted two-step bucket-select model for one circuit configuration."""
+
+    f_avg: PolySurface
+    bucket_coeffs: jax.Array      # (n_buckets, n_terms_buc)
+    bucket_exps: np.ndarray       # (n_terms_buc, 2)
+    centers: jax.Array            # (n_buckets, 2) — (I_C_i, W_C_i)
+    v_centers: jax.Array          # (n_buckets,) — f_avg at centre = V at all-centre
+    n_pixels: int                 # N (75 for a 5x5x3 kernel)
+    n_sweep: int                  # subset size used for bucket fits (5)
+    v_range: float                # bucket span upper edge (v_sat)
+    sharpness: float = 100.0      # paper uses sigma(100 x)
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.bucket_coeffs.shape[0])
+
+    # -- (de)serialisation so fits can be cached in artifacts/ ---------------
+    def to_dict(self) -> dict:
+        return {
+            "f_avg_coeffs": np.asarray(self.f_avg.coeffs),
+            "f_avg_exps": self.f_avg.exps,
+            "bucket_coeffs": np.asarray(self.bucket_coeffs),
+            "bucket_exps": self.bucket_exps,
+            "centers": np.asarray(self.centers),
+            "v_centers": np.asarray(self.v_centers),
+            "n_pixels": self.n_pixels,
+            "n_sweep": self.n_sweep,
+            "v_range": self.v_range,
+            "sharpness": self.sharpness,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "BucketCurvefitModel":
+        return BucketCurvefitModel(
+            f_avg=PolySurface(
+                coeffs=jnp.asarray(d["f_avg_coeffs"], jnp.float32),
+                exps=np.asarray(d["f_avg_exps"], np.int32),
+            ),
+            bucket_coeffs=jnp.asarray(d["bucket_coeffs"], jnp.float32),
+            bucket_exps=np.asarray(d["bucket_exps"], np.int32),
+            centers=jnp.asarray(d["centers"], jnp.float32),
+            v_centers=jnp.asarray(d["v_centers"], jnp.float32),
+            n_pixels=int(d["n_pixels"]),
+            n_sweep=int(d["n_sweep"]),
+            v_range=float(d["v_range"]),
+            sharpness=float(d["sharpness"]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fitting (step 1 + step 2 simulation setups, paper §4)
+# ---------------------------------------------------------------------------
+
+
+def _all_shared_output(
+    t_i: jax.Array, t_w: jax.Array, n_pixels: int, params: CircuitParams
+) -> jax.Array:
+    """Oracle output when all N pixels share (t_i, t_w); broadcasts grids."""
+    I = jnp.broadcast_to(t_i[..., None], t_i.shape + (n_pixels,))
+    W = jnp.broadcast_to(t_w[..., None], t_w.shape + (n_pixels,))
+    return analog_dot_product(I, W, params, n_pixels=n_pixels)
+
+
+def _find_center(
+    target_v: float, n_pixels: int, params: CircuitParams
+) -> tuple[float, float]:
+    """Bisect t so that V(all pixels at (t, t)) hits ``target_v``.
+
+    The all-shared transfer curve is monotonic in t, so plain bisection works;
+    if the target exceeds the achievable output the centre saturates at t=1.
+    """
+    lo, hi = 0.0, 1.0
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        v = float(_all_shared_output(jnp.asarray(mid), jnp.asarray(mid), n_pixels, params))
+        if v < target_v:
+            lo = mid
+        else:
+            hi = mid
+    t = 0.5 * (lo + hi)
+    return t, t
+
+
+def fit_bucket_model(
+    params: CircuitParams | None = None,
+    *,
+    n_pixels: int = 75,
+    n_buckets: int = 5,
+    n_sweep: int = 5,
+    degree_avg: int = 4,
+    degree_buc: int = 3,
+    grid: int = 41,
+    i_range: tuple[float, float] = (0.0, 1.0),
+    w_range: tuple[float, float] = (0.0, 1.0),
+) -> BucketCurvefitModel:
+    """Run the paper's two fitting setups against the circuit oracle.
+
+    Defaults reproduce the paper's configuration: a 5x5x3 kernel (75 pixels),
+    5 buckets over [0, 1] V, bucket fits sweeping a 5-pixel subset.
+    """
+    params = params or CircuitParams()
+    ti = jnp.linspace(i_range[0], i_range[1], grid)
+    tw = jnp.linspace(w_range[0], w_range[1], grid)
+    gi, gw = jnp.meshgrid(ti, tw, indexing="ij")
+
+    # ---- step 1: generic surface, all N pixels swept together --------------
+    v_avg = _all_shared_output(gi, gw, n_pixels, params)
+    f_avg = fit_poly_surface(np.asarray(gi), np.asarray(gw), np.asarray(v_avg), degree_avg)
+
+    # ---- step 2: one tailored surface per bucket ----------------------------
+    v_range = params.v_sat
+    bucket_exps = _exponent_pairs(degree_buc)
+    bucket_coeffs, centers, v_centers = [], [], []
+    n_fixed = n_pixels - n_sweep
+    for b in range(n_buckets):
+        target = (b + 0.5) / n_buckets * v_range
+        ic, wc = _find_center(target, n_pixels, params)
+        # n_sweep pixels sweep the grid; the rest pin the bitline into bucket b.
+        I = jnp.concatenate(
+            [
+                jnp.broadcast_to(gi[..., None], gi.shape + (n_sweep,)),
+                jnp.full(gi.shape + (n_fixed,), ic),
+            ],
+            axis=-1,
+        )
+        W = jnp.concatenate(
+            [
+                jnp.broadcast_to(gw[..., None], gw.shape + (n_sweep,)),
+                jnp.full(gw.shape + (n_fixed,), wc),
+            ],
+            axis=-1,
+        )
+        v_buc = analog_dot_product(I, W, params, n_pixels=n_pixels)
+        surf = fit_poly_surface(np.asarray(gi), np.asarray(gw), np.asarray(v_buc), degree_buc)
+        bucket_coeffs.append(np.asarray(surf.coeffs))
+        centers.append((ic, wc))
+        v_centers.append(
+            float(_all_shared_output(jnp.asarray(ic), jnp.asarray(wc), n_pixels, params))
+        )
+
+    return BucketCurvefitModel(
+        f_avg=f_avg,
+        bucket_coeffs=jnp.asarray(np.stack(bucket_coeffs), jnp.float32),
+        bucket_exps=bucket_exps,
+        centers=jnp.asarray(np.asarray(centers), jnp.float32),
+        v_centers=jnp.asarray(np.asarray(v_centers), jnp.float32),
+        n_pixels=n_pixels,
+        n_sweep=n_sweep,
+        v_range=float(v_range),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prediction
+# ---------------------------------------------------------------------------
+
+
+def _estimate(model: BucketCurvefitModel, I: jax.Array, W: jax.Array) -> jax.Array:
+    """Step-1 estimate ``V_est`` for heterogeneous windows (mean-field)."""
+    return model.f_avg(jnp.mean(I, axis=-1), jnp.mean(W, axis=-1))
+
+
+def _bucket_prediction(
+    model: BucketCurvefitModel, I: jax.Array, W: jax.Array
+) -> jax.Array:
+    """Per-bucket full prediction B_i, shape ``(..., n_buckets)``.
+
+    B_i = sum_j [f_buc_i(I_j, W_j) - v_c_i] / n_sweep + v_c_i
+    """
+    basis = _design(jnp.asarray(I, jnp.float32), jnp.asarray(W, jnp.float32), model.bucket_exps)
+    # (..., N, n_terms) @ (n_terms, n_buckets) -> (..., N, n_buckets)
+    per_pixel = basis @ model.bucket_coeffs.T
+    summed = jnp.sum(per_pixel, axis=-2)  # (..., n_buckets)
+    n = I.shape[-1]
+    return (summed - n * model.v_centers) / model.n_sweep + model.v_centers
+
+
+def predict_hard(model: BucketCurvefitModel, I: jax.Array, W: jax.Array) -> jax.Array:
+    """Step-function bucket selection (paper's three-step procedure)."""
+    v_est = _estimate(model, I, W)
+    idx = jnp.clip(
+        jnp.floor(v_est / model.v_range * model.n_buckets).astype(jnp.int32),
+        0,
+        model.n_buckets - 1,
+    )
+    preds = _bucket_prediction(model, I, W)
+    return jnp.take_along_axis(preds, idx[..., None], axis=-1)[..., 0]
+
+
+def predict_sigmoid(model: BucketCurvefitModel, I: jax.Array, W: jax.Array) -> jax.Array:
+    """The paper's single differentiable equation (sigmoid bucket gates)."""
+    x = _estimate(model, I, W) / model.v_range
+    k = model.sharpness
+    edges_lo = jnp.arange(model.n_buckets, dtype=jnp.float32) / model.n_buckets
+    edges_hi = (jnp.arange(model.n_buckets, dtype=jnp.float32) + 1.0) / model.n_buckets
+    gates = (
+        jax.nn.sigmoid(k * (x[..., None] - edges_lo))
+        + jax.nn.sigmoid(k * (edges_hi - x[..., None]))
+        - 1.0
+    )
+    preds = _bucket_prediction(model, I, W)
+    return jnp.sum(gates * preds, axis=-1)
+
+
+def make_predict_fn(
+    model: BucketCurvefitModel, differentiable: bool = True
+) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Convenience closure used by the frontend layer and kernels."""
+    fn = predict_sigmoid if differentiable else predict_hard
+    return lambda I, W: fn(model, I, W)

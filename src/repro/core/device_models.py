@@ -1,0 +1,125 @@
+"""Physics-inspired circuit oracle for the FPCA pixel array.
+
+This module plays the role of the paper's TSMC-28nm SPICE netlist: it is the
+ground truth that every curvefit in :mod:`repro.core.curvefit` is fitted
+against and validated on.  It is intentionally *not* a polynomial, so the
+bucket-select curvefit has something real to approximate.
+
+Model structure (per paper §3.1 / §4):
+
+* each activated unit pixel ``j`` pulls up the shared bitline with a drive
+  ``g(I_j, W_j)`` that depends strongly on its own photocurrent ``I_j``
+  (normalised light intensity, [0, 1]) and its own NVM weight conductance
+  ``W_j`` (normalised, [0, 1]);
+* the drive is mildly non-linear in ``I*W`` (source-follower + NVM I-V
+  curvature) and degraded by the metal-line series resistance between the
+  weight die and the pixel die (0--5 mm, paper Fig. 7(c)/(f));
+* the bitline voltage saturates (supply clamp) and *couples back* into every
+  pixel's operating point: the higher the bitline, the weaker each pixel's
+  marginal contribution.  This is the weak cumulative interaction the paper's
+  two-step bucket-select model is designed to capture.
+
+The coupled output is the fixed point of
+
+    V = v_sat * tanh( (1 - lam * V / v_sat) * sum_j g(I_j, W_j) / (N * s0) )
+
+solved with a few (differentiable) fixed-point iterations; ``lam`` is small so
+the iteration is strongly contracting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CircuitParams",
+    "pixel_drive",
+    "analog_dot_product",
+    "analog_dot_product_from_drive",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CircuitParams:
+    """Device/circuit constants for the FPCA analog oracle.
+
+    Defaults are chosen so that a 75-pixel (5x5x3 kernel) convolution sweeps
+    the full [0, ~0.97] V output range, single-pixel transfer curves look like
+    the paper's Fig. 7(a)/(b), and the ideal-vs-analog scatter (Fig. 7(c)/(f))
+    is "fairly linear" with visible curvature at the top of the range.
+    """
+
+    v_sat: float = 1.0          # bitline supply clamp [V]
+    s0: float = 0.37            # per-pixel drive normalisation
+    drive_a: float = 0.15       # I^2 W curvature (photocurrent compression)
+    drive_b: float = -0.10      # I W^2 curvature (NVM I-V bowing)
+    drive_c: float = 0.25       # soft compression of the I*W product
+    coupling: float = 0.15      # bitline -> pixel operating-point feedback
+    kappa_r: float = 0.012      # metal-line degradation per mm per unit drive
+    r_metal_mm: float = 0.0     # weight-die <-> pixel-die metal length [mm]
+    fp_iters: int = 8           # fixed-point iterations (contracting; 8 >> enough)
+
+    def replace(self, **kw: Any) -> "CircuitParams":
+        return dataclasses.replace(self, **kw)
+
+
+def pixel_drive(I: jax.Array, W: jax.Array, params: CircuitParams) -> jax.Array:
+    """Per-pixel bitline drive ``g(I, W)`` (elementwise).
+
+    Strongly a function of the pixel's own photocurrent and weight only; the
+    bitline coupling is applied outside, in :func:`analog_dot_product`.
+    """
+    I = jnp.asarray(I, jnp.float32)
+    W = jnp.asarray(W, jnp.float32)
+    iw = I * W
+    num = iw + params.drive_a * (I * iw) + params.drive_b * (W * iw)
+    g = num / (1.0 + params.drive_c * iw)
+    # Metal-line series resistance between the shared weight block (weight
+    # die) and the unit pixel: larger drive -> larger IR drop -> compression.
+    g = g / (1.0 + params.kappa_r * params.r_metal_mm * g)
+    return g
+
+
+def analog_dot_product_from_drive(
+    g: jax.Array, n_pixels: int, params: CircuitParams
+) -> jax.Array:
+    """Bitline voltage given per-pixel drives ``g`` summed over the last axis.
+
+    ``n_pixels`` is the number of *activated* pixels (the paper activates a
+    fixed n*n*3 region regardless of logical kernel size, so this is a static
+    schedule constant, not ``g.shape[-1]`` — padded zero-weight slots still
+    count as activated pixels).
+    """
+    s = jnp.sum(g, axis=-1)
+    denom = n_pixels * params.s0
+    v = params.v_sat * jnp.tanh(s / denom)  # uncoupled initial guess
+    for _ in range(params.fp_iters):
+        eff = (1.0 - params.coupling * v / params.v_sat) * s
+        v = params.v_sat * jnp.tanh(eff / denom)
+    return v
+
+
+def analog_dot_product(
+    I: jax.Array, W: jax.Array, params: CircuitParams, n_pixels: int | None = None
+) -> jax.Array:
+    """Analog convolution output for one bitline read cycle.
+
+    Args:
+      I: photocurrents, shape ``(..., N)`` — normalised light intensities.
+      W: NVM conductances for this cycle (positive *or* negative kernel half),
+         shape broadcastable to ``I``.
+      params: circuit constants.
+      n_pixels: activated-pixel count; defaults to ``I.shape[-1]``.
+
+    Returns:
+      Bitline voltage, shape ``(...,)``, in ``[0, v_sat)``.
+    """
+    I = jnp.asarray(I, jnp.float32)
+    W = jnp.broadcast_to(jnp.asarray(W, jnp.float32), I.shape)
+    n = I.shape[-1] if n_pixels is None else n_pixels
+    g = pixel_drive(I, W, params)
+    return analog_dot_product_from_drive(g, n, params)

@@ -1,0 +1,207 @@
+"""End-to-end functional simulator of one FPCA first-layer convolution.
+
+Glue between the scheduler (:mod:`repro.core.mapping`), the analog models
+(:mod:`repro.core.device_models` / :mod:`repro.core.curvefit`) and the SS-ADC
+(:mod:`repro.core.adc`):
+
+    image --binning--> photocurrents --windows--> bitline reads (pos & neg
+    cycle per channel) --SS-ADC up/down + BN offset--> ReLU'd counts
+
+Three evaluation modes share one code path:
+
+* ``"oracle"``         — fixed-point circuit solve (deployment ground truth);
+* ``"bucket_hard"``    — paper's step-function bucket select;
+* ``"bucket_sigmoid"`` — paper's differentiable single equation (trainable).
+
+All windows of all cycles are evaluated batched (the MXU-friendly layout);
+the cycle *schedule* is accounted analytically by the energy/latency models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping
+from repro.core.adc import ADCConfig, ste_round, updown_readout
+from repro.core.curvefit import BucketCurvefitModel, predict_hard, predict_sigmoid
+from repro.core.device_models import CircuitParams, analog_dot_product
+
+__all__ = [
+    "WeightEncoding",
+    "encode_weights",
+    "extract_windows",
+    "fpca_forward",
+    "calibrate_gain",
+]
+
+Mode = Literal["oracle", "bucket_hard", "bucket_sigmoid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightEncoding:
+    """Float kernel -> NVM conductance-pair encoding (paper §3.2 / Fig. 2)."""
+
+    n_levels: int = 16      # NVM programmable conductance levels (4-bit device)
+    w_scale: float = 1.0    # |K| mapped to full conductance at this magnitude
+
+    def quantize(self, w01: jax.Array, *, hard: bool = True) -> jax.Array:
+        """Quantize normalised conductances to the device's discrete levels."""
+        q = w01 * (self.n_levels - 1)
+        q = jnp.round(q) if hard else ste_round(q)
+        return q / (self.n_levels - 1)
+
+
+def encode_weights(
+    kernel: jax.Array,
+    spec: mapping.FPCASpec,
+    enc: WeightEncoding,
+    *,
+    hard: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Split a float kernel into (positive, negative) NVM conductance planes.
+
+    Args:
+      kernel: ``(c_o, k, k, c_i)`` float weights (logical kernel size k).
+
+    Returns:
+      ``(w_pos, w_neg)`` each ``(c_o, n*n*c_i)`` in [0, 1], zero-padded to the
+      physical max kernel ``n`` (paper §3.4.1: unused slots hold conductance 0)
+      and flattened channel-major to match ``extract_windows``.
+    """
+    c_o, k, _, c_i = kernel.shape
+    n = spec.max_kernel
+    if k != spec.kernel or c_i != spec.in_channels:
+        raise ValueError(f"kernel shape {kernel.shape} inconsistent with spec {spec}")
+    w01 = jnp.clip(jnp.abs(kernel) / enc.w_scale, 0.0, 1.0)
+    w_pos = jnp.where(kernel > 0, w01, 0.0)
+    w_neg = jnp.where(kernel < 0, w01, 0.0)
+
+    def _layout(w: jax.Array) -> jax.Array:
+        w = enc.quantize(w, hard=hard)
+        w = jnp.transpose(w, (0, 3, 1, 2))                      # (c_o, c_i, k, k)
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, n - k), (0, n - k)))  # zero NVM slots
+        return w.reshape(c_o, c_i * n * n)
+
+    return _layout(w_pos), _layout(w_neg)
+
+
+def extract_windows(image: jax.Array, spec: mapping.FPCASpec) -> jax.Array:
+    """Image -> photocurrent windows, shape ``(h_o, w_o, c_i*n*n)``.
+
+    Applies pixel binning (average pool, Fig. 9(b)) and zero padding first.
+    Flattening is channel-major ``(c_i, n, n)`` to match ``encode_weights``.
+    """
+    if image.ndim != 3 or image.shape[-1] != spec.in_channels:
+        raise ValueError(f"expected (H, W, {spec.in_channels}) image, got {image.shape}")
+    img = jnp.asarray(image, jnp.float32)
+    b = spec.binning
+    if b > 1:
+        h, w, c = img.shape
+        img = img[: h // b * b, : w // b * b].reshape(h // b, b, w // b, b, c).mean((1, 3))
+    n, s, p = spec.max_kernel, spec.stride, spec.padding
+    if s == n and p == 0:
+        # non-overlapping windows (the paper's energy-optimal stride): a pure
+        # reshape — no gather/conv work at all (perf path, §Perf target 3)
+        h, w, c = img.shape
+        h_o, w_o = h // n, w // n
+        tiles = img[: h_o * n, : w_o * n].reshape(h_o, n, w_o, n, c)
+        return tiles.transpose(0, 2, 4, 1, 3).reshape(h_o, w_o, c * n * n)
+    patches = jax.lax.conv_general_dilated_patches(
+        img[None].transpose(0, 3, 1, 2),          # NCHW
+        filter_shape=(n, n),
+        window_strides=(s, s),
+        padding=((p, p), (p, p)),
+    )                                               # (1, c_i*n*n, h_o, w_o)
+    return jnp.transpose(patches[0], (1, 2, 0))     # (h_o, w_o, c_i*n*n)
+
+
+def _analog_read(
+    I: jax.Array,
+    W: jax.Array,
+    mode: Mode,
+    circuit: CircuitParams,
+    model: BucketCurvefitModel | None,
+    n_active: int,
+) -> jax.Array:
+    """Batched bitline read: I ``(..., N)``, W ``(c_o, N)`` -> ``(..., c_o)``."""
+    Ib = I[..., None, :]  # (..., 1, N) broadcast against channels
+    if mode == "oracle":
+        return analog_dot_product(
+            jnp.broadcast_to(Ib, Ib.shape[:-2] + W.shape), W, circuit, n_pixels=n_active
+        )
+    assert model is not None, "bucket modes need a fitted BucketCurvefitModel"
+    fn = predict_hard if mode == "bucket_hard" else predict_sigmoid
+    return fn(model, jnp.broadcast_to(Ib, Ib.shape[:-2] + W.shape), W)
+
+
+def fpca_forward(
+    image: jax.Array,
+    kernel: jax.Array,
+    spec: mapping.FPCASpec,
+    *,
+    circuit: CircuitParams | None = None,
+    model: BucketCurvefitModel | None = None,
+    adc: ADCConfig | None = None,
+    enc: WeightEncoding | None = None,
+    bn_offset_counts: jax.Array | float = 0.0,
+    mode: Mode = "oracle",
+    hard: bool = True,
+    block_mask: np.ndarray | None = None,
+) -> dict[str, jax.Array]:
+    """Simulate the FPCA frontend for one image.
+
+    Returns a dict with ``counts`` (integer SS-ADC output, ``(h_o, w_o, c_o)``),
+    plus the raw ``v_pos`` / ``v_neg`` bitline voltages for analysis.
+    """
+    circuit = circuit or CircuitParams()
+    adc = adc or ADCConfig()
+    enc = enc or WeightEncoding()
+    w_pos, w_neg = encode_weights(kernel, spec, enc, hard=hard)
+    I = extract_windows(image, spec)                      # (h_o, w_o, N)
+    n_active = spec.n_active_pixels
+    v_pos = _analog_read(I, w_pos, mode, circuit, model, n_active)
+    v_neg = _analog_read(I, w_neg, mode, circuit, model, n_active)
+    counts = updown_readout(v_pos, v_neg, adc, bn_offset_counts, hard=hard)
+    if block_mask is not None:
+        keep = jnp.asarray(mapping.active_window_mask(spec, block_mask))
+        counts = counts * keep[..., None]
+    return {"counts": counts, "v_pos": v_pos, "v_neg": v_neg}
+
+
+def calibrate_gain(
+    spec: mapping.FPCASpec,
+    *,
+    circuit: CircuitParams | None = None,
+    adc: ADCConfig | None = None,
+    enc: WeightEncoding | None = None,
+    n_samples: int = 2048,
+    seed: int = 0,
+) -> tuple[float, float]:
+    """Fit ``ideal_conv ≈ gain * (v_pos - v_neg) + bias`` on random operating
+    points — the digital-gain calibration a deployment would run once.
+
+    Returns ``(gain, r2)``; ``acts = counts * lsb * gain`` then approximates
+    the ideal (quantized-weight) convolution, and ``r2`` quantifies the
+    paper's "fairly linear" claim (Fig. 7(c)/(f)).
+    """
+    circuit = circuit or CircuitParams()
+    enc = enc or WeightEncoding()
+    adc = adc or ADCConfig()
+    rng = np.random.default_rng(seed)
+    N = spec.n_active_pixels
+    I = jnp.asarray(rng.uniform(0, 1, (n_samples, N)), jnp.float32)
+    W = jnp.asarray(rng.uniform(0, 1, (n_samples, N)), jnp.float32)
+    Wq = enc.quantize(W)
+    v = analog_dot_product(I, Wq, circuit, n_pixels=N)
+    ideal = jnp.sum(I * Wq, axis=-1) * enc.w_scale
+    A = np.stack([np.asarray(v), np.ones(n_samples)], axis=1)
+    (gain, bias), res, *_ = np.linalg.lstsq(A, np.asarray(ideal), rcond=None)
+    ss_tot = float(((ideal - ideal.mean()) ** 2).sum())
+    r2 = 1.0 - float(res[0]) / ss_tot if len(res) else 1.0
+    del bias
+    return float(gain), float(r2)

@@ -1,0 +1,103 @@
+"""Trainable FPCA frontend layer — the paper's technique as a first-class
+framework feature.
+
+``FPCAFrontend`` is a drop-in first-conv layer: training runs through the
+paper's differentiable sigmoid bucket-select model (with STEs through the NVM
+level quantiser and the SS-ADC), deployment evaluates through the circuit
+oracle.  The gap between the two *is* the hardware/algorithm co-design story:
+``examples/train_fpca_cnn.py`` shows that a network trained through the bucket
+model keeps its accuracy when evaluated on the oracle, while a naively trained
+network (ideal conv) degrades.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig
+from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
+from repro.core.device_models import CircuitParams
+from repro.core.fpca_sim import WeightEncoding, calibrate_gain, fpca_forward
+from repro.core.mapping import FPCASpec, output_dims
+
+__all__ = ["FPCAFrontendConfig", "FPCAFrontend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FPCAFrontendConfig:
+    spec: FPCASpec
+    circuit: CircuitParams = CircuitParams()
+    adc: ADCConfig = ADCConfig()
+    enc: WeightEncoding = WeightEncoding(n_levels=16, w_scale=1.0)
+
+
+class FPCAFrontend:
+    """Functional module: ``init(key) -> params``, ``apply(params, x) -> y``."""
+
+    def __init__(self, config: FPCAFrontendConfig, model: BucketCurvefitModel | None = None):
+        self.config = config
+        # One fitted bucket model per circuit configuration (cached by caller
+        # across layers/experiments; fitting is a one-off ~seconds cost).
+        self.model = model or fit_bucket_model(
+            config.circuit, n_pixels=config.spec.n_active_pixels
+        )
+        gain, r2 = calibrate_gain(
+            config.spec, circuit=config.circuit, adc=config.adc, enc=config.enc
+        )
+        self.gain = gain
+        self.calibration_r2 = r2
+
+    @property
+    def out_shape(self) -> tuple[int, int, int]:
+        h_o, w_o = output_dims(self.config.spec)
+        return (h_o, w_o, self.config.spec.out_channels)
+
+    def init(self, key: jax.Array) -> dict[str, Any]:
+        s = self.config.spec
+        k = s.kernel
+        fan_in = k * k * s.in_channels
+        kernel = jax.random.normal(key, (s.out_channels, k, k, s.in_channels)) * (
+            self.config.enc.w_scale / jnp.sqrt(fan_in)
+        )
+        return {
+            "kernel": kernel.astype(jnp.float32),
+            # BN offset folded into the SS-ADC counter init (paper §2), in counts.
+            "bn_offset": jnp.zeros((s.out_channels,), jnp.float32),
+        }
+
+    def apply(
+        self,
+        params: dict[str, Any],
+        images: jax.Array,
+        *,
+        train: bool = True,
+    ) -> jax.Array:
+        """images ``(B, H, W, c_i)`` in [0, 1] -> activations ``(B, h_o, w_o, c_o)``.
+
+        ``train=True``: differentiable path (sigmoid bucket model + STEs).
+        ``train=False``: deployment path (circuit oracle + hard quantisation).
+        """
+        cfg = self.config
+        mode = "bucket_sigmoid" if train else "oracle"
+
+        def _one(img: jax.Array) -> jax.Array:
+            out = fpca_forward(
+                img,
+                params["kernel"],
+                cfg.spec,
+                circuit=cfg.circuit,
+                model=self.model,
+                adc=cfg.adc,
+                enc=cfg.enc,
+                bn_offset_counts=params["bn_offset"],
+                mode=mode,
+                hard=not train,
+            )
+            # counts -> approximate convolution units (digital gain calibration)
+            return out["counts"] * (cfg.adc.lsb * self.gain)
+
+        return jax.vmap(_one)(images)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (+ jnp oracles) for the framework's compute hot-spots:
+
+* ``fpca_conv``       — the paper's analog in-pixel convolution as a
+                        basis-expanded matmul bank (primary contribution);
+* ``flash_attention`` — tiled online-softmax attention (train/prefill);
+* ``ssd``             — Mamba2 SSD intra-chunk contraction.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated in interpret mode on CPU against their ``ref.py`` oracles.
+"""

@@ -1,0 +1,11 @@
+from repro.kernels.flash_attention.bwd_kernel import flash_attention_bwd_pallas
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+__all__ = [
+    "flash_attention",
+    "flash_attention_bwd_pallas",
+    "flash_attention_pallas",
+    "flash_attention_ref",
+]

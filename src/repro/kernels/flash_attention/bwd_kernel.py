@@ -1,0 +1,219 @@
+"""Pallas TPU flash-attention backward kernels.
+
+Two kernels, mirroring the recompute-based backward of the pure-JAX
+custom_vjp (`repro.models.attention._flash_bwd`):
+
+* ``dq`` kernel  — grid (B, H, nQ, nK): the trailing axis iterates KV blocks
+  sequentially, accumulating the query-block gradient in VMEM scratch;
+* ``dkdv`` kernel — grid (B, H, nK, nQ): the trailing axis iterates Q blocks,
+  accumulating the key/value-block gradients.  GQA: gradients are produced
+  per *query* head and group-summed to KV heads outside (a cheap reduce).
+
+Both recompute the probabilities from (q, k, lse) — no O(S^2) residuals, the
+flash property.  ``delta = rowsum(dO * O)`` is precomputed outside
+(elementwise).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_bwd_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _masked_p(q, k, lse, q_start, k_start, bq, bk, seq_q, seq_k, causal, window, scale):
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    pos_q = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    pos_k = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (pos_q < seq_q) & (pos_k < seq_k)
+    if causal:
+        mask &= pos_q >= pos_k
+    if window is not None:
+        mask &= pos_q - pos_k < window
+    s = jnp.where(mask, s, _NEG_INF)
+    return jnp.exp(s - lse)
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, acc_scr,
+    *, scale, block_q, block_k, seq_q, seq_k, causal, window,
+):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = pl.program_id(2) * block_q
+    k_start = ki * block_k
+    live = True
+    if causal:
+        live = q_start + block_q - 1 >= k_start
+    if window is not None:
+        live = jnp.logical_and(live, k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]                                   # (bq, 1)
+        delta = delta_ref[0, 0]                               # (bq, 1)
+        p = _masked_p(q, k, lse, q_start, k_start, block_q, block_k,
+                      seq_q, seq_k, causal, window, scale)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        acc_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkdv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, scale, block_q, block_k, seq_q, seq_k, causal, window,
+):
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_start = qi * block_q
+    k_start = pl.program_id(2) * block_k
+    live = True
+    if causal:
+        live = q_start + block_q - 1 >= k_start
+    if window is not None:
+        live = jnp.logical_and(live, k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        p = _masked_p(q, k, lse, q_start, k_start, block_q, block_k,
+                      seq_q, seq_k, causal, window, scale)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(qi == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    out: jax.Array,
+    lse: jax.Array,
+    g: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Backward pass. Layouts match the forward wrapper:
+    q/out/g (B, Sq, H, D), k/v (B, Sk, KV, D), lse (B, KV, G, Sq).
+
+    Returns (dq, dk, dv) in the same layouts.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    group = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+    scale = D ** -0.5
+
+    def to_bhsd(x, s, blocks, blk):
+        return jnp.pad(x, ((0, 0), (0, blocks * blk - s), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+
+    qp = to_bhsd(q, Sq, nq, bq)
+    op = to_bhsd(out, Sq, nq, bq)
+    gp = to_bhsd(g, Sq, nq, bq)
+    kp = to_bhsd(k, Sk, nk, bk)
+    vp = to_bhsd(v, Sk, nk, bk)
+    lse_p = jnp.pad(
+        lse.reshape(B, H, Sq), ((0, 0), (0, 0), (0, nq * bq - Sq)),
+        constant_values=0.0,
+    )[..., None]                                              # (B, H, Sqp, 1)
+    delta = jnp.einsum("bhsd,bhsd->bhs", op.astype(jnp.float32), gp.astype(jnp.float32))
+    delta = delta[..., None]                                  # (B, H, Sqp, 1)
+
+    common = dict(scale=scale, block_q=bq, block_k=bk, seq_q=Sq, seq_k=Sk,
+                  causal=causal, window=window)
+    q_spec = pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0))
+    k_spec = pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h // group, ki, 0))
+    lse_spec = pl.BlockSpec((1, 1, bq, 1), lambda b, h, qi, ki: (b, h, qi, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **common),
+        grid=(B, H, nq, nk),
+        in_specs=[q_spec, k_spec, k_spec, q_spec, lse_spec, lse_spec],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, gp, lse_p, delta)
+
+    # dk/dv per query head, then group-summed to KV heads
+    q_spec2 = pl.BlockSpec((1, 1, bq, D), lambda b, h, ki, qi: (b, h, qi, 0))
+    k_spec2 = pl.BlockSpec((1, 1, bk, D), lambda b, h, ki, qi: (b, h // group, ki, 0))
+    lse_spec2 = pl.BlockSpec((1, 1, bq, 1), lambda b, h, ki, qi: (b, h, qi, 0))
+    out_spec2 = pl.BlockSpec((1, 1, bk, D), lambda b, h, ki, qi: (b, h, ki, 0))
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkdv_kernel, **common),
+        grid=(B, H, nk, nq),
+        in_specs=[q_spec2, k_spec2, k_spec2, q_spec2, lse_spec2, lse_spec2],
+        out_specs=[out_spec2, out_spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nk * bk, D), k.dtype),
+            jax.ShapeDtypeStruct((B, H, nk * bk, D), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, D), jnp.float32),
+            pltpu.VMEM((bk, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, gp, lse_p, delta)
+
+    dq = dq.transpose(0, 2, 1, 3)[:, :Sq]
+    dk = dk_h.reshape(B, KV, group, nk * bk, D).sum(axis=2).transpose(0, 2, 1, 3)[:, :Sk]
+    dv = dv_h.reshape(B, KV, group, nk * bk, D).sum(axis=2).transpose(0, 2, 1, 3)[:, :Sk]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)

@@ -1,0 +1,29 @@
+"""Backend-dispatching wrapper: Pallas kernel on TPU, pure-JAX custom_vjp
+flash (repro.models.attention.attend_blockwise) elsewhere.
+
+Training on TPU pairs the forward kernel with
+``bwd_kernel.flash_attention_bwd_pallas`` (recompute-based, no O(S^2)
+residuals) via custom_vjp; on CPU both fall back to the pure-JAX custom_vjp
+flash path, which is also their oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.models.attention import attend_blockwise
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int | None = None,
+    block_q: int = 512, block_k: int = 512, force_pallas: bool = False,
+):
+    if force_pallas or jax.default_backend() == "tpu":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k,
+        )
+    return attend_blockwise(q, k, v, causal=causal, window=window, block_k=block_k)

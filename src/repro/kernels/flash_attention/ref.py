@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the flash_attention kernel: plain masked softmax
+attention (independently tested in tests/test_arch_smoke via the models)."""
+
+from repro.models.attention import attend_full as flash_attention_ref
+
+__all__ = ["flash_attention_ref"]

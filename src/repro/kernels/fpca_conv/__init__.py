@@ -1,0 +1,13 @@
+from repro.kernels.fpca_conv.kernel import fpca_conv_pallas, precompute_weight_planes
+from repro.kernels.fpca_conv.ops import fpca_conv, freeze_model, pad_to_lanes, thaw_model
+from repro.kernels.fpca_conv.ref import fpca_conv_ref
+
+__all__ = [
+    "fpca_conv",
+    "fpca_conv_pallas",
+    "fpca_conv_ref",
+    "freeze_model",
+    "pad_to_lanes",
+    "precompute_weight_planes",
+    "thaw_model",
+]

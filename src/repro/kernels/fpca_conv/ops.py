@@ -1,0 +1,246 @@
+"""Jitted public wrapper for the fpca_conv kernel: batched images in,
+SS-ADC activation maps out.
+
+Backend dispatch: Pallas-compiled on TPU, ``interpret=True`` elsewhere (the
+kernel body runs in Python on CPU for validation).  The pure-jnp oracle lives
+in :mod:`repro.kernels.fpca_conv.ref`.
+
+The fitted :class:`BucketCurvefitModel` enters the jitted function as a
+*static* argument (hashable tuple encoding): its coefficient tables are baked
+into the kernel as compile-time constants — exactly how a deployment would
+ship a calibrated sensor model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adc import ADCConfig
+from repro.core.curvefit import BucketCurvefitModel
+from repro.core.fpca_sim import WeightEncoding, encode_weights, extract_windows
+from repro.core.mapping import FPCASpec
+from repro.kernels.fpca_conv.kernel import fpca_conv_pallas
+
+__all__ = ["fpca_conv", "fpca_conv_basis_jnp", "pad_to_lanes", "freeze_model", "thaw_model"]
+
+_LANES = 128
+
+
+def _tup(x) -> tuple:
+    return tuple(map(tuple, np.asarray(x).tolist())) if np.asarray(x).ndim > 1 else tuple(
+        np.asarray(x).tolist()
+    )
+
+
+def freeze_model(model: BucketCurvefitModel) -> tuple:
+    """Hashable encoding of a fitted model (for use as a jit static arg)."""
+    d = model.to_dict()
+    return (
+        _tup(d["f_avg_coeffs"]), _tup(d["f_avg_exps"]),
+        _tup(d["bucket_coeffs"]), _tup(d["bucket_exps"]),
+        _tup(d["centers"]), _tup(d["v_centers"]),
+        d["n_pixels"], d["n_sweep"], d["v_range"], d["sharpness"],
+    )
+
+
+def thaw_model(frozen: tuple) -> BucketCurvefitModel:
+    """Inverse of :func:`freeze_model`.
+
+    Keeps every table as *numpy* (not jnp): under jit tracing, jnp constants
+    become tracers immediately (jax >= 0.8), which would break the host-side
+    table construction in the kernel builder.  Numpy arrays stay concrete and
+    are lifted to device constants only where they enter jnp ops.
+    """
+    from repro.core.curvefit import PolySurface
+
+    (fa_c, fa_e, b_c, b_e, cen, v_c, n_px, n_sw, v_r, sharp) = frozen
+    return BucketCurvefitModel(
+        f_avg=PolySurface(
+            coeffs=np.asarray(fa_c, np.float32), exps=np.asarray(fa_e, np.int32)
+        ),
+        bucket_coeffs=np.asarray(b_c, np.float32),
+        bucket_exps=np.asarray(b_e, np.int32),
+        centers=np.asarray(cen, np.float32),
+        v_centers=np.asarray(v_c, np.float32),
+        n_pixels=int(n_px),
+        n_sweep=int(n_sw),
+        v_range=float(v_r),
+        sharpness=float(sharp),
+    )
+
+
+def pad_to_lanes(x: jax.Array, axis: int, lanes: int = _LANES) -> tuple[jax.Array, jax.Array]:
+    """Zero-pad ``axis`` to a lane multiple; returns (padded, mask)."""
+    n = x.shape[axis]
+    target = -(-n // lanes) * lanes
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    mask = jnp.concatenate([jnp.ones((n,), jnp.float32), jnp.zeros((target - n,), jnp.float32)])
+    return jnp.pad(x, pad), mask
+
+
+def fpca_conv_basis_jnp(
+    patches: jax.Array,
+    w_pos: jax.Array,
+    w_neg: jax.Array,
+    model: BucketCurvefitModel,
+    adc: ADCConfig,
+    bn_offset: jax.Array,
+    mask: jax.Array | None = None,
+    n_real: int | None = None,
+    *,
+    fuse_phases: bool = False,
+    compute_dtype=None,
+) -> jax.Array:
+    """The Pallas kernel's exact math as a flat jnp program (no tiling).
+
+    This is the TPU-native basis-expanded matmul-bank formulation
+    (DESIGN.md §2) — used as the dry-run lowering path for the FPCA
+    production cell (Pallas does not lower on the CPU backend) and by the
+    kernel CPU benchmark.  The model must be *concrete* (numpy tables).
+    """
+    from repro.kernels.fpca_conv.kernel import _bucket_tables, precompute_weight_planes
+
+    M, N = patches.shape
+    if mask is None:
+        mask = jnp.ones((N,), jnp.float32)
+        n_real = n_real or N
+    cdt = compute_dtype or jnp.float32
+    tables = _bucket_tables(model)
+    x = patches.astype(cdt)
+    x2, x3 = x * x, x * x * x
+    xp = {1: x, 2: x2, 3: x3}
+    maskv = mask[:, None].astype(cdt)
+
+    def _dot(a, b):
+        return jax.lax.dot(a, b.astype(a.dtype), preferred_element_type=jnp.float32)
+
+    rv = {a: _dot(xp[a], maskv) for a in (1, 2, 3)}
+    mean_i = rv[1] / n_real
+    a_i = jnp.concatenate([mean_i ** int(a) for a, _ in model.f_avg.exps], axis=1)
+    edges = np.arange(model.n_buckets, dtype=np.float32) / model.n_buckets
+
+    def one_phase(w):
+        planes = precompute_weight_planes(w, mask, model)
+        mm = {(a, b): _dot(xp[a], planes["w_pows"][b - 1]) for (a, b) in ((1, 1), (1, 2), (2, 1))}
+        v_est = _dot(a_i, planes["aw"])
+        xg = v_est / model.v_range
+        v_pred = jnp.zeros_like(xg)
+        for i in range(model.n_buckets):
+            gate = (
+                jax.nn.sigmoid(model.sharpness * (xg - edges[i]))
+                + jax.nn.sigmoid(model.sharpness * (edges[i] + 1.0 / model.n_buckets - xg))
+                - 1.0
+            )
+            acc = jnp.full_like(xg, tables["const"][i])
+            for (a, b), c in tables["by_pair"].items():
+                ci = float(c[i])
+                if a == 0:
+                    acc += ci * planes["cs"][b][None, :]
+                elif b == 0:
+                    acc += ci * rv[a]
+                else:
+                    acc += ci * mm[(a, b)]
+            v_pred += gate * acc
+        return v_pred
+
+    if fuse_phases:
+        # both weight phases in one matmul bank: halves patch-operand reads
+        # (the Pallas kernel gets this for free from VMEM tiling; this is the
+        # XLA-lowering equivalent — §Perf target 3)
+        C = w_pos.shape[1]
+        v_both = one_phase(jnp.concatenate([w_pos, w_neg], axis=1))
+        v_pos, v_neg = v_both[:, :C], v_both[:, C:]
+    else:
+        v_pos = one_phase(w_pos)
+        v_neg = one_phase(w_neg)
+    up = jnp.clip(jnp.round(v_pos / adc.lsb), 0, adc.levels - 1)
+    down = jnp.clip(jnp.round(v_neg / adc.lsb), 0, adc.levels - 1)
+    return jnp.clip(bn_offset[None, :] + up - down, 0, adc.levels - 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("frozen", "spec", "adc", "enc", "block_m", "block_c", "interpret"),
+)
+def _fpca_conv_jit(
+    images: jax.Array,
+    kernel: jax.Array,
+    bn_offset: jax.Array,
+    *,
+    frozen: tuple,
+    spec: FPCASpec,
+    adc: ADCConfig,
+    enc: WeightEncoding,
+    block_m: int,
+    block_c: int,
+    interpret: bool | None,
+) -> jax.Array:
+    model = thaw_model(frozen)
+    w_pos, w_neg = encode_weights(kernel, spec, enc)            # (c_o, N)
+    patches = jax.vmap(lambda im: extract_windows(im, spec))(images)
+    B, h_o, w_o, N = patches.shape
+    flat = patches.reshape(B * h_o * w_o, N)
+    flat, mask = pad_to_lanes(flat, axis=1)
+    w_pos_p, _ = pad_to_lanes(w_pos.T, axis=0)                  # (Np, c_o)
+    w_neg_p, _ = pad_to_lanes(w_neg.T, axis=0)
+    counts = fpca_conv_pallas(
+        flat,
+        w_pos_p,
+        w_neg_p,
+        model,
+        adc,
+        bn_offset,
+        mask=mask,
+        n_real=spec.n_active_pixels,
+        block_m=block_m,
+        block_c=block_c,
+        interpret=interpret,
+    )
+    return counts.reshape(B, h_o, w_o, -1)
+
+
+def fpca_conv(
+    images: jax.Array,
+    kernel: jax.Array,
+    model: BucketCurvefitModel,
+    *,
+    spec: FPCASpec,
+    adc: ADCConfig | None = None,
+    enc: WeightEncoding | None = None,
+    bn_offset: jax.Array | None = None,
+    block_m: int = 256,
+    block_c: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """FPCA frontend activations for a batch of images.
+
+    Args:
+      images: ``(B, H, W, c_i)`` float in [0, 1].
+      kernel: ``(c_o, k, k, c_i)`` float weights.
+      model:  fitted :class:`BucketCurvefitModel` for ``spec.n_active_pixels``.
+
+    Returns:
+      SS-ADC counts, ``(B, h_o, w_o, c_o)`` float32 (integer-valued).
+    """
+    adc = adc or ADCConfig()
+    enc = enc or WeightEncoding()
+    c_o = kernel.shape[0]
+    if bn_offset is None:
+        bn_offset = jnp.zeros((c_o,), jnp.float32)
+    return _fpca_conv_jit(
+        images,
+        kernel,
+        bn_offset,
+        frozen=freeze_model(model),
+        spec=spec,
+        adc=adc,
+        enc=enc,
+        block_m=block_m,
+        block_c=block_c,
+        interpret=interpret,
+    )

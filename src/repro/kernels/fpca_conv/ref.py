@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the fpca_conv kernel.
+
+Deliberately built on the *independently tested* core modules
+(:func:`repro.core.curvefit.predict_sigmoid`, :func:`repro.core.adc.updown_readout`)
+rather than re-deriving the basis-expanded matmul form — so a bug in the
+kernel's algebra cannot hide in its own oracle.
+
+Layout contract (shared with the kernel):
+  patches  (M, N)  — im2col windows (photocurrents), N = c_i * n * n real
+                     pixels, optionally zero-padded to a lane multiple;
+  w_pos/w_neg (N, C) — per-output-channel NVM conductance planes;
+  mask     (N,)    — 1.0 for real pixel slots, 0.0 for padding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig, updown_readout
+from repro.core.curvefit import BucketCurvefitModel, predict_sigmoid
+
+__all__ = ["fpca_conv_ref"]
+
+
+def _read(model: BucketCurvefitModel, patches: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """Bitline voltages, shape (M, C)."""
+    # (M, 1, N) x (C, N) -> (M, C, N); padded slots forced to (I=0, W=0) so the
+    # polynomial basis sees exactly the real-pixel statistics.
+    I = patches[:, None, :] * mask
+    W = (w.T * mask)[None, :, :]
+    M, C, N = I.shape[0], W.shape[1], I.shape[-1]
+    Ib = jnp.broadcast_to(I, (M, C, N))
+    Wb = jnp.broadcast_to(W, (M, C, N))
+    # predict_sigmoid averages I over the last axis for the step-1 estimate;
+    # padding would bias the mean, so evaluate on the un-padded slice instead.
+    n_real = int(mask.sum())
+    return predict_sigmoid(model, Ib[..., :n_real], Wb[..., :n_real])
+
+
+def fpca_conv_ref(
+    patches: jax.Array,
+    w_pos: jax.Array,
+    w_neg: jax.Array,
+    model: BucketCurvefitModel,
+    adc: ADCConfig,
+    bn_offset: jax.Array,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Reference FPCA analog convolution: counts, shape (M, C)."""
+    if mask is None:
+        mask = jnp.ones((patches.shape[1],), jnp.float32)
+    v_pos = _read(model, patches, w_pos, mask)
+    v_neg = _read(model, patches, w_neg, mask)
+    return updown_readout(v_pos, v_neg, adc, bn_offset, hard=True)

@@ -1,0 +1,5 @@
+from repro.kernels.ssd.kernel import ssd_intra_chunk_pallas
+from repro.kernels.ssd.ops import ssd_chunked_pallas
+from repro.kernels.ssd.ref import ssd_intra_chunk_ref
+
+__all__ = ["ssd_chunked_pallas", "ssd_intra_chunk_pallas", "ssd_intra_chunk_ref"]

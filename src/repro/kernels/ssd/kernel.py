@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+The SSD algorithm's compute hot-spot is the quadratic-within-chunk piece:
+per (batch, chunk, head) it is three dense contractions —
+
+    cb    = C  @ B^T                (Q x Q   via MXU)
+    y     = (cb * L) @ xbar         (Q x P   via MXU)
+    state = (B * decay)^T @ xbar    (N x P   via MXU)
+
+with L the segment-sum decay mask.  The inter-chunk state recurrence is a
+tiny sequential scan and stays in JAX (ops.py).
+
+Grid ``(B * nc, H)``: one program owns one (chunk, head) tile; all operands
+fit VMEM comfortably (Q=128, N<=128, P<=64: < 200 KiB/program).  Head-dim
+tiles are MXU-aligned by zero-padding P and N to 128 on the host.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_intra_chunk_pallas"]
+
+
+def _ssd_kernel(xbar_ref, b_ref, c_ref, cum_ref, y_ref, state_ref, *, q: int):
+    xbar = xbar_ref[0, 0].astype(jnp.float32)     # (Q, P)
+    B = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    cum = cum_ref[0, 0].astype(jnp.float32)       # (Q, 1)
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)      # (Q, Q)
+    seg = cum - cum.T                                                  # (Q, Q) cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.exp(jnp.where(ii >= jj, seg, -1e30))
+    y_ref[0, 0] = jax.lax.dot_general(
+        cb * L, xbar, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1:] - cum)                             # (Q, 1)
+    state = jax.lax.dot_general(
+        B * decay_to_end, xbar, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                                  # (N, P)
+    state_ref[0, 0] = state.astype(state_ref.dtype)
+
+
+def ssd_intra_chunk_pallas(
+    xbar: jax.Array,
+    Bh: jax.Array,
+    Ch: jax.Array,
+    cum: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD. xbar (b,nc,Q,H,P), Bh/Ch (b,nc,Q,H,N), cum (b,nc,Q,H).
+
+    Returns (y_intra (b,nc,Q,H,P), states (b,nc,H,N,P)) — note states come
+    back (N, P)-major; ops.py transposes to the model's (P, N) convention.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, nc, q, h, p = xbar.shape
+    n = Bh.shape[-1]
+    # layout: fold (b, nc) and move H before chunk dims for clean tiling
+    xb = xbar.reshape(b * nc, q, h, p).transpose(0, 2, 1, 3)    # (bc, H, Q, P)
+    Bb = Bh.reshape(b * nc, q, h, n).transpose(0, 2, 1, 3)
+    Cb = Ch.reshape(b * nc, q, h, n).transpose(0, 2, 1, 3)
+    cumb = cum.reshape(b * nc, q, h).transpose(0, 2, 1)[..., None]  # (bc, H, Q, 1)
+
+    kernel = functools.partial(_ssd_kernel, q=q)
+    y, states = pl.pallas_call(
+        kernel,
+        grid=(b * nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * nc, h, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((b * nc, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, Bb, Cb, cumb)
+    y_out = y.transpose(0, 2, 1, 3).reshape(b, nc, q, h, p)
+    states_out = states.reshape(b, nc, h, n, p)
+    return y_out, states_out

@@ -1,0 +1,67 @@
+"""Full chunked SSD with the Pallas intra-chunk kernel + JAX inter-chunk
+scan; drop-in equivalent of repro.models.ssm.ssd_chunked."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_intra_chunk_pallas
+
+__all__ = ["ssd_chunked_pallas"]
+
+
+def ssd_chunked_pallas(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 128,
+    initial_state: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Same contract as repro.models.ssm.ssd_chunked (see its docstring)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, g, n).astype(jnp.float32)
+    rep = h // g
+    Bh = jnp.repeat(Bc, rep, axis=3) if g > 1 else jnp.broadcast_to(Bc, (b, nc, q, h, n))
+    Ch = jnp.repeat(Cc, rep, axis=3) if g > 1 else jnp.broadcast_to(Cc, (b, nc, q, h, n))
+    logd = dtc * A.astype(jnp.float32)
+    cum = jnp.cumsum(logd, axis=2)
+    xbar = xc * dtc[..., None]
+
+    y_intra, states_np = ssd_intra_chunk_pallas(xbar, Bh, Ch, cum, interpret=interpret)
+    states = states_np.transpose(0, 1, 2, 4, 3)                 # -> (b,nc,h,p,n)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def body(s, inp):
+        st, dec = inp
+        return dec[:, :, None, None] * s + st, s
+
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", Ch, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), final_state

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the ssd kernel: the independently-tested intra-chunk
+math from the model code."""
+
+from repro.models.ssm import ssd_intra_chunk as ssd_intra_chunk_ref
+
+__all__ = ["ssd_intra_chunk_ref"]

@@ -1,0 +1,155 @@
+"""Cell machinery: (architecture x input-shape x mesh) -> lowered step.
+
+A *cell* is one entry of the dry-run matrix.  This module builds the step
+function, the ShapeDtypeStruct inputs (with shardings attached — no device
+allocation ever happens), lowers and compiles it, and extracts the roofline
+raw material (cost analysis, memory analysis, collective bytes from the
+optimized HLO).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import data_axes
+from repro.launch.sharding import (
+    ShardingPolicy,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)
+from repro.models.transformer import init_cache, init_model
+from repro.serving.serve_step import make_decode_step, make_prefill_step
+from repro.training.optimizer import AdamWConfig, init_adamw
+from repro.training.train_step import make_train_step, pick_microbatches
+
+__all__ = ["CellPlan", "build_cell", "lower_cell"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    """Tunable levers of one cell (the hillclimb knobs)."""
+
+    policy: ShardingPolicy = ShardingPolicy()
+    remat: str = "full"
+    n_micro: int = 0            # 0 -> auto via pick_microbatches
+    donate: bool = True
+    act_budget_bytes: float = 4e9
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(shapes: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), shapes, shardings
+    )
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _batch_geometry(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Token/frontend layout for one shape; vlm reserves patch positions."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        s_text = S - cfg.frontend_tokens
+        return {
+            "tokens": (B, s_text),
+            "labels": (B, s_text),
+            "frontend": (B, cfg.frontend_tokens, cfg.frontend_dim),
+        }
+    if cfg.family == "encdec":
+        return {"tokens": (B, S), "labels": (B, S), "frontend": (B, S, cfg.frontend_dim)}
+    return {"tokens": (B, S), "labels": (B, S)}
+
+
+def build_cell(
+    cfg: ModelConfig, shape: ShapeSpec, mesh, plan: CellPlan = CellPlan()
+) -> tuple[Any, tuple]:
+    """Returns (jitted step fn, SDS args) for one cell; nothing is allocated."""
+    params_shape = jax.eval_shape(
+        lambda k: init_model(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    p_shard = param_shardings(params_shape, mesh, plan.policy)
+    params_sds = _with_shardings(params_shape, p_shard)
+    dp = _dp_size(mesh)
+    B = shape.global_batch
+
+    if shape.kind == "train":
+        geo = _batch_geometry(cfg, shape)
+        batch_shape = {
+            k: _sds(v, jnp.int32 if k in ("tokens", "labels") else jnp.bfloat16)
+            for k, v in geo.items()
+        }
+        b_shard = batch_shardings(mesh, batch_shape)
+        batch_sds = _with_shardings(batch_shape, b_shard)
+        per_dev = max(1, B // dp)
+        n_micro = plan.n_micro or pick_microbatches(
+            cfg, per_dev, shape.seq_len, plan.act_budget_bytes
+        )
+        opt_shape = jax.eval_shape(init_adamw, params_shape)
+        o_shard = type(opt_shape)(
+            step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            mu=p_shard,
+            nu=p_shard,
+        )
+        opt_sds = _with_shardings(opt_shape, o_shard)
+        step = make_train_step(cfg, AdamWConfig(), n_micro=n_micro, remat=plan.remat)
+        jitted = jax.jit(step, donate_argnums=(0, 1) if plan.donate else ())
+        return jitted, (params_sds, opt_sds, batch_sds)
+
+    if shape.kind == "prefill":
+        geo = _batch_geometry(cfg, shape)
+        tokens_sds = _sds(
+            geo["tokens"], jnp.int32,
+            jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(data_axes(mesh), None)
+            ),
+        )
+        args = [tokens_sds]
+        if "frontend" in geo:
+            fe_sds = _sds(
+                geo["frontend"], jnp.bfloat16,
+                jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec(data_axes(mesh), None, None)
+                ),
+            )
+            args.append(fe_sds)
+        step = make_prefill_step(cfg, max_len=shape.seq_len, remat=plan.remat)
+        jitted = jax.jit(step)
+        return jitted, (params_sds, *args)
+
+    if shape.kind == "decode":
+        cache_shape = jax.eval_shape(lambda: init_cache(cfg, B, shape.seq_len))
+        c_shard = cache_shardings(cache_shape, mesh, B, plan.policy)
+        # enc-dec: cross K/V filled at prefill; give it the same layout as self
+        cache_sds = _with_shardings(cache_shape, c_shard)
+        tok_spec = (
+            jax.sharding.PartitionSpec(data_axes(mesh), None)
+            if B % dp == 0 and B >= dp
+            else jax.sharding.PartitionSpec()
+        )
+        token_sds = _sds((B, 1), jnp.int32, jax.sharding.NamedSharding(mesh, tok_spec))
+        pos_sds = _sds((), jnp.int32, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step, donate_argnums=(2,) if plan.donate else ())
+        return jitted, (params_sds, token_sds, cache_sds, pos_sds)
+
+    raise ValueError(shape.kind)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, plan: CellPlan = CellPlan()):
+    jitted, args = build_cell(cfg, shape, mesh, plan)
+    return jitted.lower(*args)

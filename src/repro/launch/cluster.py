@@ -1,0 +1,84 @@
+"""Multi-host cluster launch helper.
+
+This container has one host; on a real v5e deployment each host runs the
+same training entrypoint under ``jax.distributed.initialize``.  This module
+(1) performs the per-host initialisation when env vars are present, and
+(2) generates the per-host launch commands for a pod-slice — the piece of
+glue a scheduler (GKE/XPK/Ray) consumes.
+
+Fault tolerance at cluster level (DESIGN.md §5):
+* every host runs the same resumable loop (launch/train.py): on preemption
+  the job restarts from the latest checkpoint with a possibly *different*
+  host/device count — elastic resharding in training/checkpoint.py handles
+  the re-layout;
+* stragglers: the data pipeline's stall deadline surfaces slow hosts; the
+  runbook action is to restart without that host (elastic), not to block;
+* cross-pod traffic is only the gradient all-reduce over the ``pod`` axis
+  (optionally int8-compressed, training/compression.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+__all__ = ["maybe_init_distributed", "launch_commands"]
+
+
+def maybe_init_distributed() -> bool:
+    """Initialise jax.distributed from standard env vars if present."""
+    coord = os.environ.get("COORDINATOR_ADDRESS")
+    if not coord:
+        return False
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=coord,
+        num_processes=int(os.environ["NUM_PROCESSES"]),
+        process_id=int(os.environ["PROCESS_ID"]),
+    )
+    return True
+
+
+def launch_commands(
+    *,
+    hosts: int,
+    coordinator: str,
+    arch: str,
+    pods: int = 1,
+    extra: str = "",
+) -> list[str]:
+    """Per-host command lines for a (pods x 16 x 16)-chip job."""
+    cmds = []
+    for pid in range(hosts):
+        env = (
+            f"COORDINATOR_ADDRESS={coordinator} NUM_PROCESSES={hosts} PROCESS_ID={pid} "
+            f"LIBTPU_INIT_ARGS='--xla_tpu_enable_async_collective_fusion=true "
+            f"--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true'"
+        )
+        cmds.append(
+            f"{env} python -m repro.launch.train --arch {arch} {extra}".strip()
+        )
+    return cmds
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hosts", type=int, default=64, help="v5e-256: 64 hosts/pod")
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--coordinator", default="10.0.0.2:8476")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--extra", default="--steps 10000 --ckpt-dir gs://bucket/ckpt")
+    args = ap.parse_args()
+    for cmd in launch_commands(
+        hosts=args.hosts * args.pods,
+        coordinator=args.coordinator,
+        arch=args.arch,
+        pods=args.pods,
+        extra=args.extra,
+    ):
+        print(cmd)
+
+
+if __name__ == "__main__":
+    main()

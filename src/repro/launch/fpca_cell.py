@@ -1,0 +1,131 @@
+"""The paper-representative dry-run cell: the FPCA frontend at production
+scale, on the production mesh.
+
+Workload: a video/sensor-fleet frontend — ``batch`` frames of
+``sensor x sensor`` RGB through the 5x5x3, 8-channel, stride-5 FPCA
+convolution in its TPU-native basis-expanded form (exactly the Pallas
+kernel's math; Pallas itself does not lower on the CPU backend).  Frames
+shard over the data axes; the window axis shards over ``model`` (the conv is
+embarrassingly parallel over windows, so TP costs nothing — the interesting
+roofline question is arithmetic intensity, not communication).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig
+from repro.core.fpca_sim import WeightEncoding, encode_weights, extract_windows
+from repro.core.mapping import FPCASpec, output_dims
+from repro.kernels.fpca_conv.ops import fpca_conv_basis_jnp, freeze_model, pad_to_lanes, thaw_model
+from repro.launch.mesh import data_axes
+
+__all__ = ["FPCA_SHAPES", "build_fpca_cell", "FpcaCellInfo"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FpcaShape:
+    name: str
+    sensor: int
+    global_batch: int
+    kind: str = "frontend"
+
+
+# sensor sizes are multiples of stride x |model axis| (5 x 16 = 80) so the
+# image height shards over 'model' with window extraction fully local
+FPCA_SHAPES = {
+    "video_1080": FpcaShape("video_1080", 1120, 256),   # HD-class
+    "sensor_4k": FpcaShape("sensor_4k", 2240, 32),      # 4K-class
+}
+
+SPEC_TEMPLATE = dict(out_channels=8, kernel=5, stride=5, max_kernel=5)
+
+
+@dataclasses.dataclass(frozen=True)
+class FpcaCellInfo:
+    """Just enough of the ModelConfig protocol for roofline accounting."""
+
+    name: str
+    spec: FPCASpec
+    batch: int
+
+    def active_param_count(self) -> int:
+        s = self.spec
+        return s.out_channels * s.kernel * s.kernel * s.in_channels
+
+    @property
+    def windows(self) -> int:
+        h_o, w_o = output_dims(self.spec)
+        return h_o * w_o
+
+    def model_flops(self) -> float:
+        """Useful work: the ideal convolution, both weight phases."""
+        n = self.spec.n_active_pixels
+        return 2.0 * self.batch * self.windows * n * self.spec.out_channels * 2
+
+
+def build_fpca_cell(
+    shape: FpcaShape, mesh, model, *,
+    fuse_phases: bool = False, compute_dtype=None, row_shard: bool = False,
+) -> tuple[Any, tuple, FpcaCellInfo]:
+    """Returns (jitted step, SDS args, info). ``model`` is a fitted
+    BucketCurvefitModel (concrete numpy tables).
+
+    ``fuse_phases`` / ``compute_dtype`` are the §Perf levers for this cell."""
+    spec = FPCASpec(image_h=shape.sensor, image_w=shape.sensor, **SPEC_TEMPLATE)
+    info = FpcaCellInfo(name="fpca-frontend", spec=spec, batch=shape.global_batch)
+    adc = ADCConfig()
+    enc = WeightEncoding()
+    frozen = freeze_model(model)
+    dp = data_axes(mesh)
+
+    # row_shard: fold row-groups into the batch dim at the INPUT layout —
+    # (B, H, W, C) -> (B * m, H/m, W, C) with the leading dim sharded over
+    # (data axes + 'model').  Window extraction is local (s == n: no halo),
+    # so every chip owns 1/256th of the windows with zero in-graph
+    # resharding.  (The with_sharding_constraint version of this idea was
+    # refuted: the vmap'd extraction reshapes broke the constraint and the
+    # forced reshard cost more than it saved — EXPERIMENTS.md §Perf.)
+    m_size = dict(mesh.shape).get("model", 1) if row_shard else 1
+    if (shape.sensor // SPEC_TEMPLATE["stride"]) % m_size:
+        raise ValueError("sensor rows must divide the model axis for row_shard")
+    group_h = shape.sensor // m_size
+    group_spec = FPCASpec(image_h=group_h, image_w=shape.sensor, **SPEC_TEMPLATE)
+
+    def step(images, kernel, bn_offset):
+        m = thaw_model(frozen)
+        w_pos, w_neg = encode_weights(kernel, group_spec, enc)
+        patches = jax.vmap(lambda im: extract_windows(im, group_spec))(images)
+        Bg, h_o, w_o, N = patches.shape
+        flat = patches.reshape(Bg * h_o * w_o, N)
+        flat, mask = pad_to_lanes(flat, axis=1)
+        w_pos_p, _ = pad_to_lanes(w_pos.T, axis=0)
+        w_neg_p, _ = pad_to_lanes(w_neg.T, axis=0)
+        counts = fpca_conv_basis_jnp(
+            flat, w_pos_p, w_neg_p, m, adc, bn_offset, mask=mask,
+            n_real=spec.n_active_pixels,
+            fuse_phases=fuse_phases, compute_dtype=compute_dtype,
+        )
+        return counts.reshape(Bg, h_o, w_o, -1)[..., : spec.out_channels]
+
+    P = jax.sharding.PartitionSpec
+    lead_axes = dp + ("model",) if row_shard else dp
+    img_sds = jax.ShapeDtypeStruct(
+        (shape.global_batch * m_size, group_h, shape.sensor, 3),
+        jnp.bfloat16,
+        sharding=jax.sharding.NamedSharding(mesh, P(lead_axes, None, None, None)),
+    )
+    k = spec.kernel
+    kern_sds = jax.ShapeDtypeStruct(
+        (spec.out_channels, k, k, spec.in_channels), jnp.float32,
+        sharding=jax.sharding.NamedSharding(mesh, P()),
+    )
+    bn_sds = jax.ShapeDtypeStruct(
+        (spec.out_channels,), jnp.float32,
+        sharding=jax.sharding.NamedSharding(mesh, P()),
+    )
+    return jax.jit(step), (img_sds, kern_sds, bn_sds), info

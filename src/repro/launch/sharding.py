@@ -1,0 +1,191 @@
+"""Per-architecture sharding rules: DP / FSDP / TP / SP as PartitionSpecs.
+
+Strategy (DESIGN.md §5):
+
+* **FSDP** over the ``data`` axis: every matmul weight shards its *input*
+  (reduction) dimension over ``data``; GSPMD all-gathers on use and
+  reduce-scatters the gradients — ZeRO-3 semantics with no hand-written
+  collectives.
+* **TP** over the ``model`` axis: attention heads / FFN hidden / expert FFN
+  hidden / Mamba inner channels.  GSPMD pads non-divisible head counts; the
+  roofline report quantifies that waste per arch (hillclimb lever).
+* **DP** additionally over ``pod`` (multi-pod): the batch is sharded over
+  ``(pod, data)``; the only cross-pod collective is the gradient all-reduce.
+* **SP** (sequence sharding) for the batch=1 ``long_500k`` decode cells: the
+  KV-cache/sequence axis shards over ``data``, and attention reductions over
+  the sharded axis become GSPMD-inserted collectives.
+
+``ShardingPolicy`` lets hillclimb iterations flip individual levers
+(fsdp on/off, tp on/off, expert-parallel opt-in) without touching model code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+__all__ = ["ShardingPolicy", "param_shardings", "batch_shardings", "cache_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True           # shard weight reduction dims over 'data'
+    tp: bool = True             # shard heads/hidden over 'model'
+    expert_parallel: bool = False  # shard the expert axis over 'model' (needs E % axis == 0)
+    expert_tp: bool = True      # TP the expert ff dim (off: replicate-at-use,
+    #                             trades small weight gathers for no act psums)
+    seq_shard_batch1: bool = True  # SP for batch-1 decode caches
+
+    def d(self) -> str | None:  # FSDP axis
+        return "data" if self.fsdp else None
+
+    def m(self) -> str | None:  # TP axis
+        return "model" if self.tp else None
+
+
+# Trailing-dims rules: suffix regex -> spec builder(policy) over trailing dims.
+# Leading stacked-layer/group dims are padded with None automatically.
+def _rules(p: ShardingPolicy) -> list[tuple[str, tuple]]:
+    d, m = p.d(), p.m()
+    ep = m if p.expert_parallel else None
+    # expert ff dim: TP unless EP owns the model axis or expert_tp disabled
+    ef = None if (p.expert_parallel or not p.expert_tp) else m
+    return [
+        # tables: vocab replicated (clean gathers), d FSDP'd; the logits
+        # matmul re-shards vocab-over-model in-graph (see layers.unembed)
+        (r"embed/table$", (None, d)),
+        (r"unembed/table$", (None, d)),
+        (r"shared_gate/w$", (d, None)),        # before the generic gate rule
+        (r"(?:^|/)(wq|wk|wv)/w$", (d, m)),
+        (r"(?:^|/)wo/w$", (m, d)),
+        (r"(?:^|/)(gate|up|w1)/w$", (d, m)),   # swiglu/mlp/projector up
+        (r"(?:^|/)(down|w2)/w$", (m, d)),
+        # experts: ZeRO-3 storage (FSDP on d) + TP on ff.  Every layout
+        # that replicates expert weights or constrains them at use pays the
+        # f32 weight-cotangent reshard inside scan-bwd and is 3-11x worse —
+        # both alternatives measured and refuted in EXPERIMENTS.md §Perf.
+        (r"experts/(gate|up)$", (ep, d, ef)),
+        (r"experts/down$", (ep, ef, d)),
+        (r"router/w$", (d, None)),
+        (r"in_proj/w$", (d, m)),
+        (r"out_proj/w$", (m, d)),
+        (r"conv_w$", (None, m)),
+        (r"conv_b$", (m,)),
+        (r"(a_log|dt_bias|d_skip|norm_scale)$", ()),
+        (r"src_proj/w$", (d, m)),
+        (r"scale$", ()),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+    return "/".join(parts)
+
+
+def _spec_for(path_str: str, ndim: int, rules) -> P:
+    for pattern, trailing in rules:
+        if re.search(pattern, path_str):
+            if len(trailing) > ndim:
+                trailing = trailing[len(trailing) - ndim :]
+            pad = (None,) * (ndim - len(trailing))
+            return P(*pad, *trailing)
+    return P()  # replicate by default (norm scales etc.)
+
+
+def param_shardings(
+    params_shape: Any, mesh: Mesh, policy: ShardingPolicy = ShardingPolicy()
+) -> Any:
+    """Pytree of NamedShardings matching an eval_shape'd params tree."""
+    rules = _rules(policy)
+
+    def one(path, leaf):
+        spec = _spec_for(_path_str(path), leaf.ndim, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape: Any) -> Any:
+    """Batch dims shard over (pod, data); everything else replicated."""
+    dp = data_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def cache_shardings(
+    cache_shape: Any,
+    mesh: Mesh,
+    batch: int,
+    policy: ShardingPolicy = ShardingPolicy(),
+) -> Any:
+    """Decode-cache shardings.
+
+    KV leaves are (..., B, S, KV, D); SSM states (..., B, H, P, N); conv
+    states (..., B, K, conv).  Batch shards over (pod, data) when divisible;
+    batch=1 long-context cells shard the KV sequence axis instead (SP).
+    """
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_ok = batch % dp_size == 0 and batch >= dp_size
+    m = policy.m()
+    m_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def ax(axis, dim):
+        """Use ``axis`` only if it divides the dimension evenly (explicit
+        input shardings — unlike in-graph GSPMD — reject padding)."""
+        if axis is None:
+            return None
+        size = m_size if axis == "model" else dp_size
+        return axis if dim % size == 0 and dim >= size else None
+
+    def one(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = leaf.ndim
+        shp = leaf.shape
+        if name in ("k", "v"):
+            _, S, KV, D = shp[-4:]
+            # GQA caches: shard heads when they divide the model axis.  When
+            # they don't (kv < 16), shard the cache *sequence* over 'model':
+            # attention over a seq-sharded cache costs only tiny softmax
+            # max/sum + output psums.  (Sharding head_dim instead makes the
+            # partitioner gather the whole cache every step — measured 100 GB
+            # per decoded token on internvl2; EXPERIMENTS.md §Perf.)
+            head_ax = ax(m, KV)
+            seq_ax = ax(m, S) if head_ax is None else None
+            if batch_ok:
+                trailing = (dp, seq_ax, head_ax, None)
+            elif policy.seq_shard_batch1:
+                trailing = (None, ax("data", S), head_ax, None)  # SP cache
+            else:
+                trailing = (None, seq_ax, head_ax, None)
+        elif name == "ssm":
+            _, H, _, _ = shp[-4:]
+            trailing = (dp if batch_ok else None, ax(m, H), None, None)
+        elif name == "conv":
+            _, _, C = shp[-3:]
+            trailing = (dp if batch_ok else None, None, ax(m, C))
+        else:
+            trailing = tuple([None] * nd)
+        pad = (None,) * (nd - len(trailing))
+        return NamedSharding(mesh, P(*pad, *trailing))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,287 @@
+"""Attention: GQA + RoPE + optional qk-norm + optional sliding window.
+
+Three execution paths share one set of projection weights:
+
+* ``attend_full``      — einsum + masked softmax; reference/smoke path, also
+                         the oracle for the flash_attention Pallas kernel;
+* ``attend_blockwise`` — pure-JAX flash-style online-softmax scan over KV
+                         blocks; memory O(S * block) instead of O(S^2) — the
+                         path that keeps 32k-token prefill compilable;
+* ``attend_decode``    — single-query attention against a KV cache (serving).
+
+Layouts: q (B, S, H, D), k/v (B, S, KV, D); GQA groups G = H // KV are an
+explicit axis in the score einsums so the TP sharding of the KV-head axis
+survives the computation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, init_rms_norm, rms_norm, rope
+
+__all__ = [
+    "init_attention",
+    "attention",
+    "attend_full",
+    "attend_blockwise",
+    "attend_decode",
+]
+
+_NEG_INF = -1e30
+
+
+def init_attention(
+    key: jax.Array,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    qk_norm: bool = False,
+    dtype=jnp.bfloat16,
+) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, dtype),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, dtype),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, dtype),
+        "wo": init_dense(ko, n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rms_norm(head_dim)
+        p["k_norm"] = init_rms_norm(head_dim)
+    return p
+
+
+def _project_qkv(
+    params: dict, x: jax.Array, positions: jax.Array, cfg: Any
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]["w"]).reshape(B, S, H, D)
+    k = (x @ params["wk"]["w"]).reshape(B, S, KV, D)
+    v = (x @ params["wv"]["w"]).reshape(B, S, KV, D)
+    if "q_norm" in params:
+        q = rms_norm(params["q_norm"], q)
+        k = rms_norm(params["k_norm"], k)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped(q: jax.Array, kv_heads: int) -> jax.Array:
+    """(B, S, H, D) -> (B, S, KV, G, D)."""
+    B, S, H, D = q.shape
+    return q.reshape(B, S, kv_heads, H // kv_heads, D)
+
+
+def attend_full(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    positions_q: jax.Array | None = None,
+    positions_k: jax.Array | None = None,
+) -> jax.Array:
+    """Masked softmax attention. q (B,Sq,H,D), k/v (B,Sk,KV,D) -> (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    qg = _grouped(q, KV)
+    scale = D ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    pos_q = positions_q if positions_q is not None else jnp.arange(Sq)
+    pos_k = positions_k if positions_k is not None else jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        mask &= pos_q[:, None] - pos_k[None, :] < window
+    scores = jnp.where(mask, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def _kv_blocks(x: jax.Array, block_k: int) -> jax.Array:
+    """(B, S, KV, D) -> (nb, B, block_k, KV, D), zero-padded."""
+    B, S, KV, D = x.shape
+    nb = -(-S // block_k)
+    xp = jnp.pad(x, ((0, 0), (0, nb * block_k - S), (0, 0), (0, 0)))
+    return xp.reshape(B, nb, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+
+
+def _block_mask(pos_q, blk_idx, block_k, S_k, causal, window):
+    pos_k = blk_idx * block_k + jnp.arange(block_k)
+    mask = pos_k[None, :] < S_k
+    if causal:
+        mask = mask & (pos_q[:, None] >= pos_k[None, :])
+    if window is not None:
+        mask = mask & (pos_q[:, None] - pos_k[None, :] < window)
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, window, block_k):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, block_k)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, block_k):
+    """Online-softmax forward; returns (out, lse). Memory O(S * block_k)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    S_k = k.shape[1]
+    scale = D ** -0.5
+    kb = _kv_blocks(k, block_k)
+    vb = _kv_blocks(v, block_k)
+    qg = _grouped(q, KV).astype(jnp.float32)
+    pos_q = jnp.arange(S)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk_idx = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_blk.astype(jnp.float32)) * scale
+        mask = _block_mask(pos_q, blk_idx, block_k, S_k, causal, window)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    nb = kb.shape[0]
+    m0 = jnp.full((B, KV, H // KV, S), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, H // KV, S), jnp.float32)
+    acc0 = jnp.zeros((B, KV, H // KV, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, jnp.arange(nb)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(q.dtype)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, block_k, res, g):
+    """Recompute-based backward (flash style): no O(S^2) residuals."""
+    q, k, v, out, lse = res
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    S_k = k.shape[1]
+    scale = D ** -0.5
+    qg = _grouped(q, KV).astype(jnp.float32)
+    og = _grouped(out, KV).astype(jnp.float32)
+    dg = _grouped(g, KV).astype(jnp.float32)
+    # delta_i = sum_d dO_i O_i  (per query)
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq", dg, og)
+    dg_t = dg.transpose(0, 2, 3, 1, 4)   # (B,KV,G,S,D)
+    kb = _kv_blocks(k, block_k)
+    vb = _kv_blocks(v, block_k)
+    pos_q = jnp.arange(S)
+
+    def body(dq_acc, blk):
+        k_blk, v_blk, blk_idx = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_blk.astype(jnp.float32)) * scale
+        mask = _block_mask(pos_q, blk_idx, block_k, S_k, causal, window)
+        s = jnp.where(mask, s, _NEG_INF)
+        p = jnp.exp(s - lse[..., None])                       # (B,KV,G,S,bk)
+        dv_blk = jnp.einsum("bhgqk,bhgqd->bkhd", p, dg_t)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", dg_t, v_blk.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_blk.astype(jnp.float32))
+        dk_blk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg)
+        return dq_acc, (dk_blk, dv_blk)
+
+    nb = kb.shape[0]
+    dq0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nb)))
+    dq = dq.reshape(B, S, H, D).astype(q.dtype)
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(B, nb * block_k, KV, D)[:, :S_k].astype(k.dtype)
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(B, nb * block_k, KV, D)[:, :S_k].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attend_blockwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_k: int = 512,
+) -> jax.Array:
+    """Flash attention, pure JAX (custom_vjp; O(S * block) live memory both
+    directions).  Exact math of the Pallas flash_attention kernel and its
+    oracle; on CPU/dry-run it is also the execution path."""
+    return _flash(q, k, v, causal, window, block_k)
+
+
+def attend_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-step attention against a cache. q (B,1,H,D), caches (B,Smax,KV,D).
+
+    ``cache_len`` — number of valid cache entries (new token included).
+    Written as plain einsum + masked softmax so GSPMD can shard the cache
+    sequence axis (long-context decode) and insert the reduction collectives.
+    """
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    qg = _grouped(q, KV).astype(jnp.float32)
+    scale = D ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(jnp.float32)) * scale
+    pos_k = jnp.arange(k_cache.shape[1])
+    mask = pos_k[None, :] < cache_len[:, None]                  # (B, Smax)
+    if window is not None:
+        mask = mask & (pos_k[None, :] >= cache_len[:, None] - window)
+    s = jnp.where(mask[:, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: Any,
+    *,
+    causal: bool = True,
+    impl: str = "auto",
+    block_k: int = 512,
+) -> jax.Array:
+    """Full self-attention layer: project -> attend -> output proj."""
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    window = getattr(cfg, "window", None)
+    S = x.shape[1]
+    if impl == "auto":
+        impl = "blockwise" if S > 2048 else "full"
+    if impl == "blockwise":
+        out = attend_blockwise(q, k, v, causal=causal, window=window, block_k=block_k)
+    else:
+        out = attend_full(q, k, v, causal=causal, window=window)
+    B, S, H, D = out.shape
+    return out.reshape(B, S, H * D) @ params["wo"]["w"]

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with static-shape
+capacity dispatch (+ optional shared experts, Qwen-style).
+
+Dispatch strategy (DESIGN.md §5): the (T, E) affinity matrix built from the
+top-k router probabilities is reduced per expert with a top-C selection
+(C = capacity), giving fully static shapes with O(E * C * d) activation
+memory — no (T, E, C) one-hot dispatch tensors.  Tokens beyond an expert's
+capacity are dropped for that expert (standard capacity semantics; the
+load-balance auxiliary keeps drops rare).  Expert weights are (E, d, ff)
+einsum banks so tensor-parallel sharding of the ``ff`` axis works for any
+expert count; expert-parallel sharding of the E axis is an opt-in when
+``E % |model axis| == 0``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, init_swiglu, swiglu
+
+__all__ = ["init_moe", "moe"]
+
+
+def init_moe(key: jax.Array, cfg: Any, dtype=jnp.bfloat16) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    kr, kg, ku, kd, ks, ksg = jax.random.split(key, 6)
+    scale_d = 1.0 / math.sqrt(d)
+    scale_f = 1.0 / math.sqrt(ff)
+    p = {
+        "router": {"w": (jax.random.normal(kr, (d, e)) * scale_d).astype(jnp.float32)},
+        "experts": {
+            "gate": (jax.random.normal(kg, (e, d, ff)) * scale_d).astype(dtype),
+            "up": (jax.random.normal(ku, (e, d, ff)) * scale_d).astype(dtype),
+            "down": (jax.random.normal(kd, (e, ff, d)) * scale_f).astype(dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        shared_ff = cfg.n_shared_experts * ff
+        p["shared"] = init_swiglu(ks, d, shared_ff, dtype)
+        p["shared_gate"] = init_dense(ksg, d, 1, dtype)
+    return p
+
+
+def _dispatch(
+    t: jax.Array,
+    affinity: jax.Array,
+    experts: dict,
+    capacity: int,
+) -> jax.Array:
+    """Capacity-limited dispatch/combine over one token group.
+
+    t (T, d), affinity (T, E) -> (y (T, d), kept assignment count).
+    """
+    T, d = t.shape
+    E = affinity.shape[1]
+    sel_w, sel_idx = jax.lax.top_k(affinity.T, capacity)          # (E, C)
+    xe = t[sel_idx]                                               # (E, C, d)
+    # NOTE (§Perf, refuted hypotheses): forcing d-replicated expert weights
+    # at the use site (with_sharding_constraint) or storing them without
+    # FSDP both made this 7-11x WORSE — the storage<->use reshard of the
+    # f32 weight cotangents executes inside every remat'd scan-bwd
+    # iteration.  ZeRO-3 storage + partitioner-chosen use layout wins.
+    h_gate = jnp.einsum("ecd,edf->ecf", xe, experts["gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", xe, experts["up"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h_gate) * h_up, experts["down"])
+    ye = ye * sel_w[..., None].astype(ye.dtype)                   # zero-weight slots vanish
+    y = jnp.zeros((T, d), ye.dtype)
+    y = y.at[sel_idx.reshape(-1)].add(ye.reshape(E * capacity, d))
+    return y, jnp.sum((sel_w > 0).astype(jnp.float32))
+
+
+def moe(
+    params: dict,
+    x: jax.Array,
+    cfg: Any,
+    *,
+    capacity_factor: float = 1.25,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """MoE FFN. x (B, S, d) -> (y, aux losses).
+
+    ``cfg.moe_local_dispatch`` (perf lever, DESIGN.md §5 / EXPERIMENTS.md
+    §Perf): route within each *sequence* instead of globally.  Capacity is
+    then per (sequence, expert) and all gathers/scatters stay inside the
+    batch shard — no cross-device token exchange, which removes the SPMD
+    partitioner's involuntary full rematerialisation of the token tensor.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    local = bool(getattr(cfg, "moe_local_dispatch", False)) and S > 1
+    T = B * S
+    t = x.reshape(T, d)
+
+    logits = (t.astype(jnp.float32) @ params["router"]["w"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)                                  # (T, k)
+    if getattr(cfg, "moe_renormalize", True):
+        top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    # sparse affinity matrix (T, E): routing weight of token t for expert e
+    affinity = jnp.zeros((T, E), jnp.float32)
+    affinity = affinity.at[jnp.arange(T)[:, None], top_idx].set(top_vals)
+
+    # per-expert capacity selection: static shapes, no (T, E, C) one-hots.
+    # Decode regime (tiny T): capacity = T, i.e. lossless — dropping tokens
+    # is a training-throughput trade, never acceptable at serving time.
+    group = S if local else T
+    if group <= 256:
+        capacity = group
+    else:
+        capacity = max(1, int(math.ceil(group * k * capacity_factor / E)))
+        capacity = min(capacity, group)
+
+    if local:
+        y, kept = jax.vmap(
+            lambda tb, ab: _dispatch(tb, ab, params["experts"], capacity)
+        )(t.reshape(B, S, d), affinity.reshape(B, S, E))
+        y = y.reshape(T, d)
+        kept = jnp.sum(kept)
+    else:
+        y, kept = _dispatch(t, affinity, params["experts"], capacity)
+
+    if "shared" in params:
+        gate = jax.nn.sigmoid(t @ params["shared_gate"]["w"]).astype(y.dtype)
+        y = y + gate * swiglu(params["shared"], t)
+
+    # ---- auxiliary losses ----------------------------------------------------
+    # load balance (Switch-style): E * sum_e (token fraction_e * prob mass_e)
+    assigned = jnp.zeros((T, E), jnp.float32).at[jnp.arange(T)[:, None], top_idx].set(1.0)
+    frac = jnp.mean(assigned, axis=0)
+    mass = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(frac * mass) / k
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    # dropped (token, expert) assignment fraction — capacity tuning signal
+    drop_frac = jnp.clip(1.0 - kept / jnp.maximum(jnp.sum(assigned), 1.0), 0.0, 1.0)
+
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss, "moe_drop_frac": drop_frac}
+    return y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,245 @@
+"""Mamba2 (state-space duality) blocks: chunked SSD scan + O(1) decode.
+
+The SSD algorithm (Dao & Gu 2024) splits the sequence into chunks: within a
+chunk the recurrence is materialised as a (Q x Q) masked attention-like
+contraction (MXU-friendly); across chunks only the (H, P, N) states propagate
+through a scan.  ``ssd_chunked`` is the training/prefill path and the oracle
+for the ``kernels/ssd`` Pallas kernel; ``ssd_decode_step`` is the O(1)-state
+serving path (this is what makes ``long_500k`` decode trivial for SSM archs).
+
+Shapes: x (B, L, H, P), dt (B, L, H), A (H,), B/C (B, L, G, N); G (state
+groups) broadcasts over heads (G=1 for the assigned configs).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rms_norm
+
+__all__ = [
+    "ssd_intra_chunk",
+    "ssd_chunked",
+    "ssd_decode_step",
+    "init_mamba2_block",
+    "mamba2_block",
+    "mamba2_decode_step",
+    "mamba2_state_shape",
+]
+
+
+def ssd_intra_chunk(
+    xbar: jax.Array, Bh: jax.Array, Ch: jax.Array, cum: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Quadratic-within-chunk piece of SSD (the MXU-heavy part).
+
+    xbar (b,nc,q,h,p) = x * dt; Bh/Ch (b,nc,q,h,n); cum (b,nc,q,h) = cumsum
+    of ``dt * A`` within the chunk.  Returns (y_intra, chunk states, chunk
+    decay).  This function is the oracle for the ``kernels/ssd`` Pallas
+    kernel.
+    """
+    q = xbar.shape[2]
+    # L[i, j] = exp(cum_i - cum_j) for i >= j (segment-sum mask).  Mask the
+    # upper triangle *before* the exp: those entries have positive arguments
+    # that overflow to inf and would poison gradients through the where.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (b,nc,i,j,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    Lmask = jnp.exp(jnp.where(causal, seg, -1e30))
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", cb * Lmask, xbar)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (b,nc,q,h)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", Bh, decay_to_end, xbar)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (b,nc,h)
+    return y_intra, states, chunk_decay
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 128,
+    initial_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, g, n).astype(jnp.float32)
+    if g == 1:  # broadcast state groups over heads
+        Bh = jnp.broadcast_to(Bc, (b, nc, q, h, n))
+        Ch = jnp.broadcast_to(Cc, (b, nc, q, h, n))
+    else:
+        rep = h // g
+        Bh = jnp.repeat(Bc, rep, axis=3)
+        Ch = jnp.repeat(Cc, rep, axis=3)
+
+    logd = dtc * A.astype(jnp.float32)                  # (b, nc, q, h), <= 0
+    cum = jnp.cumsum(logd, axis=2)
+    xbar = xc * dtc[..., None]
+    y_intra, states, chunk_decay = ssd_intra_chunk(xbar, Bh, Ch, cum)
+
+    def body(s, inp):
+        st, dec = inp
+        s_new = dec[:, :, None, None] * s + st
+        return s_new, s                                          # emit state *before* chunk
+
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # (b,nc,h,p,n)
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", Ch, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,
+    x_t: jax.Array,
+    dt_t: jax.Array,
+    A: jax.Array,
+    B_t: jax.Array,
+    C_t: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """One-token recurrence. state (B,H,P,N), x_t (B,H,P), dt_t (B,H),
+    B_t/C_t (B,G,N). Returns (y_t (B,H,P), new_state)."""
+    b, h, p, n = state.shape
+    g = B_t.shape[1]
+    Bh = jnp.broadcast_to(B_t[:, :, None, :], (b, g, h // g, n)).reshape(b, h, n)
+    Ch = jnp.broadcast_to(C_t[:, :, None, :], (b, g, h // g, n)).reshape(b, h, n)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t.astype(jnp.float32), x_t.astype(jnp.float32), Bh)
+    new_state = dA[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (in_proj -> conv1d -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: Any) -> tuple[int, int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    head_p = cfg.ssm_head_dim
+    n_heads = d_inner // head_p
+    return d_inner, n_heads, head_p, cfg.ssm_groups, cfg.ssm_state
+
+
+def mamba2_state_shape(cfg: Any, batch: int) -> dict[str, tuple]:
+    d_inner, n_heads, head_p, g, n = _dims(cfg)
+    conv_dim = d_inner + 2 * g * n
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, conv_dim),
+        "ssm": (batch, n_heads, head_p, n),
+    }
+
+
+def init_mamba2_block(key: jax.Array, cfg: Any, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    d_inner, n_heads, head_p, g, n = _dims(cfg)
+    conv_dim = d_inner + 2 * g * n
+    k_in, k_conv, k_out, k_dt = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * g * n + n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": init_dense(k_in, d, in_dim, dtype),
+        "conv_w": (jax.random.normal(k_conv, (cfg.ssm_conv, conv_dim)) / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": (jax.random.uniform(k_dt, (n_heads,), minval=-4.0, maxval=-1.0)).astype(jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_dense(k_out, d_inner, d, dtype),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: Any):
+    d_inner, n_heads, head_p, g, n = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def mamba2_block(params: dict, x: jax.Array, cfg: Any) -> tuple[jax.Array, dict]:
+    """Training/prefill path. x (B, S, d) -> (y (B, S, d), final caches)."""
+    Bsz, S, _ = x.shape
+    d_inner, n_heads, head_p, g, n = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]["w"]
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+
+    # causal depthwise conv over (x, B, C)
+    w = params["conv_w"]                                         # (K, conv_dim)
+    K = w.shape[0]
+    xbc_pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + S, :] * w[i][None, None, :] for i in range(K)
+    ) + params["conv_b"][None, None, :]
+    conv = jax.nn.silu(conv)
+
+    xs, Bmat, Cmat = jnp.split(conv, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(Bsz, S, n_heads, head_p)
+    Bmat = Bmat.reshape(Bsz, S, g, n)
+    Cmat = Cmat.reshape(Bsz, S, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+
+    y, final_state = ssd_chunked(xs, dt, A, Bmat, Cmat, chunk=cfg.ssm_chunk)
+    # keep everything in the block compute dtype: f32 constants (d_skip)
+    # must not promote the residual path, or scan carries change type
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xs.astype(y.dtype)
+    y = y.reshape(Bsz, S, d_inner)
+    y = rms_norm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    out = (y @ params["out_proj"]["w"]).astype(x.dtype)
+    caches = {"conv": xbc[:, -(K - 1) :, :], "ssm": final_state}
+    return out, caches
+
+
+def mamba2_decode_step(
+    params: dict, x_t: jax.Array, cache: dict, cfg: Any
+) -> tuple[jax.Array, dict]:
+    """O(1) decode. x_t (B, 1, d), cache {conv (B,K-1,conv_dim), ssm (B,H,P,N)}."""
+    Bsz = x_t.shape[0]
+    d_inner, n_heads, head_p, g, n = _dims(cfg)
+    zxbcdt = x_t[:, 0, :] @ params["in_proj"]["w"]
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+
+    w = params["conv_w"]
+    K = w.shape[0]
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B, K, conv)
+    conv = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+
+    xs, Bmat, Cmat = jnp.split(conv, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(Bsz, n_heads, head_p)
+    Bmat = Bmat.reshape(Bsz, g, n)
+    Cmat = Cmat.reshape(Bsz, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+
+    y, new_ssm = ssd_decode_step(cache["ssm"], xs, dt, A, Bmat, Cmat)
+    y = y + params["d_skip"].astype(y.dtype)[None, :, None] * xs.astype(y.dtype)
+    y = y.reshape(Bsz, d_inner)
+    y = rms_norm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    out = (y @ params["out_proj"]["w"]).astype(x_t.dtype)[:, None, :]
+    return out, {"conv": window[:, 1:, :].astype(cache["conv"].dtype), "ssm": new_ssm}

@@ -1,0 +1,694 @@
+"""Model assembly for all assigned architecture families.
+
+One functional model API used by training, serving, and the dry-run:
+
+* ``init_model(key, cfg)``                          -> params pytree
+* ``forward_train(params, cfg, batch)``             -> (loss, metrics)
+* ``forward_prefill(params, cfg, tokens, ...)``     -> (logits, cache)
+* ``forward_decode(params, cfg, token, cache, pos)``-> (logits, cache)
+* ``init_cache(cfg, batch, max_len)``               -> cache pytree
+
+Families:
+* dense / vlm  — pre-norm GQA + SwiGLU decoder (vlm adds a patch projector
+                 and consumes precomputed patch embeddings — frontend stub);
+* moe          — GQA + token-choice top-k MoE FFN (optional shared experts);
+* ssm          — Mamba2 (SSD) stack, attention-free;
+* hybrid       — Zamba2: Mamba2 backbone with ONE shared attention+MLP block
+                 applied every ``hybrid_attn_period`` layers (weights reused);
+* encdec       — Seamless: bidirectional encoder (audio-frame stub input) +
+                 causal decoder with cross-attention.
+
+Layer iteration uses ``lax.scan`` over stacked per-layer params (bounded HLO,
+bounded compile time at 80+ layers) with a configurable remat policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    _project_qkv,
+    attend_blockwise,
+    attend_decode,
+    attend_full,
+    init_attention,
+)
+from repro.models.layers import (
+    cross_entropy_loss,
+    maybe_shard,
+    shard_batch,
+    dense,
+    embed,
+    init_dense,
+    init_embedding,
+    init_mlp,
+    init_rms_norm,
+    init_swiglu,
+    mlp,
+    rms_norm,
+    swiglu,
+    unembed,
+)
+from repro.models.moe import init_moe, moe
+from repro.models.ssm import (
+    init_mamba2_block,
+    mamba2_block,
+    mamba2_decode_step,
+    mamba2_state_shape,
+)
+
+__all__ = [
+    "init_model",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "init_cache",
+    "REMAT_POLICIES",
+]
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+ZERO_AUX = {
+    "moe_lb_loss": jnp.float32(0.0),
+    "moe_z_loss": jnp.float32(0.0),
+    "moe_drop_frac": jnp.float32(0.0),
+}
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def _init_mamba_layer(key: jax.Array, cfg: ModelConfig, dt) -> dict:
+    return {"ln": init_rms_norm(cfg.d_model), "block": init_mamba2_block(key, cfg, dt)}
+
+
+def _init_attn_block(key: jax.Array, cfg: ModelConfig, *, use_moe: bool, cross: bool = False) -> dict:
+    ka, kf, kc = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    p = {
+        "ln1": init_rms_norm(cfg.d_model),
+        "attn": init_attention(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qk_norm=cfg.qk_norm, dtype=dt,
+        ),
+        "ln2": init_rms_norm(cfg.d_model),
+    }
+    if use_moe:
+        p["moe"] = init_moe(kf, cfg, dtype=dt)
+    elif cfg.family == "encdec":
+        p["mlp"] = init_mlp(kf, cfg.d_model, cfg.d_ff, dtype=dt)
+    else:
+        p["mlp"] = init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype=dt)
+    if cross:
+        p["ln_cross"] = init_rms_norm(cfg.d_model)
+        p["cross"] = init_attention(
+            kc, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype=dt
+        )
+    return p
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(keys[1], cfg.vocab_size, cfg.d_model, dt)
+
+    def stack(init_fn, n, key):
+        return jax.vmap(init_fn)(jax.random.split(key, n))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        params["blocks"] = stack(
+            lambda k: _init_attn_block(k, cfg, use_moe=(fam == "moe")), cfg.n_layers, keys[2]
+        )
+        if fam == "vlm":
+            k1, k2 = jax.random.split(keys[3])
+            params["projector"] = {
+                "w1": init_dense(k1, cfg.frontend_dim, cfg.d_model, dt),
+                "w2": init_dense(k2, cfg.d_model, cfg.d_model, dt),
+            }
+    elif fam == "ssm":
+        params["blocks"] = stack(lambda k: _init_mamba_layer(k, cfg, dt), cfg.n_layers, keys[2])
+    elif fam == "hybrid":
+        period = cfg.hybrid_attn_period
+        n_groups = cfg.n_layers // period
+        n_tail = cfg.n_layers - n_groups * period
+        gkeys = jax.vmap(lambda k: jax.random.split(k, period))(
+            jax.random.split(keys[2], n_groups)
+        )
+        params["mamba_main"] = jax.vmap(
+            jax.vmap(lambda k: _init_mamba_layer(k, cfg, dt))
+        )(gkeys)
+        if n_tail:
+            params["mamba_tail"] = stack(lambda k: _init_mamba_layer(k, cfg, dt), n_tail, keys[3])
+        params["shared_attn"] = _init_attn_block(keys[4], cfg, use_moe=False)
+    elif fam == "encdec":
+        params["enc_blocks"] = stack(
+            lambda k: _init_attn_block(k, cfg, use_moe=False), cfg.n_enc_layers, keys[2]
+        )
+        params["dec_blocks"] = stack(
+            lambda k: _init_attn_block(k, cfg, use_moe=False, cross=True), cfg.n_layers, keys[3]
+        )
+        params["enc_norm"] = init_rms_norm(cfg.d_model)
+        params["src_proj"] = init_dense(keys[5], cfg.frontend_dim, cfg.d_model, dt)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Single-layer applies
+# ---------------------------------------------------------------------------
+
+
+def _ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    if "moe" in p:
+        return moe(p["moe"], x, cfg, capacity_factor=getattr(cfg, "moe_capacity_factor", 1.25))
+    if cfg.family == "encdec":
+        return mlp(p["mlp"], x), dict(ZERO_AUX)
+    return swiglu(p["mlp"], x), dict(ZERO_AUX)
+
+
+def _attn_block_seq(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    causal: bool,
+    enc_out: jax.Array | None = None,
+    make_cache: bool = False,
+) -> tuple[jax.Array, dict, dict | None]:
+    """Full-sequence attention block (train / prefill / encoder)."""
+    x = shard_batch(x)
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(p["attn"], h, positions, cfg)
+    S = x.shape[1]
+    if S > 2048:
+        out = attend_blockwise(
+            q, k, v, causal=causal, window=cfg.window,
+            block_k=getattr(cfg, "attn_block_k", 512),
+        )
+    else:
+        out = attend_full(q, k, v, causal=causal, window=cfg.window)
+    B, _, H, D = out.shape
+    x = x + out.reshape(B, S, H * D) @ p["attn"]["wo"]["w"]
+    if enc_out is not None:
+        hc = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+        qc = (hc @ p["cross"]["wq"]["w"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        kc = (enc_out @ p["cross"]["wk"]["w"]).reshape(B, enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        vc = (enc_out @ p["cross"]["wv"]["w"]).reshape(B, enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        if S > 2048 or enc_out.shape[1] > 2048:
+            co = attend_blockwise(qc, kc, vc, causal=False)
+        else:
+            co = attend_full(qc, kc, vc, causal=False)
+        x = x + co.reshape(B, S, -1) @ p["cross"]["wo"]["w"]
+    h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+    y, aux = _ffn(p, h2, cfg)
+    x = x + y
+    cache = None
+    if make_cache:
+        cache = {"k": k, "v": v}
+    return x, aux, cache
+
+
+def _attn_block_decode(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+    pos: jax.Array,
+    *,
+    cross_kv: dict | None = None,
+) -> tuple[jax.Array, dict, dict]:
+    """One-token attention block against a KV cache.
+
+    ``cache`` holds padded k/v (B, Smax, KV, D); sliding-window archs use a
+    ring buffer (Smax = window), everything else absolute slots.
+    """
+    B = x.shape[0]
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(p["attn"], h, jnp.full((1,), pos, jnp.int32), cfg)
+    s_max = cache["k"].shape[1]
+    ring = cfg.window is not None and s_max == cfg.window
+    slot = (pos % s_max) if ring else jnp.minimum(pos, s_max - 1)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    valid = jnp.minimum(pos + 1, s_max)
+    out = attend_decode(q, k_cache, v_cache, jnp.full((B,), valid, jnp.int32), window=None)
+    x = x + out.reshape(B, 1, -1) @ p["attn"]["wo"]["w"]
+    if cross_kv is not None:
+        hc = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+        qc = (hc @ p["cross"]["wq"]["w"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        co = attend_decode(
+            qc, cross_kv["k"], cross_kv["v"],
+            jnp.full((B,), cross_kv["k"].shape[1], jnp.int32),
+        )
+        x = x + co.reshape(B, 1, -1) @ p["cross"]["wo"]["w"]
+    h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+    y, aux = _ffn(p, h2, cfg)
+    return x + y, aux, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over layers)
+# ---------------------------------------------------------------------------
+
+
+def _scan_blocks(body, x, stacked, caches=None, remat: str = "dots"):
+    policy = REMAT_POLICIES.get(remat)
+    fn = jax.checkpoint(body, policy=policy) if remat != "none" else body
+
+    def wrapped(carry, inp):
+        return fn(carry, inp)
+
+    xs = (stacked, caches) if caches is not None else (stacked, None)
+    (x, aux), new_caches = jax.lax.scan(wrapped, (x, dict(ZERO_AUX)), xs)
+    return x, aux, new_caches
+
+
+def _accumulate(acc: dict, aux: dict) -> dict:
+    return {k: acc[k] + aux[k] for k in acc}
+
+
+def _decoder_stack_seq(params, cfg, x, positions, *, make_cache=False, remat="dots"):
+    """dense/moe/vlm decoder over a full sequence (+ optional cache build)."""
+
+    def body(carry, inp):
+        h, acc = carry
+        p_l, _ = inp
+        h, aux, cache = _attn_block_seq(
+            p_l, h, cfg, positions, causal=True, make_cache=make_cache
+        )
+        return (h, _accumulate(acc, aux)), cache
+
+    return _scan_blocks(body, x, params["blocks"], None, remat)
+
+
+def _ssm_stack_seq(params, cfg, x, *, make_cache=False, remat="dots"):
+    def body(carry, inp):
+        h, acc = carry
+        p_l, _ = inp
+        h = shard_batch(h)
+        h2 = rms_norm(p_l["ln"], h, cfg.norm_eps)
+        y, caches = mamba2_block(p_l["block"], h2, cfg)
+        return (h + y, acc), (caches if make_cache else None)
+
+    # mamba blocks carry their own ln inside the stacked dict
+    return _scan_blocks(body, x, params["blocks"], None, remat)
+
+
+# ---------------------------------------------------------------------------
+# Public forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg, tokens, frontend_embeds):
+    x = embed(params["embed"], tokens).astype(_dtype(cfg))
+    if cfg.family == "vlm":
+        if frontend_embeds is None:
+            raise ValueError("vlm family needs frontend_embeds (patch stub)")
+        proj = dense(params["projector"]["w2"],
+                     jax.nn.gelu(dense(params["projector"]["w1"],
+                                       frontend_embeds.astype(_dtype(cfg)))))
+        x = jnp.concatenate([proj, x], axis=1)
+    return x
+
+
+def _unembed(params, cfg, x):
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if not getattr(cfg, "logits_vocab_shard", True):
+        return (x @ table["table"].T.astype(x.dtype)).astype(jnp.float32)
+    return unembed(table, x)
+
+
+def _hybrid_stack_seq(params, cfg, x, *, make_cache=False, remat="dots"):
+    period = cfg.hybrid_attn_period
+    n_groups = cfg.n_layers // period
+    positions = jnp.arange(x.shape[1])
+
+    def mamba_one(h, p_l):
+        h = shard_batch(h)
+        h2 = rms_norm(p_l["ln"], h, cfg.norm_eps)
+        y, caches = mamba2_block(p_l["block"], h2, cfg)
+        return h + y, caches
+
+    def group_body(carry, inp):
+        h, acc = carry
+        p_group, _ = inp  # stacked (period, ...) mamba params
+
+        def inner(c, p_l):
+            h_in, _ = c
+            h_out, caches = mamba_one(h_in, p_l)
+            return (h_out, 0), caches
+
+        (h, _), m_caches = jax.lax.scan(inner, (h, 0), p_group)
+        h, aux, attn_cache = _attn_block_seq(
+            params["shared_attn"], h, cfg, positions, causal=True, make_cache=make_cache
+        )
+        return (h, _accumulate(acc, aux)), {"mamba": m_caches, "attn": attn_cache}
+
+    policy = REMAT_POLICIES.get(remat)
+    body = jax.checkpoint(group_body, policy=policy) if remat != "none" else group_body
+    (x, aux), group_caches = jax.lax.scan(body, (x, dict(ZERO_AUX)), (params["mamba_main"], None))
+    tail_caches = None
+    if "mamba_tail" in params:
+        def tail_body(c, p_l):
+            h_in, _ = c
+            h_out, caches = mamba_one(h_in, p_l)
+            return (h_out, 0), caches
+
+        (x, _), tail_caches = jax.lax.scan(tail_body, (x, 0), params["mamba_tail"])
+    return x, aux, {"groups": group_caches, "tail": tail_caches}
+
+
+def forward_train(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    remat: str = "dots",
+) -> tuple[jax.Array, dict]:
+    """Next-token CE loss. batch: tokens (B,S), labels (B,S)[, frontend]."""
+    tokens = batch["tokens"]
+    fe = batch.get("frontend")
+    if cfg.family == "encdec":
+        return _encdec_train(params, cfg, batch, remat=remat)
+    x = _embed_inputs(params, cfg, tokens, fe)
+    positions = jnp.arange(x.shape[1])
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, aux, _ = _decoder_stack_seq(params, cfg, x, positions, remat=remat)
+    elif cfg.family == "ssm":
+        x, aux, _ = _ssm_stack_seq(params, cfg, x, remat=remat)
+    elif cfg.family == "hybrid":
+        x, aux, _ = _hybrid_stack_seq(params, cfg, x, remat=remat)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "vlm":  # only text positions carry labels
+        x = x[:, cfg.frontend_tokens :, :]
+    logits = _unembed(params, cfg, x)
+    logits = maybe_shard(logits, ("pod", "data"), None, "model")
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    n_layers = max(cfg.n_layers, 1)
+    metrics = {
+        "ce_loss": loss,
+        "moe_lb_loss": aux["moe_lb_loss"] / n_layers,
+        "moe_z_loss": aux["moe_z_loss"] / n_layers,
+        "moe_drop_frac": aux["moe_drop_frac"] / n_layers,
+    }
+    total = loss + 0.01 * metrics["moe_lb_loss"] + 0.001 * metrics["moe_z_loss"]
+    return total, metrics
+
+
+def _encdec_train(params, cfg, batch, *, remat="dots"):
+    src = dense(params["src_proj"], batch["frontend"].astype(_dtype(cfg)))
+    pos_src = jnp.arange(src.shape[1])
+
+    def enc_body(carry, inp):
+        h, acc = carry
+        p_l, _ = inp
+        h, aux, _ = _attn_block_seq(p_l, h, cfg, pos_src, causal=False)
+        return (h, _accumulate(acc, aux)), None
+
+    enc, _, _ = _scan_blocks(enc_body, src, params["enc_blocks"], None, remat)
+    enc = rms_norm(params["enc_norm"], enc, cfg.norm_eps)
+
+    x = embed(params["embed"], batch["tokens"]).astype(_dtype(cfg))
+    pos_tgt = jnp.arange(x.shape[1])
+
+    def dec_body(carry, inp):
+        h, acc = carry
+        p_l, _ = inp
+        h, aux, _ = _attn_block_seq(p_l, h, cfg, pos_tgt, causal=True, enc_out=enc)
+        return (h, _accumulate(acc, aux)), None
+
+    x, _, _ = _scan_blocks(dec_body, x, params["dec_blocks"], None, remat)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    logits = maybe_shard(logits, ("pod", "data"), None, "model")
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"ce_loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Zeroed cache pytree (bf16 KV, f32 SSM states)."""
+    kv_len = min(max_len, cfg.window) if cfg.window else max_len
+    dt = _dtype(cfg)
+
+    def attn_cache():
+        shape = (batch, kv_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    def mamba_cache():
+        shapes = mamba2_state_shape(cfg, batch)
+        return {
+            "conv": jnp.zeros(shapes["conv"], dt),
+            "ssm": jnp.zeros(shapes["ssm"], jnp.float32),
+        }
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return {
+            "layers": jax.tree.map(
+                lambda x: jnp.stack([x] * cfg.n_layers), attn_cache()
+            )
+        }
+    if fam == "ssm":
+        return {"layers": jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), mamba_cache())}
+    if fam == "hybrid":
+        period = cfg.hybrid_attn_period
+        n_groups = cfg.n_layers // period
+        n_tail = cfg.n_layers - n_groups * period
+        out = {
+            "groups": {
+                "mamba": jax.tree.map(
+                    lambda x: jnp.zeros((n_groups, period) + x.shape, x.dtype),
+                    mamba_cache(),
+                ),
+                "attn": jax.tree.map(
+                    lambda x: jnp.stack([x] * n_groups), attn_cache()
+                ),
+            }
+        }
+        if n_tail:
+            out["tail"] = jax.tree.map(lambda x: jnp.stack([x] * n_tail), mamba_cache())
+        return out
+    if fam == "encdec":
+        self_cache = jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), attn_cache())
+        return {"layers": self_cache, "cross": None}  # cross filled at prefill
+    raise ValueError(fam)
+
+
+def forward_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    frontend_embeds: jax.Array | None = None,
+    max_len: int | None = None,
+    remat: str = "dots",
+) -> tuple[jax.Array, dict]:
+    """Process a full prompt; returns (last-position logits (B, V), cache)."""
+    B, S = tokens.shape
+    fam = cfg.family
+    if fam == "encdec":
+        return _encdec_prefill(params, cfg, tokens, frontend_embeds, max_len=max_len)
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    S_total = x.shape[1]
+    positions = jnp.arange(S_total)
+    max_len = max_len or S_total
+    if fam in ("dense", "moe", "vlm"):
+        x, aux, caches = _decoder_stack_seq(
+            params, cfg, x, positions, make_cache=True, remat=remat
+        )
+        cache = {"layers": _pad_kv(caches, cfg, max_len)}
+    elif fam == "ssm":
+        x, aux, caches = _ssm_stack_seq(params, cfg, x, make_cache=True, remat=remat)
+        cache = {"layers": caches}
+    elif fam == "hybrid":
+        x, aux, caches = _hybrid_stack_seq(params, cfg, x, make_cache=True, remat=remat)
+        cache = {
+            "groups": {
+                "mamba": caches["groups"]["mamba"],
+                "attn": _pad_kv(caches["groups"]["attn"], cfg, max_len),
+            }
+        }
+        if caches["tail"] is not None:
+            cache["tail"] = caches["tail"]
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, -1:, :])[:, 0, :]
+    return logits, cache
+
+
+def _pad_kv(caches: dict, cfg: ModelConfig, max_len: int) -> dict:
+    """Pad prefill K/V (L, B, S, KV, D) to the serving cache length.
+
+    Sliding-window caches are ring buffers indexed ``slot = pos % window``:
+    the kept tail of the prompt is scattered to its ring slots so subsequent
+    decode writes land consistently.
+    """
+    kv_len = min(max_len, cfg.window) if cfg.window else max_len
+
+    def pad(x):
+        S = x.shape[2]
+        if S == kv_len:
+            return x
+        if S > kv_len:  # ring buffer: token t -> slot t % window
+            import numpy as np
+
+            kept_tokens = np.arange(S - kv_len, S)
+            slots = kept_tokens % kv_len
+            out = jnp.zeros(x.shape[:2] + (kv_len,) + x.shape[3:], x.dtype)
+            return out.at[:, :, slots].set(x[:, :, S - kv_len :])
+        return jnp.pad(x, ((0, 0), (0, 0), (0, kv_len - S), (0, 0), (0, 0)))
+
+    return jax.tree.map(pad, caches)
+
+
+def _encdec_prefill(params, cfg, tokens, frontend_embeds, max_len=None):
+    src = dense(params["src_proj"], frontend_embeds.astype(_dtype(cfg)))
+    pos_src = jnp.arange(src.shape[1])
+
+    def enc_body(carry, inp):
+        h, acc = carry
+        p_l, _ = inp
+        h, aux, _ = _attn_block_seq(p_l, h, cfg, pos_src, causal=False)
+        return (h, acc), None
+
+    enc, _, _ = _scan_blocks(enc_body, src, params["enc_blocks"], None, "none")
+    enc = rms_norm(params["enc_norm"], enc, cfg.norm_eps)
+
+    # precompute per-layer cross K/V once (reused by every decode step)
+    def cross_kv(p_l):
+        B, Se, _ = enc.shape
+        k = (enc @ p_l["cross"]["wk"]["w"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        v = (enc @ p_l["cross"]["wv"]["w"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(cross_kv)(params["dec_blocks"])
+
+    # full teacher-forced pass over the decoder prompt builds the self cache
+    x = embed(params["embed"], tokens).astype(_dtype(cfg))
+    pos_tgt = jnp.arange(x.shape[1])
+
+    def dec_body(carry, p_l):
+        h, acc = carry
+        h, aux, c = _attn_block_seq(
+            p_l, h, cfg, pos_tgt, causal=True, enc_out=enc, make_cache=True
+        )
+        return (h, acc), c
+
+    (x, _), self_caches = jax.lax.scan(dec_body, (x, dict(ZERO_AUX)), params["dec_blocks"])
+    max_len = max_len or tokens.shape[1]
+    cache = {"layers": _pad_kv(self_caches, cfg, max_len), "cross": cross}
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, -1:, :])[:, 0, :]
+    return logits, cache
+
+
+def forward_decode(
+    params: dict,
+    cfg: ModelConfig,
+    token: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """One decode step. token (B, 1) -> (logits (B, V), new cache)."""
+    x = embed(params["embed"], token).astype(_dtype(cfg))
+    fam = cfg.family
+    aux0 = dict(ZERO_AUX)
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, inp):
+            h, acc = carry
+            p_l, c_l = inp
+            h, aux, new_c = _attn_block_decode(p_l, h, cfg, c_l, pos)
+            return (h, _accumulate(acc, aux)), new_c
+
+        (x, _), new_caches = jax.lax.scan(body, (x, aux0), (params["blocks"], cache["layers"]))
+        new_cache = {"layers": new_caches}
+    elif fam == "ssm":
+        def body(carry, inp):
+            h, acc = carry
+            p_l, c_l = inp
+            h2 = rms_norm(p_l["ln"], h, cfg.norm_eps)
+            y, new_c = mamba2_decode_step(p_l["block"], h2, c_l, cfg)
+            return (h + y, acc), new_c
+
+        (x, _), new_caches = jax.lax.scan(body, (x, aux0), (params["blocks"], cache["layers"]))
+        new_cache = {"layers": new_caches}
+    elif fam == "hybrid":
+        def group_body(carry, inp):
+            h, acc = carry
+            p_group, c_group = inp
+
+            def inner(c, inp2):
+                h_in, _ = c
+                p_l, c_l = inp2
+                h2 = rms_norm(p_l["ln"], h_in, cfg.norm_eps)
+                y, new_c = mamba2_decode_step(p_l["block"], h2, c_l, cfg)
+                return (h_in + y, 0), new_c
+
+            (h, _), new_m = jax.lax.scan(inner, (h, 0), (p_group, c_group["mamba"]))
+            h, aux, new_a = _attn_block_decode(
+                params["shared_attn"], h, cfg, c_group["attn"], pos
+            )
+            return (h, _accumulate(acc, aux)), {"mamba": new_m, "attn": new_a}
+
+        (x, _), new_groups = jax.lax.scan(
+            group_body, (x, aux0), (params["mamba_main"], cache["groups"])
+        )
+        new_cache = {"groups": new_groups}
+        if "tail" in cache:
+            def tail_body(c, inp2):
+                h_in, _ = c
+                p_l, c_l = inp2
+                h2 = rms_norm(p_l["ln"], h_in, cfg.norm_eps)
+                y, new_c = mamba2_decode_step(p_l["block"], h2, c_l, cfg)
+                return (h_in + y, 0), new_c
+
+            (x, _), new_tail = jax.lax.scan(tail_body, (x, 0), (params["mamba_tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+    elif fam == "encdec":
+        cross = cache["cross"]
+
+        def body(carry, inp):
+            h, acc = carry
+            p_l, c_l, cross_l = inp
+            h, aux, new_c = _attn_block_decode(p_l, h, cfg, c_l, pos, cross_kv=cross_l)
+            return (h, _accumulate(acc, aux)), new_c
+
+        (x, _), new_caches = jax.lax.scan(
+            body, (x, aux0), (params["dec_blocks"], cache["layers"], cross)
+        )
+        new_cache = {"layers": new_caches, "cross": cross}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, cfg, x)[:, 0, :]
+    return logits, new_cache

@@ -1,0 +1,45 @@
+"""Serving steps: batched prefill and single-token decode (greedy/sampled).
+
+These are the functions the decode/prefill dry-run cells lower: a prefill
+step returning (next-token logits, cache), and a decode step consuming and
+producing the cache in place (donated in real serving).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward_decode, forward_prefill, init_cache
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_sample"]
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: int | None = None, remat: str = "dots"):
+    def prefill_step(params, tokens, frontend_embeds=None):
+        logits, cache = forward_prefill(
+            params, cfg, tokens, frontend_embeds=frontend_embeds,
+            max_len=max_len, remat=remat,
+        )
+        return greedy_sample(logits), logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache, pos):
+        logits, cache = forward_decode(params, cfg, token, cache, pos)
+        return greedy_sample(logits)[:, None], logits, cache
+
+    return decode_step
+
+
+def make_empty_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return init_cache(cfg, batch, max_len)

@@ -1,0 +1,97 @@
+"""The production train step: microbatched gradient accumulation + AdamW.
+
+``make_train_step(cfg, ...)`` returns a pure function
+``(params, opt_state, batch, rng) -> (params, opt_state, metrics)`` suitable
+for ``jax.jit`` with sharded inputs.  Gradient accumulation runs as a
+``lax.scan`` over microbatches (f32 accumulators, param-sharded), which is
+what bounds activation memory at the assigned global batch sizes
+(DESIGN.md §5); the optimizer update happens once per step on the averaged
+gradients.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward_train
+from repro.training.optimizer import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "pick_microbatches"]
+
+
+def pick_microbatches(
+    cfg: ModelConfig, per_device_batch: int, seq_len: int, budget_bytes: float = 4e9
+) -> int:
+    """Number of accumulation steps so saved per-layer activations fit a
+    ~4 GB budget per device (residual-stream carries dominate under remat)."""
+    bytes_per_seq_layer = seq_len * cfg.d_model * 2  # bf16 residual carry
+    depth = max(cfg.n_layers, 1)
+    per_seq = bytes_per_seq_layer * depth
+    if cfg.family in ("ssm", "hybrid"):
+        per_seq *= cfg.ssm_expand  # inner-width carries
+    micro_bs = max(1, int(budget_bytes // max(per_seq, 1)))
+    micro_bs = min(micro_bs, per_device_batch)
+    # round UP so the budget is respected, then up again to a divisor
+    n_micro = -(-per_device_batch // micro_bs)
+    while per_device_batch % n_micro:
+        n_micro += 1
+    return n_micro
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    n_micro: int = 1,
+    remat: str = "full",
+):
+    """Build the jittable train step (grad-accumulation over ``n_micro``)."""
+
+    def loss_fn(params, batch):
+        return forward_train(params, cfg, batch, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        def reshape_micro(x):
+            b = x.shape[0]
+            if b % n_micro:
+                raise ValueError(
+                    f"global batch {b} not divisible by n_micro={n_micro}"
+                )
+            return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+        micro = jax.tree.map(reshape_micro, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            g_acc, loss_acc, metr_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            metr_acc = {k: metr_acc[k] + metrics[k] for k in metr_acc}
+            return (g_acc, loss_acc + loss, metr_acc), None
+
+        metrics0 = {
+            "ce_loss": jnp.float32(0),
+            "moe_lb_loss": jnp.float32(0),
+            "moe_z_loss": jnp.float32(0),
+            "moe_drop_frac": jnp.float32(0),
+        }
+        if cfg.family == "encdec":
+            metrics0 = {"ce_loss": jnp.float32(0)}
+        (grads, loss, metrics), _ = jax.lax.scan(body, (zeros, jnp.float32(0), metrics0), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        loss = loss / n_micro
+        metrics = {k: v / n_micro for k, v in metrics.items()}
+
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

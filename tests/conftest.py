@@ -1,0 +1,35 @@
+"""Shared fixtures. NOTE: device count must stay 1 here (smoke tests and
+benches see the real CPU); only launch/dryrun.py forces 512 host devices."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
+from repro.core.device_models import CircuitParams
+
+
+@pytest.fixture(scope="session")
+def circuit_params() -> CircuitParams:
+    return CircuitParams()
+
+
+@pytest.fixture(scope="session")
+def bucket_model(circuit_params: CircuitParams) -> BucketCurvefitModel:
+    """One fitted 75-pixel bucket model shared across the whole test session."""
+    return fit_bucket_model(circuit_params, n_pixels=75)
+
+
+@pytest.fixture(scope="session")
+def mixed_iw() -> tuple[np.ndarray, np.ndarray]:
+    """Random (I, W) draws covering all five buckets (beta mixtures)."""
+    rng = np.random.default_rng(42)
+    parts_i, parts_w = [], []
+    for a, b in [(1, 1), (5, 1), (1, 5), (8, 1), (12, 1)]:
+        parts_i.append(rng.beta(a, b, (1500, 75)))
+        parts_w.append(rng.beta(a, b, (1500, 75)))
+    return (
+        np.concatenate(parts_i).astype(np.float32),
+        np.concatenate(parts_w).astype(np.float32),
+    )

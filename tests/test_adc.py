@@ -1,0 +1,59 @@
+"""SS-ADC model: up/down counting, BN fold, ReLU clamp, quantisation, STE."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.adc import ADCConfig, quantize_voltage, ste_round, updown_readout
+
+CFG = ADCConfig(bits=8, v_ref=1.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 0.999))
+def test_quantisation_error_within_half_lsb(v):
+    q = float(quantize_voltage(jnp.float32(v), CFG))
+    assert abs(q * CFG.lsb - v) <= CFG.lsb / 2 + 1e-7
+
+
+def test_updown_implements_relu():
+    v_pos = jnp.asarray([0.1, 0.5, 0.2])
+    v_neg = jnp.asarray([0.5, 0.1, 0.2])
+    counts = updown_readout(v_pos, v_neg, CFG)
+    assert float(counts[0]) == 0.0          # negative sum clamps to 0 (CDS ReLU)
+    assert float(counts[1]) > 0.0
+    assert float(counts[2]) == 0.0
+
+
+def test_bn_offset_initialises_counter():
+    v_pos = jnp.asarray([0.25])
+    v_neg = jnp.asarray([0.25])
+    assert float(updown_readout(v_pos, v_neg, CFG, bn_offset_counts=17.0)[0]) == 17.0
+    # offset also rescues small negative sums (that is why it must be folded
+    # *before* the clamp)
+    v_neg2 = jnp.asarray([0.27])
+    c = float(updown_readout(v_pos, v_neg2, CFG, bn_offset_counts=17.0)[0])
+    assert 0.0 < c < 17.0
+
+
+def test_saturation_at_full_scale():
+    c = updown_readout(jnp.asarray([5.0]), jnp.asarray([0.0]), CFG)
+    assert float(c[0]) == CFG.levels - 1
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda v: jnp.sum(ste_round(v / CFG.lsb)))(jnp.float32(0.4))
+    np.testing.assert_allclose(float(g), 1.0 / CFG.lsb, rtol=1e-6)
+
+
+def test_soft_readout_tracks_hard():
+    rng = np.random.default_rng(0)
+    vp = jnp.asarray(rng.uniform(0, 1, (256,)), jnp.float32)
+    vn = jnp.asarray(rng.uniform(0, 1, (256,)), jnp.float32)
+    hard = updown_readout(vp, vn, CFG, hard=True)
+    soft = updown_readout(vp, vn, CFG, hard=False)
+    assert float(jnp.max(jnp.abs(hard - soft))) <= 1.0  # within one count

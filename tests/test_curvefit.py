@@ -1,0 +1,116 @@
+"""Reproduces the paper's Fig. 8(b) claim: bucket-select curvefit error < 3%."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.curvefit import (
+    BucketCurvefitModel,
+    fit_bucket_model,
+    predict_hard,
+    predict_sigmoid,
+)
+from repro.core.device_models import analog_dot_product
+
+
+def _err(pred, true, v_range=1.0):
+    return np.abs(np.asarray(pred) - np.asarray(true)) / v_range
+
+
+def test_error_below_3_percent(bucket_model, circuit_params, mixed_iw):
+    """Paper Fig. 8(b): prediction error vs the circuit (SPICE stand-in) < 3%
+    on random per-pixel (I, W) draws, across the full output range."""
+    I, W = map(jnp.asarray, mixed_iw)
+    v_true = analog_dot_product(I, W, circuit_params)
+    for fn in (predict_hard, predict_sigmoid):
+        err = _err(fn(bucket_model, I, W), v_true, circuit_params.v_sat)
+        assert err.max() < 0.03, f"{fn.__name__}: max err {err.max():.4f}"
+        assert err.mean() < 0.01
+
+
+def test_all_buckets_exercised(circuit_params, mixed_iw):
+    I, W = map(jnp.asarray, mixed_iw)
+    v_true = np.asarray(analog_dot_product(I, W, circuit_params))
+    occupancy = np.clip((v_true * 5).astype(int), 0, 4)
+    assert set(np.unique(occupancy)) == {0, 1, 2, 3, 4}
+
+
+def test_bucket_model_beats_generic_fit(bucket_model, circuit_params, mixed_iw):
+    """The two-step method must out-predict the step-1 generic surface alone
+    (the reason the paper introduces buckets)."""
+    I, W = map(jnp.asarray, mixed_iw)
+    v_true = analog_dot_product(I, W, circuit_params)
+    err_bucket = _err(predict_hard(bucket_model, I, W), v_true).max()
+    err_avg = _err(bucket_model.f_avg(I.mean(-1), W.mean(-1)), v_true).max()
+    assert err_bucket < 0.6 * err_avg
+
+
+def test_sigmoid_matches_hard_away_from_edges(bucket_model, circuit_params, mixed_iw):
+    """Interior of a bucket: the sigmoid gates select exactly one bucket, so
+    the differentiable equation equals the step-select one."""
+    I, W = map(jnp.asarray, mixed_iw)
+    v_est = bucket_model.f_avg(I.mean(-1), W.mean(-1))
+    frac = (v_est / bucket_model.v_range * bucket_model.n_buckets) % 1.0
+    interior = (frac > 0.2) & (frac < 0.8)
+    h = np.asarray(predict_hard(bucket_model, I, W))[np.asarray(interior)]
+    s = np.asarray(predict_sigmoid(bucket_model, I, W))[np.asarray(interior)]
+    np.testing.assert_allclose(h, s, atol=2e-3)
+
+
+def test_sigmoid_model_is_differentiable(bucket_model):
+    rng = np.random.default_rng(0)
+    I = jnp.asarray(rng.uniform(0, 1, (75,)), jnp.float32)
+    W = jnp.asarray(rng.uniform(0, 1, (75,)), jnp.float32)
+    g = jax.grad(lambda w: predict_sigmoid(bucket_model, I, w))(W)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.linalg.norm(g)) > 0
+
+
+def test_serialisation_roundtrip(bucket_model, mixed_iw):
+    I, W = map(jnp.asarray, mixed_iw)
+    restored = BucketCurvefitModel.from_dict(bucket_model.to_dict())
+    np.testing.assert_allclose(
+        np.asarray(predict_sigmoid(bucket_model, I[:64], W[:64])),
+        np.asarray(predict_sigmoid(restored, I[:64], W[:64])),
+        rtol=1e-6,
+    )
+
+
+def test_fit_generalises_across_kernel_sizes(circuit_params):
+    """A 3x3x3 (27-pixel) configuration refits cleanly — reconfigurability of
+    the kernel size carries through the modeling pipeline."""
+    model27 = fit_bucket_model(circuit_params, n_pixels=27, grid=33)
+    rng = np.random.default_rng(7)
+    I = jnp.asarray(rng.uniform(0, 1, (2048, 27)), jnp.float32)
+    W = jnp.asarray(rng.uniform(0, 1, (2048, 27)), jnp.float32)
+    v_true = analog_dot_product(I, W, circuit_params)
+    err = _err(predict_sigmoid(model27, I, W), v_true)
+    assert err.max() < 0.03
+
+
+def test_estimator_ablation_meanfield_vs_mean_of_f(bucket_model, circuit_params, mixed_iw):
+    """DESIGN.md §2 ablation: the step-1 estimate for heterogeneous windows.
+
+    Both estimators (f_avg at window means vs mean of per-pixel f_avg) must
+    select buckets accurately enough to keep the final prediction under the
+    paper's 3% bound; we ship mean-field and record the alternative here.
+    """
+    I, W = map(jnp.asarray, mixed_iw)
+    v_true = analog_dot_product(I, W, circuit_params)
+
+    # shipped estimator: f_avg(mean I, mean W)
+    est_mf = bucket_model.f_avg(I.mean(-1), W.mean(-1))
+    # alternative: mean_j f_avg(I_j, W_j)
+    est_mean = bucket_model.f_avg(I, W).mean(-1)
+
+    idx_true = np.clip((np.asarray(v_true) * 5).astype(int), 0, 4)
+    for name, est in (("mean_field", est_mf), ("mean_of_f", est_mean)):
+        idx = np.clip((np.asarray(est) * 5).astype(int), 0, 4)
+        agreement = (idx == idx_true).mean()
+        assert agreement > 0.9, f"{name}: bucket selection agreement {agreement:.3f}"
+    # mean-field must be at least as accurate as the alternative on RMSE
+    rmse_mf = float(jnp.sqrt(jnp.mean((est_mf - v_true) ** 2)))
+    rmse_mean = float(jnp.sqrt(jnp.mean((est_mean - v_true) ** 2)))
+    assert rmse_mf < rmse_mean * 1.5  # same ballpark; we ship the cheaper one

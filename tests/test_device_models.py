@@ -1,0 +1,113 @@
+"""Circuit-oracle invariants (the SPICE stand-in must behave like a circuit)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.device_models import CircuitParams, analog_dot_product, pixel_drive
+
+
+@pytest.fixture(scope="module")
+def params() -> CircuitParams:
+    return CircuitParams()
+
+
+def test_zero_input_gives_zero_output(params):
+    I = jnp.zeros((4, 75))
+    W = jnp.ones((4, 75)) * 0.5
+    v = analog_dot_product(I, W, params)
+    np.testing.assert_allclose(np.asarray(v), 0.0, atol=1e-7)
+    # zero weights likewise (padded NVM slots must contribute nothing)
+    v = analog_dot_product(jnp.ones((4, 75)), jnp.zeros((4, 75)), params)
+    np.testing.assert_allclose(np.asarray(v), 0.0, atol=1e-7)
+
+
+def test_output_bounded_by_supply(params):
+    I = jnp.ones((1, 75))
+    W = jnp.ones((1, 75))
+    v = float(analog_dot_product(I, W, params)[0])
+    assert 0.9 < v < params.v_sat  # full-scale drive saturates near (not at) v_sat
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 74), st.floats(0.1, 0.9), st.floats(0.1, 0.9))
+def test_monotone_in_each_pixel(j, base_i, base_w):
+    """dV/dI_j >= 0 and dV/dW_j >= 0: brighter pixel / higher conductance
+    can only pull the bitline higher."""
+    params = CircuitParams()
+    I = jnp.full((75,), base_i)
+    W = jnp.full((75,), base_w)
+
+    def f_i(x):
+        return analog_dot_product(I.at[j].set(x), W, params)
+
+    def f_w(x):
+        return analog_dot_product(I, W.at[j].set(x), params)
+
+    gi = jax.grad(f_i)(jnp.float32(base_i))
+    gw = jax.grad(f_w)(jnp.float32(base_w))
+    assert gi >= 0 and gw >= 0
+
+
+def test_coupling_is_weak_but_present(params):
+    """Marginal contribution of one pixel shrinks as the bitline rises —
+    the inter-pixel dependence the bucket model exists to capture."""
+    I_lo = jnp.full((75,), 0.1).at[0].set(0.0)
+    I_hi = jnp.full((75,), 0.9).at[0].set(0.0)
+    W = jnp.full((75,), 0.8)
+
+    def marginal(I_bg):
+        v0 = analog_dot_product(I_bg, W, params)
+        v1 = analog_dot_product(I_bg.at[0].set(1.0), W, params)
+        return float(v1 - v0)
+
+    m_lo, m_hi = marginal(I_lo), marginal(I_hi)
+    assert m_hi < m_lo            # loading compresses the marginal
+    assert m_hi > 0.1 * m_lo      # ... but never kills it (paper §4: own-(I,W)
+    #                               dependence stays strong in every bucket)
+
+
+def test_metal_line_effect_is_minor(params):
+    """Fig. 7(c)/(f): 0-5 mm weight-die distance changes the output only
+    slightly (the curvefit model stays valid across the whole range)."""
+    rng = np.random.default_rng(0)
+    I = jnp.asarray(rng.uniform(0, 1, (512, 75)), jnp.float32)
+    W = jnp.asarray(rng.uniform(0, 1, (512, 75)), jnp.float32)
+    v0 = analog_dot_product(I, W, params.replace(r_metal_mm=0.0))
+    v5 = analog_dot_product(I, W, params.replace(r_metal_mm=5.0))
+    rel = float(jnp.max(jnp.abs(v5 - v0))) / params.v_sat
+    assert rel < 0.02
+
+
+def test_fixed_point_converged(params):
+    """Doubling the fixed-point iterations must not change the answer."""
+    rng = np.random.default_rng(1)
+    I = jnp.asarray(rng.uniform(0, 1, (256, 75)), jnp.float32)
+    W = jnp.asarray(rng.uniform(0, 1, (256, 75)), jnp.float32)
+    v8 = analog_dot_product(I, W, params)
+    v16 = analog_dot_product(I, W, params.replace(fp_iters=16))
+    np.testing.assert_allclose(np.asarray(v8), np.asarray(v16), atol=1e-6)
+
+
+def test_pixel_drive_is_local(params):
+    """pixel_drive is elementwise — no cross-pixel terms (coupling lives only
+    in the bitline solve)."""
+    rng = np.random.default_rng(2)
+    I = jnp.asarray(rng.uniform(0, 1, (16,)), jnp.float32)
+    W = jnp.asarray(rng.uniform(0, 1, (16,)), jnp.float32)
+    g_batch = pixel_drive(I, W, params)
+    g_single = jnp.stack([pixel_drive(I[i], W[i], params) for i in range(16)])
+    np.testing.assert_allclose(np.asarray(g_batch), np.asarray(g_single), rtol=1e-6)
+
+
+def test_oracle_is_differentiable(params):
+    rng = np.random.default_rng(3)
+    I = jnp.asarray(rng.uniform(0.1, 0.9, (75,)), jnp.float32)
+    W = jnp.asarray(rng.uniform(0.1, 0.9, (75,)), jnp.float32)
+    g = jax.grad(lambda w: jnp.sum(analog_dot_product(I, w, params)))(W)
+    assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.max(g)) > 0

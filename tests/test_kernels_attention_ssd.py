@@ -1,0 +1,165 @@
+"""flash_attention + ssd Pallas kernels vs oracles (interpret mode)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas, flash_attention_ref
+from repro.kernels.ssd import ssd_chunked_pallas, ssd_intra_chunk_pallas, ssd_intra_chunk_ref
+from repro.models.ssm import ssd_chunked
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def _qkv(b, sq, sk, h, kv, d, dtype=jnp.float32, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, sq, h, d), dtype)
+    k = jax.random.normal(k2, (b, sk, kv, d), dtype)
+    v = jax.random.normal(k3, (b, sk, kv, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "b,s,h,kv,d,bq,bk,causal,window",
+    [
+        (1, 256, 4, 4, 64, 128, 128, True, None),    # MHA causal, exact tiles
+        (2, 200, 8, 2, 32, 64, 64, True, None),      # GQA, ragged seq
+        (1, 256, 4, 1, 64, 128, 64, False, None),    # MQA, bidirectional
+        (1, 300, 4, 2, 128, 128, 128, True, 64),     # sliding window
+    ],
+)
+def test_flash_matches_ref(b, s, h, kv, d, bq, bk, causal, window):
+    q, k, v = _qkv(b, s, s, h, kv, d)
+    got = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=bq, block_k=bk, interpret=True
+    )
+    want = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 3e-2)])
+def test_flash_dtype_sweep(dtype, tol):
+    q, k, v = _qkv(1, 192, 192, 4, 2, 64, dtype=dtype, seed=1)
+    got = flash_attention_pallas(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = flash_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+def test_flash_cross_attention_shapes():
+    """Sq != Sk (cross attention / prefix reuse)."""
+    q, _, _ = _qkv(2, 64, 64, 4, 2, 32, seed=2)
+    k2 = jax.random.normal(jax.random.PRNGKey(4), (2, 160, 2, 32))
+    v2 = jax.random.normal(jax.random.PRNGKey(5), (2, 160, 2, 32))
+    got = flash_attention_pallas(q, k2, v2, causal=False, block_q=64, block_k=64, interpret=True)
+    want = flash_attention_ref(q, k2, v2, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inputs(b, l, h, p, g, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, l, g, n))
+    C = jax.random.normal(ks[4], (b, l, g, n))
+    return x, dt, A, B, C
+
+
+@pytest.mark.parametrize(
+    "b,l,h,p,n,chunk",
+    [
+        (1, 128, 4, 64, 64, 64),     # two chunks
+        (2, 96, 2, 32, 16, 32),      # three chunks, small dims
+        (1, 64, 8, 64, 128, 64),     # single chunk, wide state
+    ],
+)
+def test_ssd_pallas_matches_model(b, l, h, p, n, chunk):
+    x, dt, A, B, C = _ssd_inputs(b, l, h, p, 1, n)
+    y_ref, s_ref = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    y_got, s_got = ssd_chunked_pallas(x, dt, A, B, C, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_ref), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_intra_kernel_vs_oracle():
+    b, nc, q, h, p, n = 2, 3, 32, 4, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    xbar = jax.random.normal(ks[0], (b, nc, q, h, p))
+    Bh = jax.random.normal(ks[1], (b, nc, q, h, n))
+    Ch = jax.random.normal(ks[2], (b, nc, q, h, n))
+    cum = -jnp.cumsum(jax.nn.softplus(jax.random.normal(ks[3], (b, nc, q, h))), axis=2)
+    y_ref, s_ref, _ = ssd_intra_chunk_ref(xbar, Bh, Ch, cum)
+    y_got, s_got = ssd_intra_chunk_pallas(xbar, Bh, Ch, cum, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    # kernel returns (N, P)-major states
+    np.testing.assert_allclose(
+        np.asarray(s_got.transpose(0, 1, 2, 4, 3)), np.asarray(s_ref), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ssd_initial_state_carries():
+    """Chaining two halves through initial_state == one full pass (the
+    invariant serving relies on)."""
+    x, dt, A, B, C = _ssd_inputs(1, 64, 2, 16, 1, 8, seed=9)
+    y_full, s_full = ssd_chunked(x, dt, A, B, C, chunk=16)
+    y1, s1 = ssd_chunked_pallas(
+        x[:, :32], dt[:, :32], A, B[:, :32], C[:, :32], chunk=16, interpret=True
+    )
+    y2, s2 = ssd_chunked_pallas(
+        x[:, 32:], dt[:, 32:], A, B[:, 32:], C[:, 32:],
+        chunk=16, initial_state=s1, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 32:]), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention backward kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,s,h,kv,d,bq,bk,causal,window",
+    [
+        (1, 192, 4, 4, 32, 64, 64, True, None),    # MHA causal
+        (2, 160, 4, 2, 32, 64, 64, True, None),    # GQA (group sum path)
+        (1, 128, 4, 1, 64, 64, 64, False, None),   # MQA bidirectional
+        (1, 200, 2, 2, 32, 64, 64, True, 48),      # sliding window, ragged
+    ],
+)
+def test_flash_bwd_kernel_matches_autodiff(b, s, h, kv, d, bq, bk, causal, window):
+    from repro.kernels.flash_attention.bwd_kernel import flash_attention_bwd_pallas
+    from repro.models.attention import _flash_fwd_impl, _grouped
+
+    q, k, v = _qkv(b, s, s, h, kv, d, seed=3)
+    g = jax.random.normal(jax.random.PRNGKey(9), (b, s, h, d))
+
+    # reference grads through the (already validated) full-attention path
+    def loss(q, k, v):
+        return jnp.sum(flash_attention_ref(q, k, v, causal=causal, window=window) * g)
+
+    dq_ref, dk_ref, dv_ref = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, bk)
+    dq, dk, dv = flash_attention_bwd_pallas(
+        q, k, v, out, lse, g, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(dq_ref), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_ref), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_ref), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,120 @@
+"""fpca_conv Pallas kernel vs pure-jnp oracle: shape/dtype/block sweeps.
+
+The kernel runs in ``interpret=True`` on CPU (Pallas executes the kernel body
+in Python); the oracle is built on the independently-tested core modules.
+The pipeline output is integer ADC counts, so "allclose" means: identical up
+to 1 count at rounding boundaries (summation-order effects), bit-identical
+almost everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adc import ADCConfig
+from repro.core.curvefit import fit_bucket_model
+from repro.core.fpca_sim import WeightEncoding, encode_weights, extract_windows, fpca_forward
+from repro.core.mapping import FPCASpec
+from repro.kernels.fpca_conv.kernel import fpca_conv_pallas
+from repro.kernels.fpca_conv.ops import fpca_conv, pad_to_lanes
+from repro.kernels.fpca_conv.ref import fpca_conv_ref
+
+
+def _data(m, c, n_real=75, n_pad=128, seed=0):
+    rng = np.random.default_rng(seed)
+    patches = np.zeros((m, n_pad), np.float32)
+    patches[:, :n_real] = rng.uniform(0, 1, (m, n_real))
+    w = np.zeros((n_pad, c), np.float32)
+    w[:n_real] = rng.uniform(0, 1, (n_real, c))
+    mask = np.zeros((n_pad,), np.float32)
+    mask[:n_real] = 1.0
+    bn = rng.integers(0, 30, (c,)).astype(np.float32)
+    return map(jnp.asarray, (patches, w, np.roll(w, 1, axis=1), mask, bn))
+
+
+def _compare(model, adc, m, c, block_m, block_c, seed=0, n_real=75):
+    patches, w_pos, w_neg, mask, bn = _data(m, c, n_real=n_real, seed=seed)
+    got = fpca_conv_pallas(
+        patches, w_pos, w_neg, model, adc, bn, mask=mask,
+        n_real=n_real, block_m=block_m, block_c=block_c, interpret=True,
+    )
+    want = fpca_conv_ref(patches, w_pos, w_neg, model, adc, bn, mask=mask)
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == want.shape == (m, c)
+    diff = np.abs(got - want)
+    assert diff.max() <= 1.0, f"max count diff {diff.max()}"
+    assert (diff > 0).mean() < 0.05, f"too many rounding flips: {(diff > 0).mean():.3f}"
+
+
+@pytest.mark.parametrize(
+    "m,c,block_m,block_c",
+    [
+        (64, 8, 64, 128),      # tiny
+        (256, 128, 128, 128),  # exact tiles
+        (300, 130, 256, 128),  # ragged M and C (padding path)
+        (1, 1, 64, 128),       # degenerate
+        (128, 16, 32, 64),     # small blocks, multi-program grid
+    ],
+)
+def test_kernel_matches_ref_8bit(bucket_model, m, c, block_m, block_c):
+    _compare(bucket_model, ADCConfig(bits=8), m, c, block_m, block_c)
+
+
+def test_kernel_matches_ref_high_resolution_adc(bucket_model):
+    """16-bit ADC: lsb = 15 uV, so a <=1-count agreement pins the analog
+    voltages of kernel and oracle to ~1e-5 V — a tight numeric validation."""
+    _compare(bucket_model, ADCConfig(bits=16), 128, 32, 64, 128)
+
+
+def test_kernel_small_pixel_count(circuit_params):
+    """27-pixel (3x3x3) configuration — different mask/n_real path."""
+    model27 = fit_bucket_model(circuit_params, n_pixels=27, grid=33)
+    _compare(model27, ADCConfig(bits=8), 96, 8, 64, 128, n_real=27)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtype_sweep(bucket_model, dtype):
+    """Patches arriving in bf16 (sensor pipeline) still validate — the kernel
+    upcasts to f32 internally."""
+    patches, w_pos, w_neg, mask, bn = _data(128, 8)
+    got = fpca_conv_pallas(
+        patches.astype(dtype), w_pos, w_neg, bucket_model, ADCConfig(), bn,
+        mask=mask, n_real=75, block_m=64, block_c=128, interpret=True,
+    )
+    want = fpca_conv_ref(patches, w_pos, w_neg, bucket_model, ADCConfig(), bn, mask=mask)
+    tol = 1.0 if dtype == jnp.float32 else 3.0  # bf16 input quantisation
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() <= tol
+
+
+def test_ops_wrapper_end_to_end(bucket_model, circuit_params):
+    """images -> fpca_conv (Pallas) == fpca_forward (core functional sim,
+    bucket_sigmoid mode) on the same weights."""
+    spec = FPCASpec(image_h=24, image_w=24, out_channels=6, kernel=3, stride=2)
+    key = jax.random.PRNGKey(0)
+    images = jax.random.uniform(jax.random.PRNGKey(1), (2, 24, 24, 3))
+    kernel = jax.random.normal(key, (6, 3, 3, 3)) * 0.2
+    adc, enc = ADCConfig(), WeightEncoding()
+    got = fpca_conv(
+        images, kernel, bucket_model, spec=spec, adc=adc, enc=enc,
+        block_m=64, block_c=128, interpret=True,
+    )
+    want = jax.vmap(
+        lambda im: fpca_forward(
+            im, kernel, spec, circuit=circuit_params, model=bucket_model,
+            adc=adc, enc=enc, mode="bucket_sigmoid", hard=True,
+        )["counts"]
+    )(images)
+    assert got.shape == want.shape == (2, 10, 10, 6)
+    diff = np.abs(np.asarray(got) - np.asarray(want))
+    assert diff.max() <= 1.0
+
+
+def test_pad_to_lanes():
+    x = jnp.ones((5, 75))
+    padded, mask = pad_to_lanes(x, axis=1)
+    assert padded.shape == (5, 128)
+    assert float(mask.sum()) == 75
+    np.testing.assert_array_equal(np.asarray(padded[:, 75:]), 0.0)

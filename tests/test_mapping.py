@@ -1,0 +1,123 @@
+"""Schedule/cycle-model invariants, incl. a property test of the paper's Eq. 1."""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mapping
+
+
+def _spec(**kw) -> mapping.FPCASpec:
+    defaults = dict(
+        image_h=64, image_w=64, out_channels=8, kernel=5, stride=1, max_kernel=5
+    )
+    defaults.update(kw)
+    return mapping.FPCASpec(**defaults)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(2, 7),
+    s=st.integers(1, 7),
+    c_o=st.integers(1, 32),
+    h=st.integers(16, 128),
+    w=st.integers(16, 128),
+)
+def test_eq1_cycle_count(n, s, c_o, h, w):
+    """N_C = 2 * h_o * c_o * lcm(S, n) / S  — against the explicit schedule."""
+    if s > n or h < n or w < n:
+        return
+    spec = _spec(image_h=h, image_w=w, out_channels=c_o, kernel=n, stride=s, max_kernel=n)
+    h_o = (h - n) // s + 1
+    expected = 2 * h_o * c_o * math.lcm(s, n) // s
+    assert mapping.n_cycles(spec) == expected
+    assert sum(1 for _ in mapping.schedule(spec)) == expected
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 6), s=st.integers(1, 6))
+def test_schedule_covers_every_window_once(n, s):
+    """Per (channel, sign), the phase groups partition the output columns, and
+    windows sharing a cycle occupy disjoint n-wide pixel-column groups."""
+    if s > n:
+        return
+    spec = _spec(image_h=32, image_w=32, out_channels=2, kernel=n, stride=s, max_kernel=n)
+    h_o, w_o = mapping.output_dims(spec)
+    seen = {}
+    for cyc in mapping.schedule(spec):
+        key = (cyc.sign, cyc.channel, cyc.out_row)
+        seen.setdefault(key, []).extend(cyc.window_cols.tolist())
+        starts = np.sort(cyc.window_cols * s)
+        if len(starts) > 1:
+            assert (np.diff(starts) >= n).all(), "parallel windows overlap columns"
+    for key, cols in seen.items():
+        assert sorted(cols) == list(range(w_o)), f"row not fully covered: {key}"
+
+
+def test_output_dims_use_physical_kernel():
+    """Logical k < n still maps the full n x n footprint (paper §3.4.1), so the
+    output grid is computed with n."""
+    s_small = _spec(kernel=3, max_kernel=5)
+    s_full = _spec(kernel=5, max_kernel=5)
+    assert mapping.output_dims(s_small) == mapping.output_dims(s_full)
+
+
+def test_colp_line_cycles_with_phase():
+    spec = _spec(stride=1)
+    lines = [c.colp_line for c in mapping.schedule(spec) if c.channel == 0 and c.out_row == 0]
+    # stride 1, n = 5 -> 5 phases mapping kernel columns 0..4 (paper Fig. 5).
+    assert sorted(set(lines)) == [0, 1, 2, 3, 4]
+
+
+def test_stride_validation():
+    with pytest.raises(ValueError):
+        _spec(stride=6, max_kernel=5)
+    with pytest.raises(ValueError):
+        _spec(kernel=7, max_kernel=5)
+
+
+def test_region_skipping_reduces_cycles():
+    spec = _spec(image_h=64, image_w=64, out_channels=4, stride=5, skip_block=8)
+    full = np.ones((8, 8), dtype=bool)
+    half = full.copy()
+    half[4:] = False
+    none = np.zeros((8, 8), dtype=bool)
+    c_full = mapping.n_cycles_with_skipping(spec, full)
+    c_half = mapping.n_cycles_with_skipping(spec, half)
+    c_none = mapping.n_cycles_with_skipping(spec, none)
+    assert c_full == mapping.n_cycles(spec)
+    assert c_none == 0
+    assert c_none < c_half < c_full
+
+
+def test_active_window_mask_boundary():
+    """A window overlapping a kept block even partially must stay active
+    (its RS/SW lines fire)."""
+    spec = _spec(image_h=16, image_w=16, out_channels=1, stride=1, skip_block=8)
+    mask = np.array([[True, False], [False, False]])
+    active = mapping.active_window_mask(spec, mask)
+    h_o, w_o = mapping.output_dims(spec)
+    assert active.shape == (h_o, w_o)
+    assert active[0, 0]          # fully inside the kept block
+    assert active[0, 7]          # straddles the boundary -> still active
+    assert not active[11, 11]    # fully inside skipped region
+
+
+def test_binning_shrinks_output():
+    s1 = _spec(image_h=64, image_w=64, binning=1)
+    s4 = _spec(image_h=64, image_w=64, binning=4)
+    h1, w1 = mapping.output_dims(s1)
+    h4, w4 = mapping.output_dims(s4)
+    assert h4 < h1 and w4 < w1
+    assert mapping.n_cycles(s4) < mapping.n_cycles(s1)
+
+
+def test_weights_per_column_formula():
+    """§3.2: 2 * n^2 * 3 * c_o NVM devices per pixel column."""
+    spec = _spec(out_channels=16)
+    assert spec.weights_per_column == 2 * 25 * 3 * 16
