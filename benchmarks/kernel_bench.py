@@ -10,9 +10,17 @@ The interesting derived number is the speedup of the basis form over the
 naive bucket evaluation — the payoff of the MXU-native reformulation
 (DESIGN.md §2); Pallas interpret-mode timings are not meaningful and are
 not reported.
+
+Also runs the **end-to-end batched frontend** benchmark: a frame batch
+through the serving pipeline (images -> windows -> fused kernel -> SS-ADC
+counts) versus a per-image loop, recorded to ``BENCH_frontend.json`` at the
+repo root.
 """
 
 from __future__ import annotations
+
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +32,8 @@ from repro.core.curvefit import fit_bucket_model, predict_sigmoid
 from repro.core.device_models import CircuitParams, analog_dot_product
 from repro.kernels.fpca_conv.kernel import _bucket_tables, precompute_weight_planes
 from repro.kernels.fpca_conv.ref import fpca_conv_ref
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_frontend.json"
 
 
 def _basis_form(patches, w, model):
@@ -63,6 +73,68 @@ def _basis_form(patches, w, model):
     return v_pred
 
 
+def _frontend_rows(model) -> list[Row]:
+    """End-to-end batched frontend throughput (serving pipeline, basis
+    backend — the CPU-lowered form of the Pallas kernel's math); writes
+    ``BENCH_frontend.json``."""
+    from repro.core.fpca_sim import fpca_forward
+    from repro.core.mapping import FPCASpec, output_dims
+    from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
+
+    B, H = 32, 120
+    spec = FPCASpec(image_h=H, image_w=H, out_channels=8, kernel=5, stride=5)
+    rng = np.random.default_rng(0)
+    kernel = jnp.asarray(rng.normal(size=(8, 5, 5, 3)) * 0.2, jnp.float32)
+    frames = rng.uniform(0, 1, (B, H, H, 3)).astype(np.float32)
+
+    pipe = FPCAPipeline(model, backend="basis")
+    pipe.register("bench", spec, kernel)
+    reqs = [FrontendRequest("bench", frames[i]) for i in range(B)]
+    us_batched = time_fn(lambda: pipe.submit(reqs), iters=5)
+
+    # per-image loop over the same fused backend: what batching buys
+    # (a real B-iteration loop, not an extrapolated singleton timing)
+    singles = [[FrontendRequest("bench", frames[i])] for i in range(B)]
+    us_loop = time_fn(lambda: [pipe.submit(s) for s in singles], iters=3)
+
+    # dense reference simulation, batched (the pre-kernel path)
+    ref = jax.jit(
+        lambda imgs: fpca_forward(
+            imgs, kernel, spec, model=model, mode="bucket_sigmoid", hard=True
+        )["counts"]
+    )
+    us_ref = time_fn(ref, jnp.asarray(frames), iters=5)
+
+    h_o, w_o = output_dims(spec)
+    frames_per_s = B / (us_batched * 1e-6)
+    record = {
+        "workload": {
+            "batch": B, "image": [H, H, 3],
+            "spec": {"kernel": spec.kernel, "stride": spec.stride,
+                     "out_channels": spec.out_channels, "binning": spec.binning},
+            "windows_per_frame": h_o * w_o,
+        },
+        "backend": "basis (XLA lowering of the Pallas kernel math)",
+        "us_per_batch": us_batched,
+        "frames_per_s": frames_per_s,
+        "windows_per_s": frames_per_s * h_o * w_o,
+        "us_per_image_loop": us_loop,
+        "speedup_vs_per_image_loop": us_loop / us_batched,
+        "us_dense_reference_batch": us_ref,
+        "speedup_vs_dense_reference": us_ref / us_batched,
+    }
+    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    return [
+        ("frontend_e2e_batched", us_batched,
+         f"B={B} {H}x{H} -> {frames_per_s:.0f} frames/s "
+         f"speedup_vs_loop={record['speedup_vs_per_image_loop']:.1f}x "
+         f"(json: {BENCH_JSON.name})"),
+        ("frontend_e2e_per_image_loop", us_loop, f"B={B} singleton submits"),
+        ("frontend_e2e_dense_reference", us_ref,
+         f"speedup_of_kernel={record['speedup_vs_dense_reference']:.1f}x"),
+    ]
+
+
 def run() -> list[Row]:
     params = CircuitParams()
     model = fit_bucket_model(params)
@@ -97,4 +169,5 @@ def run() -> list[Row]:
          f"speedup_vs_naive={us_naive/us_basis:.1f}x max|dV|={err:.2e} "
          "(MXU-native matmul-bank reformulation)"),
     ]
+    rows += _frontend_rows(model)
     return rows

@@ -1,0 +1,76 @@
+"""JAX version compatibility layer.
+
+The repo targets the modern sharding API (``jax.sharding.set_mesh`` /
+``get_abstract_mesh`` / ``AxisType``, dict-valued ``Compiled.cost_analysis``),
+but must also run on jax 0.4.x where none of those exist.  Everything that
+touches a version-dependent surface goes through here so the rest of the
+codebase stays on one idiom.
+
+Shims provided:
+
+* :func:`get_abstract_mesh` — the ambient mesh seen at trace time, or ``None``
+  (on 0.4.x this is the legacy ``thread_resources`` physical mesh set by the
+  ``with mesh:`` / :func:`set_mesh` context);
+* :func:`set_mesh` — context manager installing an ambient mesh for in-graph
+  sharding constraints (``jax.sharding.set_mesh`` when available, the legacy
+  ``Mesh.__enter__`` context otherwise);
+* :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types`` only where the
+  installed jax knows about ``AxisType``;
+* :func:`cost_analysis_dict` — normalises ``Compiled.cost_analysis()`` (a
+  one-element list on 0.4.x, a flat dict on newer jax) to a dict.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator
+
+import jax
+
+__all__ = ["get_abstract_mesh", "set_mesh", "make_mesh", "cost_analysis_dict"]
+
+_HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_SET_MESH = hasattr(jax.sharding, "set_mesh")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def get_abstract_mesh():
+    """Ambient mesh during tracing, or ``None`` when no mesh is installed.
+
+    Callers only rely on ``.empty`` / ``.axis_names``, which both the modern
+    AbstractMesh and the legacy physical Mesh expose.
+    """
+    if _HAS_ABSTRACT_MESH:
+        return jax.sharding.get_abstract_mesh()
+    from jax.interpreters import pxla
+
+    return pxla.thread_resources.env.physical_mesh
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: jax.sharding.Mesh) -> Iterator[jax.sharding.Mesh]:
+    """Install ``mesh`` as the ambient mesh for in-graph sharding constraints."""
+    if _HAS_SET_MESH:
+        with jax.sharding.set_mesh(mesh):
+            yield mesh
+    else:
+        # legacy: Mesh is itself a context manager feeding thread_resources
+        with mesh:
+            yield mesh
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
+def cost_analysis_dict(compiled: Any) -> dict:
+    """``Compiled.cost_analysis()`` as a dict on every supported jax."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return dict(cost)

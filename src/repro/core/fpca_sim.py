@@ -13,8 +13,20 @@ Three evaluation modes share one code path:
 * ``"bucket_hard"``    — paper's step-function bucket select;
 * ``"bucket_sigmoid"`` — paper's differentiable single equation (trainable).
 
-All windows of all cycles are evaluated batched (the MXU-friendly layout);
-the cycle *schedule* is accounted analytically by the energy/latency models.
+Two execution backends serve those modes (``fpca_forward(backend=...)``):
+
+* ``"reference"`` — the dense jnp path in this module (every mode; the only
+  differentiable backend, used for training and as the parity oracle);
+* ``"pallas"`` / ``"basis"`` — the fused production kernels in
+  :mod:`repro.kernels.fpca_conv` (``bucket_sigmoid`` + hard ADC only, i.e.
+  deployment-mode serving of the calibrated sensor model).  ``"pallas"`` is
+  the TPU kernel (``interpret=True`` elsewhere); ``"basis"`` is the same
+  basis-expanded matmul-bank math lowered through XLA — the fast path on
+  hosts where Pallas does not compile.
+
+Images may carry a leading batch dimension; all windows of all frames are
+evaluated through one fused call (the MXU-friendly layout); the cycle
+*schedule* is accounted analytically by the energy/latency models.
 """
 
 from __future__ import annotations
@@ -40,6 +52,7 @@ __all__ = [
 ]
 
 Mode = Literal["oracle", "bucket_hard", "bucket_sigmoid"]
+Backend = Literal["reference", "pallas", "basis"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,33 +104,50 @@ def encode_weights(
 
 
 def extract_windows(image: jax.Array, spec: mapping.FPCASpec) -> jax.Array:
-    """Image -> photocurrent windows, shape ``(h_o, w_o, c_i*n*n)``.
+    """Image(s) -> photocurrent windows.
+
+    Accepts one image ``(H, W, c_i)`` or a batch ``(B, H, W, c_i)``; returns
+    ``(h_o, w_o, c_i*n*n)`` or ``(B, h_o, w_o, c_i*n*n)`` respectively.  The
+    batched path is a single fused extraction (no per-image Python loop), so
+    it is jit/vmap-friendly and shards cleanly over a leading data axis.
 
     Applies pixel binning (average pool, Fig. 9(b)) and zero padding first.
     Flattening is channel-major ``(c_i, n, n)`` to match ``encode_weights``.
     """
-    if image.ndim != 3 or image.shape[-1] != spec.in_channels:
-        raise ValueError(f"expected (H, W, {spec.in_channels}) image, got {image.shape}")
+    squeeze = image.ndim == 3
+    if squeeze:
+        image = image[None]
+    if image.ndim != 4 or image.shape[-1] != spec.in_channels:
+        raise ValueError(
+            f"expected (H, W, {spec.in_channels}) or (B, H, W, {spec.in_channels}) "
+            f"image, got {image.shape}"
+        )
     img = jnp.asarray(image, jnp.float32)
     b = spec.binning
     if b > 1:
-        h, w, c = img.shape
-        img = img[: h // b * b, : w // b * b].reshape(h // b, b, w // b, b, c).mean((1, 3))
+        B, h, w, c = img.shape
+        img = (
+            img[:, : h // b * b, : w // b * b]
+            .reshape(B, h // b, b, w // b, b, c)
+            .mean((2, 4))
+        )
     n, s, p = spec.max_kernel, spec.stride, spec.padding
     if s == n and p == 0:
         # non-overlapping windows (the paper's energy-optimal stride): a pure
         # reshape — no gather/conv work at all (perf path, §Perf target 3)
-        h, w, c = img.shape
+        B, h, w, c = img.shape
         h_o, w_o = h // n, w // n
-        tiles = img[: h_o * n, : w_o * n].reshape(h_o, n, w_o, n, c)
-        return tiles.transpose(0, 2, 4, 1, 3).reshape(h_o, w_o, c * n * n)
-    patches = jax.lax.conv_general_dilated_patches(
-        img[None].transpose(0, 3, 1, 2),          # NCHW
-        filter_shape=(n, n),
-        window_strides=(s, s),
-        padding=((p, p), (p, p)),
-    )                                               # (1, c_i*n*n, h_o, w_o)
-    return jnp.transpose(patches[0], (1, 2, 0))     # (h_o, w_o, c_i*n*n)
+        tiles = img[:, : h_o * n, : w_o * n].reshape(B, h_o, n, w_o, n, c)
+        out = tiles.transpose(0, 1, 3, 5, 2, 4).reshape(B, h_o, w_o, c * n * n)
+    else:
+        patches = jax.lax.conv_general_dilated_patches(
+            img.transpose(0, 3, 1, 2),              # NCHW
+            filter_shape=(n, n),
+            window_strides=(s, s),
+            padding=((p, p), (p, p)),
+        )                                           # (B, c_i*n*n, h_o, w_o)
+        out = jnp.transpose(patches, (0, 2, 3, 1))  # (B, h_o, w_o, c_i*n*n)
+    return out[0] if squeeze else out
 
 
 def _analog_read(
@@ -152,17 +182,59 @@ def fpca_forward(
     mode: Mode = "oracle",
     hard: bool = True,
     block_mask: np.ndarray | None = None,
+    backend: Backend = "reference",
+    interpret: bool | None = None,
 ) -> dict[str, jax.Array]:
-    """Simulate the FPCA frontend for one image.
+    """Simulate the FPCA frontend for one image or a batch of images.
 
-    Returns a dict with ``counts`` (integer SS-ADC output, ``(h_o, w_o, c_o)``),
-    plus the raw ``v_pos`` / ``v_neg`` bitline voltages for analysis.
+    ``image`` is ``(H, W, c_i)`` or ``(B, H, W, c_i)``; ``counts`` in the
+    returned dict follows with ``(h_o, w_o, c_o)`` or ``(B, h_o, w_o, c_o)``
+    (integer SS-ADC output).
+
+    ``backend="reference"`` (default) is the dense jnp simulation and also
+    returns the raw ``v_pos`` / ``v_neg`` bitline voltages for analysis.
+    ``backend="pallas"`` / ``"basis"`` dispatch deployment-mode evaluation to
+    the fused production kernel (:func:`repro.kernels.fpca_conv.ops.fpca_conv`):
+    one flattened ``(B*h_o*w_o, N)`` patch matrix through a single kernel call
+    with the SS-ADC epilogue fused in, so only ``counts`` is available.  The
+    fused backends implement the calibrated bucket-sigmoid model with hard ADC
+    rounding — they require ``mode="bucket_sigmoid"``, ``hard=True`` and a
+    fitted ``model``; ``interpret`` is forwarded to Pallas (default: interpret
+    off-TPU).
     """
     circuit = circuit or CircuitParams()
     adc = adc or ADCConfig()
     enc = enc or WeightEncoding()
+    if backend not in ("reference", "pallas", "basis"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend != "reference":
+        if mode != "bucket_sigmoid" or not hard:
+            raise ValueError(
+                f"backend={backend!r} serves the calibrated bucket model with hard "
+                "ADC rounding (mode='bucket_sigmoid', hard=True); use "
+                "backend='reference' for the circuit oracle or training"
+            )
+        if model is None:
+            raise ValueError("fused backends need a fitted BucketCurvefitModel")
+        from repro.kernels.fpca_conv.ops import fpca_conv  # circular at import time
+
+        images = image if image.ndim == 4 else image[None]
+        c_o = kernel.shape[0]
+        bn = jnp.broadcast_to(
+            jnp.asarray(bn_offset_counts, jnp.float32).reshape(-1), (c_o,)
+        )
+        counts = fpca_conv(
+            images, kernel, model, spec=spec, adc=adc, enc=enc, bn_offset=bn,
+            impl=backend, interpret=interpret,
+        )
+        if image.ndim == 3:
+            counts = counts[0]
+        if block_mask is not None:
+            keep = jnp.asarray(mapping.active_window_mask(spec, block_mask))
+            counts = counts * keep[..., None]
+        return {"counts": counts}
     w_pos, w_neg = encode_weights(kernel, spec, enc, hard=hard)
-    I = extract_windows(image, spec)                      # (h_o, w_o, N)
+    I = extract_windows(image, spec)                      # ([B,] h_o, w_o, N)
     n_active = spec.n_active_pixels
     v_pos = _analog_read(I, w_pos, mode, circuit, model, n_active)
     v_neg = _analog_read(I, w_neg, mode, circuit, model, n_active)

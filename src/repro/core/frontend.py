@@ -75,29 +75,36 @@ class FPCAFrontend:
         images: jax.Array,
         *,
         train: bool = True,
+        backend: str = "reference",
     ) -> jax.Array:
         """images ``(B, H, W, c_i)`` in [0, 1] -> activations ``(B, h_o, w_o, c_o)``.
 
-        ``train=True``: differentiable path (sigmoid bucket model + STEs).
-        ``train=False``: deployment path (circuit oracle + hard quantisation).
+        ``train=True``: differentiable path (sigmoid bucket model + STEs);
+        reference backend only.
+        ``train=False``: deployment path.  ``backend="reference"`` evaluates
+        the circuit oracle (ground truth); ``backend="pallas"`` / ``"basis"``
+        serve the calibrated bucket model through the fused production kernel
+        — the whole batch in one flattened kernel call.
         """
         cfg = self.config
-        mode = "bucket_sigmoid" if train else "oracle"
-
-        def _one(img: jax.Array) -> jax.Array:
-            out = fpca_forward(
-                img,
-                params["kernel"],
-                cfg.spec,
-                circuit=cfg.circuit,
-                model=self.model,
-                adc=cfg.adc,
-                enc=cfg.enc,
-                bn_offset_counts=params["bn_offset"],
-                mode=mode,
-                hard=not train,
+        if train and backend != "reference":
+            raise ValueError(
+                "training needs the differentiable reference backend "
+                "(fused kernels round the ADC hard)"
             )
-            # counts -> approximate convolution units (digital gain calibration)
-            return out["counts"] * (cfg.adc.lsb * self.gain)
-
-        return jax.vmap(_one)(images)
+        mode = "bucket_sigmoid" if (train or backend != "reference") else "oracle"
+        out = fpca_forward(
+            images,
+            params["kernel"],
+            cfg.spec,
+            circuit=cfg.circuit,
+            model=self.model,
+            adc=cfg.adc,
+            enc=cfg.enc,
+            bn_offset_counts=params["bn_offset"],
+            mode=mode,
+            hard=not train,
+            backend=backend,
+        )
+        # counts -> approximate convolution units (digital gain calibration)
+        return out["counts"] * (cfg.adc.lsb * self.gain)

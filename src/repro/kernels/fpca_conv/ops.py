@@ -1,9 +1,16 @@
 """Jitted public wrapper for the fpca_conv kernel: batched images in,
 SS-ADC activation maps out.
 
-Backend dispatch: Pallas-compiled on TPU, ``interpret=True`` elsewhere (the
-kernel body runs in Python on CPU for validation).  The pure-jnp oracle lives
-in :mod:`repro.kernels.fpca_conv.ref`.
+Backend dispatch (``impl``): ``"pallas"`` is the TPU kernel — Pallas-compiled
+on TPU, ``interpret=True`` elsewhere (the kernel body runs in Python on CPU
+for validation); ``"basis"`` lowers the identical basis-expanded matmul-bank
+math through XLA (:func:`fpca_conv_basis_jnp`) — the fast serving path on
+hosts where Pallas does not compile.  The pure-jnp oracle lives in
+:mod:`repro.kernels.fpca_conv.ref`.
+
+Window extraction is batched natively: ``(B, H, W, c_i)`` images become one
+flattened ``(B*h_o*w_o, N)`` patch matrix feeding a single fused kernel call
+(no per-image Python loop).
 
 The fitted :class:`BucketCurvefitModel` enters the jitted function as a
 *static* argument (hashable tuple encoding): its coefficient tables are baked
@@ -25,7 +32,14 @@ from repro.core.fpca_sim import WeightEncoding, encode_weights, extract_windows
 from repro.core.mapping import FPCASpec
 from repro.kernels.fpca_conv.kernel import fpca_conv_pallas
 
-__all__ = ["fpca_conv", "fpca_conv_basis_jnp", "pad_to_lanes", "freeze_model", "thaw_model"]
+__all__ = [
+    "fpca_conv",
+    "fpca_conv_basis_jnp",
+    "make_fpca_conv_executable",
+    "pad_to_lanes",
+    "freeze_model",
+    "thaw_model",
+]
 
 _LANES = 128
 
@@ -163,11 +177,7 @@ def fpca_conv_basis_jnp(
     return jnp.clip(bn_offset[None, :] + up - down, 0, adc.levels - 1)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("frozen", "spec", "adc", "enc", "block_m", "block_c", "interpret"),
-)
-def _fpca_conv_jit(
+def _fpca_conv_impl(
     images: jax.Array,
     kernel: jax.Array,
     bn_offset: jax.Array,
@@ -179,29 +189,86 @@ def _fpca_conv_jit(
     block_m: int,
     block_c: int,
     interpret: bool | None,
+    impl: str,
 ) -> jax.Array:
     model = thaw_model(frozen)
     w_pos, w_neg = encode_weights(kernel, spec, enc)            # (c_o, N)
-    patches = jax.vmap(lambda im: extract_windows(im, spec))(images)
+    patches = extract_windows(images, spec)                     # (B, h_o, w_o, N)
     B, h_o, w_o, N = patches.shape
     flat = patches.reshape(B * h_o * w_o, N)
     flat, mask = pad_to_lanes(flat, axis=1)
     w_pos_p, _ = pad_to_lanes(w_pos.T, axis=0)                  # (Np, c_o)
     w_neg_p, _ = pad_to_lanes(w_neg.T, axis=0)
-    counts = fpca_conv_pallas(
-        flat,
-        w_pos_p,
-        w_neg_p,
-        model,
-        adc,
-        bn_offset,
-        mask=mask,
-        n_real=spec.n_active_pixels,
-        block_m=block_m,
-        block_c=block_c,
-        interpret=interpret,
-    )
+    if impl == "basis":
+        counts = fpca_conv_basis_jnp(
+            flat,
+            w_pos_p,
+            w_neg_p,
+            model,
+            adc,
+            bn_offset,
+            mask=mask,
+            n_real=spec.n_active_pixels,
+        )
+    else:
+        counts = fpca_conv_pallas(
+            flat,
+            w_pos_p,
+            w_neg_p,
+            model,
+            adc,
+            bn_offset,
+            mask=mask,
+            n_real=spec.n_active_pixels,
+            block_m=block_m,
+            block_c=block_c,
+            interpret=interpret,
+        )
     return counts.reshape(B, h_o, w_o, -1)
+
+
+_fpca_conv_jit = functools.partial(
+    jax.jit,
+    static_argnames=(
+        "frozen", "spec", "adc", "enc", "block_m", "block_c", "interpret", "impl",
+    ),
+)(_fpca_conv_impl)
+
+
+def make_fpca_conv_executable(
+    model: BucketCurvefitModel,
+    *,
+    spec: FPCASpec,
+    adc: ADCConfig | None = None,
+    enc: WeightEncoding | None = None,
+    block_m: int = 256,
+    block_c: int = 128,
+    interpret: bool | None = None,
+    impl: str = "pallas",
+):
+    """A fresh jitted ``(images, kernel, bn_offset) -> counts`` executable.
+
+    Unlike :func:`fpca_conv` (which shares the module-level jit cache), each
+    call returns an independently-jitted closure whose compiled programs die
+    with it — this is what lets a serving cache genuinely *bound* live
+    executables by dropping references (see
+    :class:`repro.serving.fpca_pipeline.FPCAPipeline`).
+    """
+    adc = adc or ADCConfig()
+    enc = enc or WeightEncoding()
+    if impl not in ("pallas", "basis"):
+        raise ValueError(f"unknown impl {impl!r}")
+    frozen = freeze_model(model)
+
+    @jax.jit
+    def run(images: jax.Array, kernel: jax.Array, bn_offset: jax.Array) -> jax.Array:
+        return _fpca_conv_impl(
+            images, kernel, bn_offset,
+            frozen=frozen, spec=spec, adc=adc, enc=enc,
+            block_m=block_m, block_c=block_c, interpret=interpret, impl=impl,
+        )
+
+    return run
 
 
 def fpca_conv(
@@ -216,6 +283,7 @@ def fpca_conv(
     block_m: int = 256,
     block_c: int = 128,
     interpret: bool | None = None,
+    impl: str = "pallas",
 ) -> jax.Array:
     """FPCA frontend activations for a batch of images.
 
@@ -223,12 +291,16 @@ def fpca_conv(
       images: ``(B, H, W, c_i)`` float in [0, 1].
       kernel: ``(c_o, k, k, c_i)`` float weights.
       model:  fitted :class:`BucketCurvefitModel` for ``spec.n_active_pixels``.
+      impl:   ``"pallas"`` (TPU kernel; interpret-mode elsewhere) or
+              ``"basis"`` (same math lowered through XLA — fast on CPU).
 
     Returns:
       SS-ADC counts, ``(B, h_o, w_o, c_o)`` float32 (integer-valued).
     """
     adc = adc or ADCConfig()
     enc = enc or WeightEncoding()
+    if impl not in ("pallas", "basis"):
+        raise ValueError(f"unknown impl {impl!r}")
     c_o = kernel.shape[0]
     if bn_offset is None:
         bn_offset = jnp.zeros((c_o,), jnp.float32)
@@ -243,4 +315,5 @@ def fpca_conv(
         block_m=block_m,
         block_c=block_c,
         interpret=interpret,
+        impl=impl,
     )

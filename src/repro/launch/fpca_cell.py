@@ -99,7 +99,7 @@ def build_fpca_cell(
     def step(images, kernel, bn_offset):
         m = thaw_model(frozen)
         w_pos, w_neg = encode_weights(kernel, group_spec, enc)
-        patches = jax.vmap(lambda im: extract_windows(im, group_spec))(images)
+        patches = extract_windows(images, group_spec)   # batched natively
         Bg, h_o, w_o, N = patches.shape
         flat = patches.reshape(Bg * h_o * w_o, N)
         flat, mask = pad_to_lanes(flat, axis=1)

@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro import compat
+
 __all__ = ["make_production_mesh", "make_host_mesh", "data_axes"]
 
 
@@ -23,9 +25,7 @@ def _mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) == n:
-        return jax.make_mesh(
-            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-        )
+        return compat.make_mesh(shape, axes)
     if len(devices) < n:
         raise RuntimeError(
             f"need {n} devices for mesh {dict(zip(axes, shape))}, have {len(devices)} — "

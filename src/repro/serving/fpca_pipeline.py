@@ -1,0 +1,297 @@
+"""Batched multi-spec FPCA frontend serving pipeline.
+
+The paper's headline claim is *field-programmability*: one pixel array serves
+many (kernel, stride, channel, binning) configurations.  This module is the
+serving-side counterpart — a reconfiguration scheduler that accepts a
+heterogeneous stream of frontend requests, buckets them by their
+compiled-kernel signature, and drives each bucket through one fused batched
+call of the production kernel (:func:`repro.kernels.fpca_conv.ops.fpca_conv`).
+
+Flow per :meth:`FPCAPipeline.submit`:
+
+1. every request names a registered *configuration* (an :class:`FPCASpec`
+   plus programmed NVM weights — what a physical FPCA would hold in its
+   weight die) and carries one frame;
+2. requests are grouped by configuration; each group's frames are stacked
+   into one ``(B, H, W, c_i)`` batch, padded up to a power-of-two bucket (and
+   to the mesh's data-axis extent) so recompiles stay bounded;
+3. each group runs through a jitted executable fetched from a **bounded LRU
+   cache** keyed by the configuration's compile signature
+   (:func:`spec_signature`) — configurations sharing (spec, c_o, adc, enc)
+   share one executable because weights enter traced, mirroring how a
+   deployment reprograms NVM planes without recompiling the readout;
+4. results are un-padded, region-skip masks applied, and scattered back to
+   the original request order.
+
+Backend selection mirrors :func:`repro.core.fpca_sim.fpca_forward`:
+``"pallas"`` on TPU (interpret-mode elsewhere — validation only), ``"basis"``
+for the XLA lowering of the same math (the fast path on CPU hosts), and data
+parallelism over a host/production mesh via :mod:`repro.launch.mesh` helpers.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adc import ADCConfig
+from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
+from repro.core.fpca_sim import WeightEncoding
+from repro.core.mapping import FPCASpec, active_window_mask, output_dims
+from repro.kernels.fpca_conv.ops import make_fpca_conv_executable
+from repro.launch.mesh import data_axes
+
+__all__ = [
+    "FrontendRequest",
+    "FrontendConfig",
+    "PipelineStats",
+    "FPCAPipeline",
+    "spec_signature",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """One programmed FPCA configuration (spec + NVM weight planes)."""
+
+    name: str
+    spec: FPCASpec
+    kernel: jax.Array               # (c_o, k, k, c_i)
+    bn_offset: jax.Array            # (c_o,) counts
+
+    @property
+    def out_shape(self) -> tuple[int, int, int]:
+        h_o, w_o = output_dims(self.spec)
+        return (h_o, w_o, self.spec.out_channels)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendRequest:
+    """One frame for one registered configuration."""
+
+    config: str                     # registered FrontendConfig name
+    image: Any                      # (H, W, c_i) float in [0, 1]
+    block_mask: np.ndarray | None = None   # region skipping (§3.4.5)
+
+
+def spec_signature(
+    spec: FPCASpec, out_channels: int, adc: ADCConfig, enc: WeightEncoding
+) -> tuple:
+    """Hashable compiled-kernel signature.
+
+    Everything that is *static* to the jitted executable: the spec pins patch
+    geometry, ``out_channels`` the weight-plane width, adc/enc the epilogue
+    constants.  Weights and BN offsets enter traced, so reprogramming the
+    NVM planes does NOT change the signature (no recompile — the point of
+    field-programmability).
+    """
+    return (spec, out_channels, adc, enc)
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    requests: int = 0
+    batches: int = 0                # fused kernel invocations
+    cache_hits: int = 0
+    cache_misses: int = 0
+    evictions: int = 0
+
+
+class _ExecutableCache:
+    """Bounded LRU of jitted executables keyed by compile signature."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: collections.OrderedDict[tuple, Callable] = collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def get(self, key: tuple, build: Callable[[], Callable], stats: PipelineStats) -> Callable:
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            stats.cache_hits += 1
+            return self._entries[key]
+        stats.cache_misses += 1
+        fn = build()
+        self._entries[key] = fn
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            stats.evictions += 1
+        return fn
+
+
+def _round_up_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+class FPCAPipeline:
+    """Spec-bucketed reconfiguration scheduler over the fused FPCA kernel.
+
+    Args:
+      model: fitted :class:`BucketCurvefitModel` (or dict keyed by
+        ``n_active_pixels``); missing entries are fitted on demand (a one-off
+        ~seconds cost per pixel count, as a deployment would calibrate once).
+      backend: ``"pallas"`` or ``"basis"`` (see module docstring); ``None``
+        (default) auto-selects by platform — Pallas on TPU, the XLA basis
+        form elsewhere (interpret-mode Pallas is validation-only, far too
+        slow to serve).
+      mesh: optional ``jax.sharding.Mesh`` — batches are sharded over its
+        data axes (:func:`repro.launch.mesh.data_axes`) for data-parallel
+        serving; batch padding also rounds up to the data-axis extent.
+      cache_capacity: bound on simultaneously-held jitted executables.
+    """
+
+    def __init__(
+        self,
+        model: BucketCurvefitModel | dict[int, BucketCurvefitModel] | None = None,
+        *,
+        adc: ADCConfig | None = None,
+        enc: WeightEncoding | None = None,
+        backend: str | None = None,
+        interpret: bool | None = None,
+        cache_capacity: int = 8,
+        mesh: jax.sharding.Mesh | None = None,
+    ):
+        if backend is None:
+            backend = "pallas" if jax.default_backend() == "tpu" else "basis"
+        if backend not in ("pallas", "basis"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.adc = adc or ADCConfig()
+        self.enc = enc or WeightEncoding()
+        self.backend = backend
+        self.interpret = interpret
+        self.mesh = mesh
+        self._models: dict[int, BucketCurvefitModel] = {}
+        if isinstance(model, BucketCurvefitModel):
+            self._models[model.n_pixels] = model
+        elif isinstance(model, dict):
+            self._models.update(model)
+        self._configs: dict[str, FrontendConfig] = {}
+        self._cache = _ExecutableCache(cache_capacity)
+        self.stats = PipelineStats()
+
+    # -- configuration registry ----------------------------------------------
+    def register(
+        self,
+        name: str,
+        spec: FPCASpec,
+        kernel: jax.Array,
+        bn_offset: jax.Array | None = None,
+    ) -> FrontendConfig:
+        """Program one FPCA configuration (idempotent per unique name)."""
+        if name in self._configs:
+            raise ValueError(f"config {name!r} already registered")
+        c_o = int(kernel.shape[0])
+        if bn_offset is None:
+            bn_offset = jnp.zeros((c_o,), jnp.float32)
+        cfg = FrontendConfig(
+            name=name,
+            spec=spec,
+            kernel=jnp.asarray(kernel, jnp.float32),
+            bn_offset=jnp.asarray(bn_offset, jnp.float32),
+        )
+        self._configs[name] = cfg
+        return cfg
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    def _model_for(self, n_pixels: int) -> BucketCurvefitModel:
+        if n_pixels not in self._models:
+            self._models[n_pixels] = fit_bucket_model(n_pixels=n_pixels)
+        return self._models[n_pixels]
+
+    # -- scheduling ----------------------------------------------------------
+    def group_requests(
+        self, requests: Sequence[FrontendRequest]
+    ) -> dict[str, list[int]]:
+        """Request indices bucketed by configuration (insertion-ordered)."""
+        groups: dict[str, list[int]] = {}
+        for i, req in enumerate(requests):
+            if req.config not in self._configs:
+                raise KeyError(f"unknown config {req.config!r}")
+            groups.setdefault(req.config, []).append(i)
+        return groups
+
+    def _padded_batch(self, b: int) -> int:
+        padded = _round_up_pow2(b)
+        if self.mesh is not None:
+            n_data = int(np.prod([self.mesh.shape[a] for a in data_axes(self.mesh)]))
+            padded = -(-padded // n_data) * n_data
+        return padded
+
+    def _executable(self, cfg: FrontendConfig) -> Callable:
+        sig = spec_signature(cfg.spec, int(cfg.kernel.shape[0]), self.adc, self.enc)
+
+        def build() -> Callable:
+            # a FRESH jit per signature: the compiled programs are owned by
+            # this closure, so LRU eviction genuinely frees the executable
+            # (the shared fpca_conv entry point would keep them alive in the
+            # module-level jit cache).
+            return make_fpca_conv_executable(
+                self._model_for(cfg.spec.n_active_pixels),
+                spec=cfg.spec, adc=self.adc, enc=self.enc,
+                impl=self.backend, interpret=self.interpret,
+            )
+
+        return self._cache.get(sig, build, self.stats)
+
+    def _shard_batch(self, images: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return images
+        P = jax.sharding.PartitionSpec
+        sharding = jax.sharding.NamedSharding(
+            self.mesh, P(data_axes(self.mesh), *([None] * (images.ndim - 1)))
+        )
+        return jax.device_put(images, sharding)
+
+    def submit(self, requests: Sequence[FrontendRequest]) -> list[jax.Array]:
+        """Serve a heterogeneous request mix; results in request order.
+
+        Returns one SS-ADC count map ``(h_o, w_o, c_o)`` per request.
+        """
+        results: list[jax.Array | None] = [None] * len(requests)
+        groups = self.group_requests(requests)
+        self.stats.requests += len(requests)
+        for name, idxs in groups.items():
+            cfg = self._configs[name]
+            want_shape = (cfg.spec.image_h, cfg.spec.image_w, cfg.spec.in_channels)
+            for i in idxs:
+                got = np.shape(requests[i].image)
+                if got != want_shape:
+                    raise ValueError(
+                        f"request {i}: frame shape {got} does not match config "
+                        f"{name!r} sensor geometry {want_shape}"
+                    )
+            images = jnp.stack(
+                [jnp.asarray(requests[i].image, jnp.float32) for i in idxs]
+            )
+            b = images.shape[0]
+            padded = self._padded_batch(b)
+            if padded > b:
+                images = jnp.pad(images, ((0, padded - b), (0, 0), (0, 0), (0, 0)))
+            images = self._shard_batch(images)
+            run = self._executable(cfg)
+            counts = run(images, cfg.kernel, cfg.bn_offset)[:b]
+            self.stats.batches += 1
+            for j, i in enumerate(idxs):
+                out = counts[j]
+                if requests[i].block_mask is not None:
+                    keep = jnp.asarray(
+                        active_window_mask(cfg.spec, requests[i].block_mask)
+                    )
+                    out = out * keep[..., None]
+                results[i] = out
+        return results  # type: ignore[return-value]

@@ -1,0 +1,125 @@
+"""Property-test shim: real hypothesis when installed, a deterministic
+fixed-seed fallback otherwise.
+
+The tier-1 suite must *collect* everywhere, including minimal CI images
+without hypothesis.  Test modules import ``given`` / ``settings`` / ``st``
+from here instead of from ``hypothesis``:
+
+    from _hypothesis_compat import given, settings, st
+
+With hypothesis installed this module is a pure re-export (full shrinking,
+example database, etc.).  Without it, ``@given`` degrades to running the test
+body over a fixed seeded grid of ``max_examples`` draws — no shrinking, but
+deterministic and honouring the declared strategy ranges, so the property is
+still exercised on every platform.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 20
+    _SEED = 0x5EED
+
+    class _Strategy:
+        """Minimal strategy: an rng draw plus its range boundary values."""
+
+        def __init__(self, draw, boundaries):
+            self._draw = draw
+            self.boundaries = boundaries   # [low edge, high edge]
+
+        def example_from(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                [min_value, max_value],
+            )
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                [min_value, max_value],
+            )
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            seq = list(elements)
+            return _Strategy(
+                lambda rng: seq[int(rng.integers(0, len(seq)))],
+                [seq[0], seq[-1]],
+            )
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)), [False, True])
+
+    st = _Strategies()
+
+    def settings(*, max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        """Records ``max_examples`` on the (already ``given``-wrapped) test."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+        """Run the test over a deterministic seeded grid of examples.
+
+        The first two examples pin every strategy jointly to its low / high
+        range edge; uniform draws fill the remaining budget — a cheap
+        stand-in for hypothesis' edge-case bias.
+        """
+
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = [p for p in sig.parameters.values() if p.name not in kw_strategies]
+            n_pos = len(arg_strategies)
+            # positional strategies fill the RIGHTMOST remaining params
+            # (hypothesis semantics); whatever is left comes from fixtures.
+            fixture_params = params[: len(params) - n_pos] if n_pos else params
+            pos_names = [p.name for p in params[len(params) - n_pos :]] if n_pos else []
+
+            @functools.wraps(fn)
+            def wrapper(*fixture_args, **fixture_kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(_SEED)
+                for i in range(n):
+                    if i < 2:
+                        # examples 0/1: every strategy at its low/high edge —
+                        # uniform draws alone would (almost) never land there
+                        drawn = {k: s.boundaries[i] for k, s in kw_strategies.items()}
+                        drawn.update(
+                            (name, s.boundaries[i])
+                            for name, s in zip(pos_names, arg_strategies)
+                        )
+                    else:
+                        drawn = {k: s.example_from(rng) for k, s in kw_strategies.items()}
+                        drawn.update(
+                            (name, s.example_from(rng))
+                            for name, s in zip(pos_names, arg_strategies)
+                        )
+                    fn(*fixture_args, **fixture_kwargs, **drawn)
+
+            # hide drawn params from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            return wrapper
+
+        return deco

@@ -5,8 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.adc import ADCConfig, quantize_voltage, ste_round, updown_readout
 
@@ -14,7 +13,9 @@ CFG = ADCConfig(bits=8, v_ref=1.0)
 
 
 @settings(max_examples=50, deadline=None)
-@given(st.floats(0.0, 0.999))
+@given(st.floats(0.0, 0.997))  # half-LSB accuracy only holds below the
+#                                saturation knee at (levels - 0.5) * lsb;
+#                                above it the clamp to code 255 dominates
 def test_quantisation_error_within_half_lsb(v):
     q = float(quantize_voltage(jnp.float32(v), CFG))
     assert abs(q * CFG.lsb - v) <= CFG.lsb / 2 + 1e-7

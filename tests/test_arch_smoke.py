@@ -13,6 +13,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduce_for_smoke
+
+pytestmark = pytest.mark.slow  # compiles every reduced architecture
 from repro.models.transformer import (
     forward_decode,
     forward_prefill,

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import compat
 from repro.configs import ARCHS, reduce_for_smoke
 from repro.configs.base import ShapeSpec
 from repro.launch.cells import CellPlan, build_cell
@@ -14,6 +15,9 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.roofline import summarize_cell
 from repro.launch.sharding import ShardingPolicy, param_shardings
 from repro.models.transformer import init_model
+
+# every test here lowers+compiles full cells — the slow half of tier-1
+pytestmark = pytest.mark.slow
 
 
 def _mesh():
@@ -32,7 +36,7 @@ def _mesh():
 def test_cell_compiles_on_host_mesh(arch, shape):
     cfg = reduce_for_smoke(ARCHS[arch])
     mesh = _mesh()
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jitted, args = build_cell(cfg, shape, mesh, CellPlan(remat="none"))
         compiled = jitted.lower(*args).compile()
     rec = summarize_cell(compiled, cfg, shape, mesh.size)

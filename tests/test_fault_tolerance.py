@@ -74,9 +74,9 @@ def test_elastic_resharding(tmp_path):
 
     params, _ = _state()
     save_checkpoint(tmp_path, 3, params)
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     shardings = jax.tree.map(
         lambda p: NamedSharding(mesh, P(*([None] * p.ndim))), params
     )

@@ -1,0 +1,297 @@
+"""Batched multi-spec frontend pipeline: backend parity + scheduler.
+
+Parity contract: the fused production backends (Pallas kernel /
+basis-expanded XLA form) must reproduce the dense reference simulation
+(``fpca_forward`` with ``mode="bucket_sigmoid"``, hard ADC) count-for-count
+across the reconfiguration grid — kernel x stride x binning x region-skip.
+The output is integer SS-ADC counts, so parity is asserted exactly.
+
+Scheduler contract: heterogeneous request mixes group by configuration, run
+as one fused batch per group through a bounded LRU executable cache keyed by
+compile signature, and results round-trip to the original request order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adc import ADCConfig
+from repro.core.fpca_sim import fpca_forward
+from repro.core.mapping import FPCASpec, output_dims
+from repro.serving.fpca_pipeline import (
+    FPCAPipeline,
+    FrontendRequest,
+    spec_signature,
+)
+
+H = W = 24  # eff grid stays >= the physical 5x5 kernel even at binning 2
+
+
+def _spec(kernel: int, stride: int, binning: int) -> FPCASpec:
+    return FPCASpec(
+        image_h=H, image_w=W, out_channels=4, kernel=kernel, stride=stride,
+        binning=binning,
+    )
+
+
+def _block_mask(spec: FPCASpec) -> np.ndarray:
+    """Deterministic checkerboard keep/skip grid at the spec's block shape."""
+    bh = -(-spec.eff_h // spec.skip_block)
+    bw = -(-spec.eff_w // spec.skip_block)
+    mask = (np.indices((bh, bw)).sum(axis=0) % 2).astype(bool)
+    mask[0, 0] = True  # keep at least one block
+    return mask
+
+
+def _data(spec: FPCASpec, batch: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    images = jnp.asarray(
+        rng.uniform(0, 1, (batch, H, W, spec.in_channels)), jnp.float32
+    )
+    k = spec.kernel
+    kernel = jnp.asarray(
+        rng.normal(size=(spec.out_channels, k, k, spec.in_channels)) * 0.2,
+        jnp.float32,
+    )
+    bn = jnp.asarray(rng.integers(0, 10, (spec.out_channels,)), jnp.float32)
+    return images, kernel, bn
+
+
+PARITY_GRID = [
+    (kernel, stride, binning)
+    for kernel in (3, 5)
+    for stride in (kernel, 2)
+    for binning in (1, 2)
+]
+
+
+@pytest.mark.parametrize("kernel,stride,binning", PARITY_GRID)
+@pytest.mark.parametrize("with_mask", [False, True])
+def test_pallas_backend_matches_dense_reference(
+    bucket_model, circuit_params, kernel, stride, binning, with_mask
+):
+    """Pallas-backed fpca_forward == dense reference, exact integer counts."""
+    spec = _spec(kernel, stride, binning)
+    images, kern, bn = _data(spec)
+    block_mask = _block_mask(spec) if with_mask else None
+    common = dict(
+        circuit=circuit_params, model=bucket_model, bn_offset_counts=bn,
+        mode="bucket_sigmoid", hard=True, block_mask=block_mask,
+    )
+    want = fpca_forward(images, kern, spec, **common)["counts"]
+    got = fpca_forward(
+        images, kern, spec, backend="pallas", interpret=True, **common
+    )["counts"]
+    h_o, w_o = output_dims(spec)
+    assert got.shape == want.shape == (2, h_o, w_o, spec.out_channels)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas", "basis"])
+def test_batched_equals_per_image_loop(bucket_model, circuit_params, backend):
+    """The fused (B*h_o*w_o, N) batched path == a per-image loop, bit-for-bit."""
+    spec = _spec(3, 2, 1)
+    images, kern, bn = _data(spec, batch=3, seed=1)
+    common = dict(
+        circuit=circuit_params, model=bucket_model, bn_offset_counts=bn,
+        mode="bucket_sigmoid", hard=True, backend=backend,
+    )
+    if backend == "pallas":
+        common["interpret"] = True
+    batched = fpca_forward(images, kern, spec, **common)["counts"]
+    looped = np.stack(
+        [
+            np.asarray(fpca_forward(images[i], kern, spec, **common)["counts"])
+            for i in range(images.shape[0])
+        ]
+    )
+    np.testing.assert_array_equal(np.asarray(batched), looped)
+
+
+def test_fused_backend_rejects_oracle_mode(bucket_model):
+    spec = _spec(5, 5, 1)
+    images, kern, _ = _data(spec)
+    with pytest.raises(ValueError, match="bucket_sigmoid"):
+        fpca_forward(images, kern, spec, model=bucket_model, mode="oracle",
+                     backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# reconfiguration scheduler
+# ---------------------------------------------------------------------------
+
+
+def _pipeline(bucket_model, **kw) -> FPCAPipeline:
+    kw.setdefault("backend", "basis")
+    return FPCAPipeline(bucket_model, **kw)
+
+
+def _register_grid(pipe: FPCAPipeline, seed: int = 0) -> dict[str, FPCASpec]:
+    specs = {
+        "dense": _spec(5, 5, 1),
+        "overlap": _spec(3, 2, 1),
+        "binned": _spec(5, 5, 2),
+    }
+    rng = np.random.default_rng(seed)
+    for name, spec in specs.items():
+        k = spec.kernel
+        pipe.register(
+            name, spec,
+            rng.normal(size=(spec.out_channels, k, k, 3)).astype(np.float32) * 0.2,
+        )
+    return specs
+
+
+def _requests(specs: dict[str, FPCASpec], order: list[str], seed: int = 7):
+    rng = np.random.default_rng(seed)
+    return [
+        FrontendRequest(
+            config=name,
+            image=rng.uniform(0, 1, (H, W, 3)).astype(np.float32),
+        )
+        for name in order
+    ]
+
+
+def test_heterogeneous_mix_grouped_by_spec(bucket_model):
+    """An interleaved mix runs as one fused batch per configuration."""
+    pipe = _pipeline(bucket_model)
+    specs = _register_grid(pipe)
+    order = ["dense", "overlap", "dense", "binned", "overlap", "dense"]
+    reqs = _requests(specs, order)
+    groups = pipe.group_requests(reqs)
+    assert groups == {"dense": [0, 2, 5], "overlap": [1, 4], "binned": [3]}
+    pipe.submit(reqs)
+    assert pipe.stats.batches == 3          # one fused call per spec group
+    assert pipe.stats.requests == 6
+
+
+def test_results_round_trip_to_request_order(bucket_model):
+    """Each slot of the result list belongs to the request in that slot."""
+    pipe = _pipeline(bucket_model)
+    specs = _register_grid(pipe)
+    order = ["overlap", "dense", "binned", "dense", "overlap"]
+    reqs = _requests(specs, order)
+    results = pipe.submit(reqs)
+    for req, res in zip(reqs, results):
+        h_o, w_o = output_dims(specs[req.config])
+        assert res.shape == (h_o, w_o, 4)
+        solo = pipe.submit([req])[0]        # singleton batch of the same frame
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(solo))
+
+
+def test_pipeline_matches_fpca_forward(bucket_model, circuit_params):
+    """Scheduler output == direct fused fpca_forward on the same frames."""
+    pipe = _pipeline(bucket_model)
+    specs = _register_grid(pipe)
+    reqs = _requests(specs, ["overlap", "overlap", "dense"])
+    results = pipe.submit(reqs)
+    for req, res in zip(reqs, results):
+        cfg = pipe._configs[req.config]
+        want = fpca_forward(
+            jnp.asarray(req.image), cfg.kernel, cfg.spec, model=bucket_model,
+            bn_offset_counts=cfg.bn_offset, mode="bucket_sigmoid", hard=True,
+            backend="basis",
+        )["counts"]
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(want))
+
+
+def test_executable_cache_hits_on_repeat_specs(bucket_model):
+    pipe = _pipeline(bucket_model, cache_capacity=8)
+    specs = _register_grid(pipe)
+    reqs = _requests(specs, ["dense", "overlap", "binned"])
+    pipe.submit(reqs)
+    assert pipe.stats.cache_misses == 3 and pipe.stats.cache_hits == 0
+    pipe.submit(reqs)                        # warm: every signature cached
+    assert pipe.stats.cache_misses == 3 and pipe.stats.cache_hits == 3
+    assert pipe.stats.evictions == 0
+
+
+def test_executable_cache_is_bounded(bucket_model):
+    pipe = _pipeline(bucket_model, cache_capacity=2)
+    specs = _register_grid(pipe)             # 3 distinct signatures
+    pipe.submit(_requests(specs, ["dense", "overlap", "binned"]))
+    assert pipe.cache_size == 2              # never exceeds capacity
+    assert pipe.stats.evictions == 1
+
+
+def test_configs_sharing_signature_share_executable(bucket_model):
+    """Reprogramming NVM weights must not recompile: two configs with the
+    same (spec, c_o, adc, enc) hit one cached executable."""
+    pipe = _pipeline(bucket_model)
+    spec = _spec(5, 5, 1)
+    rng = np.random.default_rng(3)
+    kA = rng.normal(size=(4, 5, 5, 3)).astype(np.float32) * 0.2
+    kB = rng.normal(size=(4, 5, 5, 3)).astype(np.float32) * 0.2
+    pipe.register("progA", spec, kA)
+    pipe.register("progB", spec, kB)
+    assert spec_signature(spec, 4, pipe.adc, pipe.enc) == spec_signature(
+        spec, 4, pipe.adc, pipe.enc
+    )
+    img = rng.uniform(0, 1, (H, W, 3)).astype(np.float32)
+    resA, resB = pipe.submit(
+        [FrontendRequest("progA", img), FrontendRequest("progB", img)]
+    )
+    assert pipe.stats.cache_misses == 1 and pipe.stats.cache_hits == 1
+    assert pipe.cache_size == 1
+    # different weights really were applied
+    assert not np.array_equal(np.asarray(resA), np.asarray(resB))
+
+
+def test_pipeline_batch_padding_transparent(bucket_model):
+    """Odd group sizes (padded to pow2 buckets) return only real frames."""
+    pipe = _pipeline(bucket_model)
+    specs = _register_grid(pipe)
+    reqs = _requests(specs, ["dense"] * 5)   # padded to 8 internally
+    results = pipe.submit(reqs)
+    assert len(results) == 5
+    solo = pipe.submit([reqs[3]])[0]
+    np.testing.assert_array_equal(np.asarray(results[3]), np.asarray(solo))
+
+
+def test_pipeline_region_skipping(bucket_model):
+    pipe = _pipeline(bucket_model)
+    specs = _register_grid(pipe)
+    spec = specs["overlap"]
+    mask = _block_mask(spec)
+    req = _requests(specs, ["overlap"])[0]
+    masked = pipe.submit(
+        [FrontendRequest(req.config, req.image, block_mask=mask)]
+    )[0]
+    from repro.core.mapping import active_window_mask
+
+    keep = active_window_mask(spec, mask)
+    assert np.all(np.asarray(masked)[~keep] == 0)
+
+
+def test_pipeline_data_parallel_mesh(bucket_model):
+    """Batches shard over the host mesh's data axes (1-device smoke)."""
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1)
+    pipe = _pipeline(bucket_model, mesh=mesh)
+    specs = _register_grid(pipe)
+    reqs = _requests(specs, ["dense", "dense", "overlap"])
+    results = pipe.submit(reqs)
+    assert len(results) == 3
+    no_mesh = _pipeline(bucket_model)
+    _register_grid(no_mesh)
+    plain = no_mesh.submit(reqs)
+    for a, b in zip(results, plain):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unknown_config_raises(bucket_model):
+    pipe = _pipeline(bucket_model)
+    with pytest.raises(KeyError):
+        pipe.submit([FrontendRequest("nope", np.zeros((H, W, 3), np.float32))])
+
+
+def test_mismatched_frame_geometry_raises(bucket_model):
+    pipe = _pipeline(bucket_model)
+    specs = _register_grid(pipe)
+    with pytest.raises(ValueError, match="sensor geometry"):
+        pipe.submit([FrontendRequest("dense", np.zeros((7, 7, 3), np.float32))])
