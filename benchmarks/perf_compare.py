@@ -1,7 +1,15 @@
-"""Compare two dry-run artifact tags (baseline vs a hillclimb variant).
+"""Compare performance artifacts.
+
+Dry-run mode — two artifact tags (baseline vs a hillclimb variant):
 
     PYTHONPATH=src python -m benchmarks.perf_compare baseline hc_granite_dots \
         --cell granite-moe-3b-a800m__train_4k__single
+
+Stream mode — diff the streaming benchmark (``BENCH_stream.json``, delta-gated
+video serving) against the PR-1 batch-frontend baseline
+(``BENCH_frontend.json``):
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --stream
 """
 
 from __future__ import annotations
@@ -10,7 +18,8 @@ import argparse
 import json
 from pathlib import Path
 
-ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+REPO = Path(__file__).resolve().parents[1]
+ARTIFACTS = REPO / "artifacts" / "dryrun"
 
 
 def load(tag: str, cell: str) -> dict:
@@ -28,12 +37,43 @@ def fmt(rec: dict) -> str:
     )
 
 
+def compare_stream(frontend_path: Path, stream_path: Path) -> None:
+    """Streaming (delta-gated video) vs the batched-frontend baseline."""
+    fe = json.loads(frontend_path.read_text())
+    st = json.loads(stream_path.read_text())
+    print(f"baseline  ({frontend_path.name}): "
+          f"{fe['frames_per_s']:8.1f} frames/s  batch={fe['workload']['batch']} "
+          f"image={fe['workload']['image']} "
+          f"windows/frame={fe['workload']['windows_per_frame']}")
+    print(f"stream    ({stream_path.name}): "
+          f"{st['masked']['frames_per_s']:8.1f} frames/s (delta-gated)  "
+          f"{st['dense']['frames_per_s']:8.1f} frames/s (dense)  "
+          f"streams={st['workload']['streams']} image={st['workload']['image']}")
+    print(f"  masked vs dense streaming : {st['speedup_masked_vs_dense']:.2f}x "
+          f"(kept {st['kept_window_frac']:.1%} of windows)")
+    print(f"  masked stream vs baseline : "
+          f"{st['masked']['frames_per_s'] / fe['frames_per_s']:.2f}x frames/s")
+    print(f"  sensor-model accounting   : "
+          f"energy {st['sensor_model']['energy_vs_dense']:.2f}x, "
+          f"latency {st['sensor_model']['latency_vs_dense']:.2f}x dense")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("base_tag")
-    ap.add_argument("new_tag")
-    ap.add_argument("--cell", required=True)
+    ap.add_argument("base_tag", nargs="?")
+    ap.add_argument("new_tag", nargs="?")
+    ap.add_argument("--cell")
+    ap.add_argument("--stream", action="store_true",
+                    help="diff BENCH_stream.json vs BENCH_frontend.json")
+    ap.add_argument("--frontend-json", type=Path, default=REPO / "BENCH_frontend.json")
+    ap.add_argument("--stream-json", type=Path, default=REPO / "BENCH_stream.json")
     args = ap.parse_args()
+    if args.stream:
+        compare_stream(args.frontend_json, args.stream_json)
+        return
+    if not (args.base_tag and args.new_tag and args.cell):
+        ap.error("dry-run mode needs base_tag, new_tag and --cell "
+                 "(or pass --stream)")
     a = load(args.base_tag, args.cell)
     b = load(args.new_tag, args.cell)
     print(f"cell: {args.cell}")

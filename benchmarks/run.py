@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.fig9_tradeoffs",
     "benchmarks.eq1_cycles",
     "benchmarks.kernel_bench",
+    "benchmarks.stream_bench",
     "benchmarks.roofline_report",
 ]
 

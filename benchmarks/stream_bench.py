@@ -1,0 +1,111 @@
+"""Streaming frontend benchmark: delta-gated vs dense serving throughput.
+
+A synthetic moving-object stream (small frame-to-frame change fraction —
+the paper's continuous-vision regime) runs through the double-buffered
+:class:`~repro.serving.streaming.StreamServer` twice: once with the temporal
+delta gate compacting windows in-kernel, once dense.  Records frames/sec,
+the kept/skipped window fractions, and the masked-over-dense speedup to
+``BENCH_stream.json`` at the repo root — compare against the PR-1 batch
+baseline with ``python -m benchmarks.perf_compare --stream``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.curvefit import fit_bucket_model
+from repro.core.mapping import FPCASpec, output_dims
+from repro.data.pipeline import SyntheticMovingObject
+from repro.serving.fpca_pipeline import FPCAPipeline
+from repro.serving.streaming import DeltaGateConfig, StreamServer
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_stream.json"
+
+# c_o = 32 puts real matmul-bank work behind every window (the Fig. 9
+# "savings erased at c_o=32" operating point) — small channel counts are
+# dispatch-overhead-bound on CPU and would understate the masked win.
+H = 160
+C_O = 32
+N_FRAMES = 48
+N_STREAMS = 2
+GATE = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=24)
+
+
+def _serve(pipe: FPCAPipeline, cams: dict, gating: bool) -> tuple[float, StreamServer]:
+    server = StreamServer(pipe, GATE, depth=2, gating=gating)
+    for name in cams:
+        server.add_stream(name, "cam")
+    ticks = (
+        {name: cam.frame_at(t) for name, cam in cams.items()}
+        for t in range(N_FRAMES)
+    )
+    t0 = time.perf_counter()
+    for _ in server.run(ticks):
+        pass
+    return time.perf_counter() - t0, server
+
+
+def run() -> list[Row]:
+    model = fit_bucket_model(n_pixels=75)
+    spec = FPCASpec(image_h=H, image_w=H, out_channels=C_O, kernel=5, stride=5)
+    rng = np.random.default_rng(0)
+    kernel = (rng.normal(size=(C_O, 5, 5, 3)) * 0.2).astype(np.float32)
+    pipe = FPCAPipeline(model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    cams = {
+        f"cam{i}": SyntheticMovingObject((H, H), seed=i + 1)
+        for i in range(N_STREAMS)
+    }
+
+    # warm both paths (compiles), then time
+    _serve(pipe, cams, gating=True)
+    _serve(pipe, cams, gating=False)
+    t_gated, server = _serve(pipe, cams, gating=True)
+    t_dense, _ = _serve(pipe, cams, gating=False)
+
+    frames = N_FRAMES * N_STREAMS
+    fps_gated = frames / t_gated
+    fps_dense = frames / t_dense
+    s = server.stats
+    kept_frac = s.windows_kept / s.windows_total
+    h_o, w_o = output_dims(spec)
+    rep = server.sessions["cam0"].energy_report()
+
+    record = {
+        "workload": {
+            "streams": N_STREAMS, "frames_per_stream": N_FRAMES,
+            "image": [H, H, 3],
+            "spec": {"kernel": spec.kernel, "stride": spec.stride,
+                     "out_channels": spec.out_channels, "binning": spec.binning},
+            "windows_per_frame": h_o * w_o,
+            "gate": {"threshold": GATE.threshold, "hysteresis": GATE.hysteresis,
+                     "keyframe_interval": GATE.keyframe_interval},
+        },
+        "backend": "basis (XLA lowering of the Pallas kernel math)",
+        "masked": {"s_total": t_gated, "frames_per_s": fps_gated},
+        "dense": {"s_total": t_dense, "frames_per_s": fps_dense},
+        "speedup_masked_vs_dense": fps_gated / fps_dense,
+        "kept_window_frac": kept_frac,
+        "skipped_window_frac": 1.0 - kept_frac,
+        "sensor_model": {
+            "energy_vs_dense": rep["energy_vs_dense"],
+            "latency_vs_dense": rep["latency_vs_dense"],
+            "fps_effective": rep["fps_effective"],
+        },
+    }
+    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+
+    us_gated = t_gated / frames * 1e6
+    us_dense = t_dense / frames * 1e6
+    return [
+        ("stream_delta_gated", us_gated,
+         f"{N_STREAMS}x{N_FRAMES} frames {H}x{H} -> {fps_gated:.0f} frames/s "
+         f"kept={kept_frac:.1%} speedup_vs_dense="
+         f"{record['speedup_masked_vs_dense']:.2f}x (json: {BENCH_JSON.name})"),
+        ("stream_dense", us_dense, f"{fps_dense:.0f} frames/s"),
+    ]

@@ -21,6 +21,7 @@ __all__ = [
     "FrontendConstants",
     "frontend_energy",
     "frontend_latency",
+    "streaming_frontend_report",
     "bandwidth_reduction",
     "conventional_cis",
 ]
@@ -64,18 +65,71 @@ def frontend_energy(
         active = h_o * w_o
     e_io = active * spec.out_channels * const.b_adc * const.e_io
     e_total = n_c * (const.e_px + const.e_adc) + e_io
-    return {"n_cycles": n_c, "e_io": e_io, "e_total": e_total}
+    return {
+        "n_cycles": n_c,
+        "e_io": e_io,
+        "e_total": e_total,
+        "active_windows": active,
+    }
 
 
 def frontend_latency(
-    spec: mapping.FPCASpec, const: FrontendConstants = FrontendConstants()
+    spec: mapping.FPCASpec,
+    const: FrontendConstants = FrontendConstants(),
+    block_mask: np.ndarray | None = None,
 ) -> dict[str, float]:
-    """Eq. 4 + Eq. 5: per-cycle exposure + ramp + IO; frame rate = 1/T."""
-    n_c = mapping.n_cycles(spec)
+    """Eq. 4 + Eq. 5: per-cycle exposure + ramp + IO; frame rate = 1/T.
+
+    With ``block_mask``, only the cycles that actually fire under region
+    skipping (§3.4.5) are counted; per-cycle IO keeps the dense ``w_o``
+    window estimate (RS/SW gating is row/phase-granular, the IO bus is not).
+    """
+    n_c = mapping.n_cycles_with_skipping(spec, block_mask)
     _, w_o = mapping.output_dims(spec)
     t_io = w_o * const.b_adc / (const.bw_io * const.n_io_pads)
     t_total = n_c * (const.t_exp + const.t_adc + t_io)
     return {"n_cycles": n_c, "t_io": t_io, "t_total": t_total, "fps": 1.0 / t_total}
+
+
+def streaming_frontend_report(
+    spec: mapping.FPCASpec,
+    block_masks: list[np.ndarray | None],
+    const: FrontendConstants = FrontendConstants(),
+) -> dict[str, float]:
+    """Aggregate executed-window accounting over a gated frame history.
+
+    Unlike the single-frame models above, this reflects what a streaming
+    deployment *actually executed*: each frame's delta-gate mask contributes
+    its skipped-cycle energy/latency (Eqs. 2--5 with §3.4.5 gating), and the
+    summary reports the effective frame rate and the savings versus a dense
+    readout of the same stream.
+    """
+    if not block_masks:
+        raise ValueError("empty mask history")
+    dense_e = frontend_energy(spec, const)
+    dense_t = frontend_latency(spec, const)
+    h_o, w_o = mapping.output_dims(spec)
+    e_total = t_total = 0.0
+    cycles = windows = 0
+    for mask in block_masks:
+        e = frontend_energy(spec, const, block_mask=mask)
+        t = frontend_latency(spec, const, block_mask=mask)
+        e_total += e["e_total"]
+        t_total += t["t_total"]
+        cycles += e["n_cycles"]
+        windows += e["active_windows"]
+    n = len(block_masks)
+    return {
+        "frames": n,
+        "executed_cycles": cycles,
+        "executed_windows": windows,
+        "kept_window_frac": windows / (n * h_o * w_o),
+        "e_total": e_total,
+        "t_total": t_total,
+        "fps_effective": n / t_total,
+        "energy_vs_dense": e_total / (n * dense_e["e_total"]),
+        "latency_vs_dense": t_total / (n * dense_t["t_total"]),
+    }
 
 
 def bandwidth_reduction(spec: mapping.FPCASpec) -> float:

@@ -201,6 +201,11 @@ def fpca_forward(
     rounding — they require ``mode="bucket_sigmoid"``, ``hard=True`` and a
     fitted ``model``; ``interpret`` is forwarded to Pallas (default: interpret
     off-TPU).
+
+    ``block_mask`` (region skipping, §3.4.5) is applied post-hoc on the
+    reference backend (every window still evaluated — the parity oracle) but
+    *in-kernel* on the fused backends: kept windows are compacted before the
+    call, so skipped windows never execute.
     """
     circuit = circuit or CircuitParams()
     adc = adc or ADCConfig()
@@ -223,15 +228,19 @@ def fpca_forward(
         bn = jnp.broadcast_to(
             jnp.asarray(bn_offset_counts, jnp.float32).reshape(-1), (c_o,)
         )
+        window_mask = None
+        if block_mask is not None:
+            # in-kernel region skipping: kept windows are compacted before the
+            # fused call, so skipped windows never execute (the dense path
+            # below stays the bit-exact oracle on kept windows)
+            keep = mapping.active_window_mask(spec, block_mask)
+            window_mask = np.broadcast_to(keep, (images.shape[0],) + keep.shape)
         counts = fpca_conv(
             images, kernel, model, spec=spec, adc=adc, enc=enc, bn_offset=bn,
-            impl=backend, interpret=interpret,
+            impl=backend, interpret=interpret, window_mask=window_mask,
         )
         if image.ndim == 3:
             counts = counts[0]
-        if block_mask is not None:
-            keep = jnp.asarray(mapping.active_window_mask(spec, block_mask))
-            counts = counts * keep[..., None]
         return {"counts": counts}
     w_pos, w_neg = encode_weights(kernel, spec, enc, hard=hard)
     I = extract_windows(image, spec)                      # ([B,] h_o, w_o, N)

@@ -168,6 +168,11 @@ def active_window_mask(spec: FPCASpec, block_mask: np.ndarray | None) -> np.ndar
         raise ValueError(f"block_mask shape {block_mask.shape} != {(exp_h, exp_w)}")
     pixel_keep = np.kron(block_mask, np.ones((b, b), dtype=bool))[: spec.eff_h, : spec.eff_w]
     n, s = spec.max_kernel, spec.stride
+    if (h_o - 1) * s + n <= spec.eff_h and (w_o - 1) * s + n <= spec.eff_w:
+        # no padding: every window footprint is in-bounds — vectorised form
+        # (the streaming hot path gates every frame of every stream here)
+        windows = np.lib.stride_tricks.sliding_window_view(pixel_keep, (n, n))
+        return windows[::s, ::s].any(axis=(2, 3))[:h_o, :w_o]
     mask = np.zeros((h_o, w_o), dtype=bool)
     for r in range(h_o):
         for c in range(w_o):

@@ -24,6 +24,14 @@ Grid: (M / block_m, C / block_c); each program owns one output tile.
 VMEM per program (defaults bm=256, bc=128, N=128):
   patches 128 KiB + 2 x w_pows 256 KiB + gates/acc scratch < 1 MiB  — far
   under the ~16 MiB budget, leaving headroom for double buffering.
+
+Region skipping (§3.4.5) enters as a *row-compacted* patch matrix: the ops
+layer gathers only the windows whose blocks survived the temporal delta gate
+(padded to a static bucket), so the grid itself shrinks — fewer programs, not
+masked-out results.  ``row_valid`` marks the real rows of the compacted
+bucket; it multiplies the counts inside the fused epilogue so bucket-padding
+rows scatter back as exact zeros (0.0/1.0 multiply — bit-exact on the kept
+rows).
 """
 
 from __future__ import annotations
@@ -81,7 +89,7 @@ def precompute_weight_planes(
 
 def _fpca_kernel(
     # refs (order matches in_specs below)
-    patches_ref, mask_ref,
+    patches_ref, mask_ref, valid_ref,
     wp_pows_ref, wp_cs_ref, wp_aw_ref,
     wn_pows_ref, wn_cs_ref, wn_aw_ref,
     bn_ref,
@@ -141,10 +149,12 @@ def _fpca_kernel(
 
     v_pos = one_phase(wp_pows_ref, wp_cs_ref, wp_aw_ref)
     v_neg = one_phase(wn_pows_ref, wn_cs_ref, wn_aw_ref)
-    # SS-ADC epilogue: up/down count + BN counter init + ReLU/saturation clamp
+    # SS-ADC epilogue: up/down count + BN counter init + ReLU/saturation clamp;
+    # row validity (region-skip bucket padding) zeroes dead rows in-place —
+    # a 0.0/1.0 multiply, exact on valid rows.
     up = jnp.clip(jnp.round(v_pos / lsb), 0, levels - 1)
     down = jnp.clip(jnp.round(v_neg / lsb), 0, levels - 1)
-    out_ref[...] = jnp.clip(bn_ref[...] + up - down, 0, levels - 1)
+    out_ref[...] = valid_ref[...] * jnp.clip(bn_ref[...] + up - down, 0, levels - 1)
 
 
 def fpca_conv_pallas(
@@ -157,6 +167,7 @@ def fpca_conv_pallas(
     mask: jax.Array | None = None,
     *,
     n_real: int | None = None,
+    row_valid: jax.Array | None = None,
     block_m: int = 256,
     block_c: int = 128,
     interpret: bool | None = None,
@@ -166,6 +177,8 @@ def fpca_conv_pallas(
     ``patches (M, N)``, ``w_pos/w_neg (N, C)``, ``bn_offset (C,)``; N may be
     zero-padded — pass ``mask`` marking real pixel slots and ``n_real`` (the
     static count of real slots; required when tracing with a traced mask).
+    ``row_valid (M,)`` marks real rows of a region-skip compacted bucket;
+    rows with 0 come out as exact zeros (default: all rows valid).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -184,6 +197,9 @@ def fpca_conv_pallas(
     w_pos_p = jnp.pad(w_pos.astype(jnp.float32), ((0, 0), (0, Cp - C)))
     w_neg_p = jnp.pad(w_neg.astype(jnp.float32), ((0, 0), (0, Cp - C)))
     bn_p = jnp.pad(bn_offset.astype(jnp.float32), (0, Cp - C))[None, :]
+    if row_valid is None:
+        row_valid = jnp.ones((M,), jnp.float32)
+    valid_p = jnp.pad(row_valid.astype(jnp.float32), (0, Mp - M))[:, None]
 
     pp = precompute_weight_planes(w_pos_p, mask, model)
     pn = precompute_weight_planes(w_neg_p, mask, model)
@@ -209,6 +225,7 @@ def fpca_conv_pallas(
         in_specs=[
             pl.BlockSpec((block_m, N), lambda m, c: (m, 0)),       # patches
             pl.BlockSpec((N, 1), lambda m, c: (0, 0)),             # mask
+            pl.BlockSpec((block_m, 1), lambda m, c: (m, 0)),       # row validity
             pl.BlockSpec((2, N, block_c), lambda m, c: (0, 0, c)),  # pos W^b
             pl.BlockSpec((4, block_c), lambda m, c: (0, c)),       # pos consts
             pl.BlockSpec((t_avg, block_c), lambda m, c: (0, c)),   # pos f_avg
@@ -223,6 +240,7 @@ def fpca_conv_pallas(
     )(
         patches_p,
         mask[:, None].astype(jnp.float32),
+        valid_p,
         pp["w_pows"], pp["cs"], pp["aw"],
         pn["w_pows"], pn["cs"], pn["aw"],
         bn_p,

@@ -12,6 +12,19 @@ Window extraction is batched natively: ``(B, H, W, c_i)`` images become one
 flattened ``(B*h_o*w_o, N)`` patch matrix feeding a single fused kernel call
 (no per-image Python loop).
 
+Region skipping (§3.4.5) is *compute-real*: a per-window validity mask
+(``window_mask``) gathers/compacts the flattened window list down to a static
+bucket of ``m_bucket`` rows (``jnp.nonzero(..., size=m_bucket)``) before the
+kernel runs, so skipped windows never reach the MXU.  Results scatter back to
+the dense ``(B, h_o, w_o, c_o)`` grid with exact zeros in skipped slots; kept
+windows are bit-identical to the dense evaluation because every row of the
+basis-bank math is row-independent.  ``m_bucket`` is static (callers round
+the kept-window count up to a power-of-two bucket via
+:func:`window_bucket`), so recompiles stay bounded at ~log2(M) variants per
+signature; when the bucket would not shrink the matrix (``m_bucket >= M``)
+the impl falls back to dense compute with a post-hoc zero mask — identical
+outputs, no gather overhead.
+
 The fitted :class:`BucketCurvefitModel` enters the jitted function as a
 *static* argument (hashable tuple encoding): its coefficient tables are baked
 into the kernel as compile-time constants — exactly how a deployment would
@@ -39,9 +52,20 @@ __all__ = [
     "pad_to_lanes",
     "freeze_model",
     "thaw_model",
+    "window_bucket",
 ]
 
 _LANES = 128
+
+
+def window_bucket(n_keep: int, m_total: int) -> int:
+    """Static row-bucket size for ``n_keep`` kept windows out of ``m_total``.
+
+    Power-of-two rounding keeps the set of compiled bucket variants bounded
+    (~log2 of the window count); capped at ``m_total`` — at or above the cap
+    the masked impl serves the dense fallback (same outputs, no gather).
+    """
+    return min(1 << (max(n_keep, 1) - 1).bit_length(), m_total)
 
 
 def _tup(x) -> tuple:
@@ -107,6 +131,7 @@ def fpca_conv_basis_jnp(
     mask: jax.Array | None = None,
     n_real: int | None = None,
     *,
+    row_valid: jax.Array | None = None,
     fuse_phases: bool = False,
     compute_dtype=None,
 ) -> jax.Array:
@@ -116,6 +141,10 @@ def fpca_conv_basis_jnp(
     (DESIGN.md §2) — used as the dry-run lowering path for the FPCA
     production cell (Pallas does not lower on the CPU backend) and by the
     kernel CPU benchmark.  The model must be *concrete* (numpy tables).
+
+    ``row_valid (M,)``, if given, marks the real rows of a region-skip
+    compacted patch bucket; invalid rows come out as exact zeros (same
+    epilogue contract as the Pallas kernel).
     """
     from repro.kernels.fpca_conv.kernel import _bucket_tables, precompute_weight_planes
 
@@ -174,13 +203,17 @@ def fpca_conv_basis_jnp(
         v_neg = one_phase(w_neg)
     up = jnp.clip(jnp.round(v_pos / adc.lsb), 0, adc.levels - 1)
     down = jnp.clip(jnp.round(v_neg / adc.lsb), 0, adc.levels - 1)
-    return jnp.clip(bn_offset[None, :] + up - down, 0, adc.levels - 1)
+    counts = jnp.clip(bn_offset[None, :] + up - down, 0, adc.levels - 1)
+    if row_valid is not None:
+        counts = counts * row_valid[:, None].astype(counts.dtype)
+    return counts
 
 
 def _fpca_conv_impl(
     images: jax.Array,
     kernel: jax.Array,
     bn_offset: jax.Array,
+    window_mask: jax.Array | None = None,
     *,
     frozen: tuple,
     spec: FPCASpec,
@@ -190,15 +223,32 @@ def _fpca_conv_impl(
     block_c: int,
     interpret: bool | None,
     impl: str,
+    m_bucket: int | None = None,
 ) -> jax.Array:
     model = thaw_model(frozen)
     w_pos, w_neg = encode_weights(kernel, spec, enc)            # (c_o, N)
     patches = extract_windows(images, spec)                     # (B, h_o, w_o, N)
     B, h_o, w_o, N = patches.shape
-    flat = patches.reshape(B * h_o * w_o, N)
+    M = B * h_o * w_o
+    flat = patches.reshape(M, N)
     flat, mask = pad_to_lanes(flat, axis=1)
     w_pos_p, _ = pad_to_lanes(w_pos.T, axis=0)                  # (Np, c_o)
     w_neg_p, _ = pad_to_lanes(w_neg.T, axis=0)
+
+    idx = row_valid = keep = None
+    if window_mask is not None:
+        if m_bucket is None:
+            raise ValueError("window_mask requires a static m_bucket "
+                             "(see window_bucket())")
+        keep = jnp.reshape(window_mask, (-1,)).astype(bool)
+        if m_bucket < M:
+            # compact: only kept windows reach the kernel (row-independent
+            # math, so kept rows stay bit-identical to a dense evaluation)
+            (idx,) = jnp.nonzero(keep, size=m_bucket, fill_value=0)
+            n_keep = jnp.sum(keep)
+            row_valid = (jnp.arange(m_bucket) < n_keep).astype(jnp.float32)
+            flat = flat[idx]
+
     if impl == "basis":
         counts = fpca_conv_basis_jnp(
             flat,
@@ -209,6 +259,7 @@ def _fpca_conv_impl(
             bn_offset,
             mask=mask,
             n_real=spec.n_active_pixels,
+            row_valid=row_valid,
         )
     else:
         counts = fpca_conv_pallas(
@@ -220,10 +271,19 @@ def _fpca_conv_impl(
             bn_offset,
             mask=mask,
             n_real=spec.n_active_pixels,
+            row_valid=row_valid,
             block_m=block_m,
             block_c=block_c,
             interpret=interpret,
         )
+    if keep is not None:
+        if idx is not None:
+            # scatter back to the dense window grid; bucket-padding rows are
+            # exact zeros (kernel epilogue), so the fill-index add is a no-op
+            counts = jnp.zeros((M, counts.shape[-1]), counts.dtype).at[idx].add(counts)
+        else:
+            # dense fallback (bucket would not shrink the matrix)
+            counts = counts * keep[:, None].astype(counts.dtype)
     return counts.reshape(B, h_o, w_o, -1)
 
 
@@ -231,6 +291,7 @@ _fpca_conv_jit = functools.partial(
     jax.jit,
     static_argnames=(
         "frozen", "spec", "adc", "enc", "block_m", "block_c", "interpret", "impl",
+        "m_bucket",
     ),
 )(_fpca_conv_impl)
 
@@ -245,6 +306,7 @@ def make_fpca_conv_executable(
     block_c: int = 128,
     interpret: bool | None = None,
     impl: str = "pallas",
+    m_bucket: int | None = None,
 ):
     """A fresh jitted ``(images, kernel, bn_offset) -> counts`` executable.
 
@@ -253,6 +315,18 @@ def make_fpca_conv_executable(
     with it — this is what lets a serving cache genuinely *bound* live
     executables by dropping references (see
     :class:`repro.serving.fpca_pipeline.FPCAPipeline`).
+
+    With ``m_bucket`` set, the executable instead takes
+    ``(images, kernel, bn_offset, window_mask)`` and serves the region-skip
+    compacted path: kept windows gathered into a static ``m_bucket`` row
+    bucket, skipped windows never computed (see module docstring).
+    CONTRACT: every mask fed to such an executable must keep at most
+    ``m_bucket`` windows — the gather is a fixed-size ``jnp.nonzero`` and a
+    busier mask would silently truncate (kept windows returning as zeros).
+    Callers that bucket per batch (:class:`FPCAPipeline`) recompute
+    ``m_bucket`` from each mask's kept count, which upholds this by
+    construction; anyone reusing one executable across masks must route
+    busier masks to a bigger bucket themselves.
     """
     adc = adc or ADCConfig()
     enc = enc or WeightEncoding()
@@ -260,13 +334,29 @@ def make_fpca_conv_executable(
         raise ValueError(f"unknown impl {impl!r}")
     frozen = freeze_model(model)
 
-    @jax.jit
-    def run(images: jax.Array, kernel: jax.Array, bn_offset: jax.Array) -> jax.Array:
-        return _fpca_conv_impl(
-            images, kernel, bn_offset,
-            frozen=frozen, spec=spec, adc=adc, enc=enc,
-            block_m=block_m, block_c=block_c, interpret=interpret, impl=impl,
-        )
+    if m_bucket is None:
+
+        @jax.jit
+        def run(images: jax.Array, kernel: jax.Array, bn_offset: jax.Array) -> jax.Array:
+            return _fpca_conv_impl(
+                images, kernel, bn_offset,
+                frozen=frozen, spec=spec, adc=adc, enc=enc,
+                block_m=block_m, block_c=block_c, interpret=interpret, impl=impl,
+            )
+
+    else:
+
+        @jax.jit
+        def run(
+            images: jax.Array, kernel: jax.Array, bn_offset: jax.Array,
+            window_mask: jax.Array,
+        ) -> jax.Array:
+            return _fpca_conv_impl(
+                images, kernel, bn_offset, window_mask,
+                frozen=frozen, spec=spec, adc=adc, enc=enc,
+                block_m=block_m, block_c=block_c, interpret=interpret, impl=impl,
+                m_bucket=m_bucket,
+            )
 
     return run
 
@@ -284,6 +374,8 @@ def fpca_conv(
     block_c: int = 128,
     interpret: bool | None = None,
     impl: str = "pallas",
+    window_mask: jax.Array | np.ndarray | None = None,
+    m_bucket: int | None = None,
 ) -> jax.Array:
     """FPCA frontend activations for a batch of images.
 
@@ -293,6 +385,12 @@ def fpca_conv(
       model:  fitted :class:`BucketCurvefitModel` for ``spec.n_active_pixels``.
       impl:   ``"pallas"`` (TPU kernel; interpret-mode elsewhere) or
               ``"basis"`` (same math lowered through XLA — fast on CPU).
+      window_mask: optional ``(B, h_o, w_o)`` (or flat) keep mask — kept
+              windows are compacted into a static row bucket so skipped
+              windows cost no compute; skipped slots return exact zeros.
+      m_bucket: static bucket size for the compacted window list; defaults
+              to :func:`window_bucket` of the mask's kept count (requires a
+              concrete mask).
 
     Returns:
       SS-ADC counts, ``(B, h_o, w_o, c_o)`` float32 (integer-valued).
@@ -304,10 +402,23 @@ def fpca_conv(
     c_o = kernel.shape[0]
     if bn_offset is None:
         bn_offset = jnp.zeros((c_o,), jnp.float32)
+    if window_mask is not None:
+        window_mask = jnp.asarray(window_mask)
+        if m_bucket is None:
+            n_keep = int(np.count_nonzero(np.asarray(window_mask)))
+            m_bucket = window_bucket(n_keep, int(window_mask.size))
+        elif m_bucket < int(window_mask.size):
+            n_keep = int(np.count_nonzero(np.asarray(window_mask)))
+            if n_keep > m_bucket:
+                raise ValueError(
+                    f"mask keeps {n_keep} windows > m_bucket {m_bucket}; the "
+                    "fixed-size gather would silently drop kept windows"
+                )
     return _fpca_conv_jit(
         images,
         kernel,
         bn_offset,
+        window_mask,
         frozen=freeze_model(model),
         spec=spec,
         adc=adc,
@@ -316,4 +427,5 @@ def fpca_conv(
         block_c=block_c,
         interpret=interpret,
         impl=impl,
+        m_bucket=m_bucket,
     )

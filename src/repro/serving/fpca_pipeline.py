@@ -20,8 +20,22 @@ Flow per :meth:`FPCAPipeline.submit`:
    (:func:`spec_signature`) — configurations sharing (spec, c_o, adc, enc)
    share one executable because weights enter traced, mirroring how a
    deployment reprograms NVM planes without recompiling the readout;
-4. results are un-padded, region-skip masks applied, and scattered back to
-   the original request order.
+4. results are un-padded and scattered back to the original request order.
+
+Region skipping is **in-kernel**: request ``block_mask``\\ s become per-window
+keep masks that compact the window list before the fused call (static
+power-of-two row buckets, so recompiles stay bounded), and batch-padding
+frames are masked out the same way — skipped windows cost no compute, not
+just zeroed results.  :meth:`FPCAPipeline.run_config_batch` exposes this as
+the low-level non-blocking entry point the streaming server
+(:mod:`repro.serving.streaming`) dispatches through.
+
+With ``cross_config_batching=True``, request groups whose configurations
+share a compile signature are additionally merged into ONE executable call
+by stacking their NVM weight planes along the channel axis (each request's
+counts are sliced from its configuration's channel range) — one dispatch and
+one big MXU launch instead of several small ones, at the cost of evaluating
+the merged channel set for every frame in the merged batch.
 
 Backend selection mirrors :func:`repro.core.fpca_sim.fpca_forward`:
 ``"pallas"`` on TPU (interpret-mode elsewhere — validation only), ``"basis"``
@@ -43,7 +57,7 @@ from repro.core.adc import ADCConfig
 from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
 from repro.core.fpca_sim import WeightEncoding
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
-from repro.kernels.fpca_conv.ops import make_fpca_conv_executable
+from repro.kernels.fpca_conv.ops import make_fpca_conv_executable, window_bucket
 from repro.launch.mesh import data_axes
 
 __all__ = [
@@ -100,6 +114,9 @@ class PipelineStats:
     cache_hits: int = 0
     cache_misses: int = 0
     evictions: int = 0
+    merged_groups: int = 0          # cross-config channel-stacked batches
+    windows_total: int = 0          # windows submitted (incl. batch padding)
+    windows_executed: int = 0       # windows that actually reached the kernel
 
 
 class _ExecutableCache:
@@ -150,6 +167,10 @@ class FPCAPipeline:
         data axes (:func:`repro.launch.mesh.data_axes`) for data-parallel
         serving; batch padding also rounds up to the data-axis extent.
       cache_capacity: bound on simultaneously-held jitted executables.
+      cross_config_batching: merge request groups whose configurations share
+        a compile signature into one channel-stacked executable call (see
+        module docstring).  Off by default: the per-config path preserves the
+        exact reprogram-without-recompile executable reuse the base tests pin.
     """
 
     def __init__(
@@ -162,6 +183,7 @@ class FPCAPipeline:
         interpret: bool | None = None,
         cache_capacity: int = 8,
         mesh: jax.sharding.Mesh | None = None,
+        cross_config_batching: bool = False,
     ):
         if backend is None:
             backend = "pallas" if jax.default_backend() == "tpu" else "basis"
@@ -172,6 +194,7 @@ class FPCAPipeline:
         self.backend = backend
         self.interpret = interpret
         self.mesh = mesh
+        self.cross_config_batching = cross_config_batching
         self._models: dict[int, BucketCurvefitModel] = {}
         if isinstance(model, BucketCurvefitModel):
             self._models[model.n_pixels] = model
@@ -232,8 +255,10 @@ class FPCAPipeline:
             padded = -(-padded // n_data) * n_data
         return padded
 
-    def _executable(self, cfg: FrontendConfig) -> Callable:
-        sig = spec_signature(cfg.spec, int(cfg.kernel.shape[0]), self.adc, self.enc)
+    def _executable(
+        self, spec: FPCASpec, c_o: int, m_bucket: int | None = None
+    ) -> Callable:
+        sig = spec_signature(spec, c_o, self.adc, self.enc) + (m_bucket,)
 
         def build() -> Callable:
             # a FRESH jit per signature: the compiled programs are owned by
@@ -241,9 +266,9 @@ class FPCAPipeline:
             # (the shared fpca_conv entry point would keep them alive in the
             # module-level jit cache).
             return make_fpca_conv_executable(
-                self._model_for(cfg.spec.n_active_pixels),
-                spec=cfg.spec, adc=self.adc, enc=self.enc,
-                impl=self.backend, interpret=self.interpret,
+                self._model_for(spec.n_active_pixels),
+                spec=spec, adc=self.adc, enc=self.enc,
+                impl=self.backend, interpret=self.interpret, m_bucket=m_bucket,
             )
 
         return self._cache.get(sig, build, self.stats)
@@ -257,6 +282,107 @@ class FPCAPipeline:
         )
         return jax.device_put(images, sharding)
 
+    def _run_batch(
+        self,
+        spec: FPCASpec,
+        kernel: jax.Array,
+        bn_offset: jax.Array,
+        images: jax.Array,
+        window_keep: np.ndarray | None = None,
+    ) -> jax.Array:
+        """One fused executable call; the core dispatch everything routes to.
+
+        ``images`` is a ``(b, H, W, c_i)`` batch of ONE spec; ``window_keep``
+        an optional per-window ``(b, h_o, w_o)`` boolean keep grid.  The batch
+        is padded to its pow-2 bucket (mesh-aligned), padding frames are
+        masked out *in-kernel* whenever a keep grid is present, and the call
+        is dispatched asynchronously — the returned array is unrealised, so
+        callers can overlap host prep with device compute and block later.
+        """
+        b = images.shape[0]
+        h_o, w_o = output_dims(spec)
+        if window_keep is not None and window_keep.shape != (b, h_o, w_o):
+            raise ValueError(
+                f"window_keep shape {window_keep.shape} != {(b, h_o, w_o)}"
+            )
+        padded = self._padded_batch(b)
+        if padded > b:
+            images = jnp.pad(images, ((0, padded - b), (0, 0), (0, 0), (0, 0)))
+            if window_keep is not None:
+                window_keep = np.concatenate(
+                    [window_keep, np.zeros((padded - b, h_o, w_o), bool)]
+                )
+        images = self._shard_batch(images)
+        c_o = int(kernel.shape[0])
+        m_total = padded * h_o * w_o
+        self.stats.batches += 1
+        self.stats.windows_total += m_total
+        if window_keep is None:
+            run = self._executable(spec, c_o)
+            self.stats.windows_executed += m_total
+            return run(images, kernel, bn_offset)[:b]
+        n_keep = int(np.count_nonzero(window_keep))
+        m_bucket = window_bucket(n_keep, m_total)
+        run = self._executable(spec, c_o, m_bucket=m_bucket)
+        self.stats.windows_executed += m_bucket
+        return run(images, kernel, bn_offset, jnp.asarray(window_keep))[:b]
+
+    def run_config_batch(
+        self,
+        name: str,
+        images: Any,
+        window_keep: np.ndarray | None = None,
+    ) -> jax.Array:
+        """Non-blocking fused call for a frame batch of one registered config.
+
+        Returns ``(b, h_o, w_o, c_o)`` SS-ADC counts, dispatched but not
+        blocked on — the streaming server's double-buffered loop lives on
+        this method.  ``window_keep`` rows belonging to skipped windows come
+        back as exact zeros without having been computed.
+        """
+        if name not in self._configs:
+            raise KeyError(f"unknown config {name!r}")
+        cfg = self._configs[name]
+        images = jnp.asarray(images, jnp.float32)
+        want = (cfg.spec.image_h, cfg.spec.image_w, cfg.spec.in_channels)
+        if images.ndim != 4 or images.shape[1:] != want:
+            raise ValueError(
+                f"expected (b, {want[0]}, {want[1]}, {want[2]}) batch for "
+                f"config {name!r}, got {images.shape}"
+            )
+        return self._run_batch(
+            cfg.spec, cfg.kernel, cfg.bn_offset, images, window_keep
+        )
+
+    def _group_window_keep(
+        self, cfg: FrontendConfig, reqs: list[FrontendRequest]
+    ) -> np.ndarray | None:
+        """Stacked per-window keep grid for a request group (None = dense)."""
+        if all(r.block_mask is None for r in reqs):
+            return None
+        h_o, w_o = output_dims(cfg.spec)
+        return np.stack(
+            [
+                active_window_mask(cfg.spec, r.block_mask)
+                if r.block_mask is not None
+                else np.ones((h_o, w_o), bool)
+                for r in reqs
+            ]
+        )
+
+    def _check_geometry(
+        self, name: str, requests: Sequence[FrontendRequest], idxs: list[int]
+    ) -> None:
+        cfg = self._configs[name]
+        want_shape = (cfg.spec.image_h, cfg.spec.image_w, cfg.spec.in_channels)
+        for i in idxs:
+            got = np.shape(requests[i].image)
+            if got != want_shape:
+                raise ValueError(
+                    f"request {i}: frame shape {got} does not match config "
+                    f"{name!r} sensor geometry {want_shape}"
+                )
+
     def submit(self, requests: Sequence[FrontendRequest]) -> list[jax.Array]:
         """Serve a heterogeneous request mix; results in request order.
 
@@ -265,33 +391,69 @@ class FPCAPipeline:
         results: list[jax.Array | None] = [None] * len(requests)
         groups = self.group_requests(requests)
         self.stats.requests += len(requests)
-        for name, idxs in groups.items():
+        merged: dict[tuple, list[str]] = {}
+        for name in groups:
             cfg = self._configs[name]
-            want_shape = (cfg.spec.image_h, cfg.spec.image_w, cfg.spec.in_channels)
-            for i in idxs:
-                got = np.shape(requests[i].image)
-                if got != want_shape:
-                    raise ValueError(
-                        f"request {i}: frame shape {got} does not match config "
-                        f"{name!r} sensor geometry {want_shape}"
-                    )
-            images = jnp.stack(
-                [jnp.asarray(requests[i].image, jnp.float32) for i in idxs]
+            sig = spec_signature(
+                cfg.spec, int(cfg.kernel.shape[0]), self.adc, self.enc
             )
-            b = images.shape[0]
-            padded = self._padded_batch(b)
-            if padded > b:
-                images = jnp.pad(images, ((0, padded - b), (0, 0), (0, 0), (0, 0)))
-            images = self._shard_batch(images)
-            run = self._executable(cfg)
-            counts = run(images, cfg.kernel, cfg.bn_offset)[:b]
-            self.stats.batches += 1
-            for j, i in enumerate(idxs):
-                out = counts[j]
-                if requests[i].block_mask is not None:
-                    keep = jnp.asarray(
-                        active_window_mask(cfg.spec, requests[i].block_mask)
-                    )
-                    out = out * keep[..., None]
-                results[i] = out
+            key = sig if self.cross_config_batching else (name,)
+            merged.setdefault(key, []).append(name)
+        for names in merged.values():
+            if len(names) == 1:
+                self._submit_group(names[0], groups[names[0]], requests, results)
+            else:
+                self._submit_merged(names, groups, requests, results)
         return results  # type: ignore[return-value]
+
+    def _submit_group(
+        self,
+        name: str,
+        idxs: list[int],
+        requests: Sequence[FrontendRequest],
+        results: list,
+    ) -> None:
+        cfg = self._configs[name]
+        self._check_geometry(name, requests, idxs)
+        images = jnp.stack(
+            [jnp.asarray(requests[i].image, jnp.float32) for i in idxs]
+        )
+        window_keep = self._group_window_keep(cfg, [requests[i] for i in idxs])
+        counts = self._run_batch(
+            cfg.spec, cfg.kernel, cfg.bn_offset, images, window_keep
+        )
+        for j, i in enumerate(idxs):
+            results[i] = counts[j]
+
+    def _submit_merged(
+        self,
+        names: list[str],
+        groups: dict[str, list[int]],
+        requests: Sequence[FrontendRequest],
+        results: list,
+    ) -> None:
+        """Cross-config batching: configs sharing a compile signature run as
+        ONE call with their NVM weight planes stacked along the channel axis;
+        each request's counts are sliced from its config's channel range."""
+        cfgs = [self._configs[n] for n in names]
+        spec = cfgs[0].spec
+        for name in names:
+            self._check_geometry(name, requests, groups[name])
+        kernel = jnp.concatenate([c.kernel for c in cfgs], axis=0)
+        bn = jnp.concatenate([c.bn_offset for c in cfgs], axis=0)
+        idxs = [i for n in names for i in groups[n]]
+        images = jnp.stack(
+            [jnp.asarray(requests[i].image, jnp.float32) for i in idxs]
+        )
+        window_keep = self._group_window_keep(
+            cfgs[0], [requests[i] for i in idxs]
+        )
+        counts = self._run_batch(spec, kernel, bn, images, window_keep)
+        self.stats.merged_groups += 1
+        offsets = np.cumsum([0] + [int(c.kernel.shape[0]) for c in cfgs])
+        row = 0
+        for g, name in enumerate(names):
+            lo, hi = int(offsets[g]), int(offsets[g + 1])
+            for i in groups[name]:
+                results[i] = counts[row, ..., lo:hi]
+                row += 1

@@ -1,0 +1,57 @@
+"""Content-driven block saliency for region skipping (paper §3.4.5).
+
+Library home of the cheap host-side saliency pass the examples used to carry
+inline: pick the ``skip_block``-sized blocks whose content is worth reading
+and hand the keep grid to the frontend (post-hoc for the dense reference,
+compacted in-kernel for the fused serving path).
+
+For *streaming* workloads the temporal delta gate in
+:mod:`repro.serving.streaming` supersedes this — saliency needs the full
+frame it is trying to avoid reading, while the delta gate only needs the
+previous frame's block statistics.  Saliency remains the right tool for
+single-shot inference where a low-resolution preview exposure is available.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import mapping
+
+__all__ = ["saliency_mask"]
+
+
+def saliency_mask(
+    image: np.ndarray,
+    spec: mapping.FPCASpec,
+    keep_frac: float = 0.4,
+) -> np.ndarray:
+    """Block-wise brightness variance -> keep the liveliest blocks.
+
+    Operates on the *effective* (binned) frame so the grid matches the
+    periphery SRAM layout :func:`repro.core.mapping.active_window_mask`
+    expects: boolean ``(ceil(eff_h/B), ceil(eff_w/B))``, True = keep.
+    """
+    if not 0.0 < keep_frac <= 1.0:
+        raise ValueError("keep_frac must be in (0, 1]")
+    img = np.asarray(image, np.float32)
+    bf = spec.binning
+    if bf > 1:
+        h, w, c = img.shape
+        img = (
+            img[: h // bf * bf, : w // bf * bf]
+            .reshape(h // bf, bf, w // bf, bf, c)
+            .mean((1, 3))
+        )
+    b = spec.skip_block
+    h, w, c = img.shape
+    bh, bw = math.ceil(h / b), math.ceil(w / b)
+    var = np.zeros((bh, bw), np.float32)
+    for r in range(bh):
+        for cc in range(bw):
+            var[r, cc] = img[r * b : (r + 1) * b, cc * b : (cc + 1) * b].var()
+    k = max(1, int(keep_frac * var.size))
+    thresh = np.partition(var.ravel(), -k)[-k]
+    return var >= thresh

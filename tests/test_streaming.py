@@ -1,0 +1,343 @@
+"""Streaming subsystem: in-kernel region skipping, delta gate, serving loop.
+
+Contracts pinned here:
+
+* **Compute-real masking** — the window-compacted fused path (both the
+  Pallas kernel in interpret mode and the XLA basis lowering) returns counts
+  bit-identical to the dense reference on kept windows and exact zeros on
+  skipped windows, across the reconfiguration grid (full sweep marked slow,
+  a smoke subset in the fast lane).
+* **Delta gate** — keyframes keep everything, static scenes go quiet,
+  changed blocks stay live for exactly ``hysteresis`` extra frames.
+* **Serving loop** — the double-buffered server yields results strictly in
+  frame order regardless of depth, and multi-stream fan-in (one device batch
+  for many cameras) matches looped single-stream serving bit-for-bit.
+* **Cross-config batching** — configs sharing a compile signature merge into
+  one channel-stacked call with unchanged per-request results.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.fpca_sim import fpca_forward
+from repro.core.mapping import FPCASpec, active_window_mask, output_dims
+from repro.data.pipeline import SyntheticMovingObject
+from repro.kernels.fpca_conv.ops import window_bucket
+from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
+from repro.serving.saliency import saliency_mask
+from repro.serving.streaming import (
+    DeltaGateConfig,
+    StreamServer,
+    block_delta_mask,
+)
+
+H = W = 24
+
+
+def _spec(kernel: int = 5, stride: int = 5, binning: int = 1) -> FPCASpec:
+    return FPCASpec(
+        image_h=H, image_w=W, out_channels=4, kernel=kernel, stride=stride,
+        binning=binning,
+    )
+
+
+def _sparse_block_mask(spec: FPCASpec) -> np.ndarray:
+    """Keep only the top-left block — actually exercises the gather path."""
+    bh = -(-spec.eff_h // spec.skip_block)
+    bw = -(-spec.eff_w // spec.skip_block)
+    mask = np.zeros((bh, bw), bool)
+    mask[0, 0] = True
+    return mask
+
+
+def _data(spec: FPCASpec, batch: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    images = rng.uniform(0, 1, (batch, H, W, spec.in_channels)).astype(np.float32)
+    k = spec.kernel
+    kernel = (rng.normal(size=(spec.out_channels, k, k, spec.in_channels)) * 0.2
+              ).astype(np.float32)
+    return images, kernel
+
+
+def _assert_masked_parity(bucket_model, spec, backend, block_mask):
+    images, kernel = _data(spec)
+    common = dict(model=bucket_model, mode="bucket_sigmoid", hard=True)
+    dense = np.asarray(
+        fpca_forward(images, kernel, spec, **common)["counts"]
+    )
+    kw = {"interpret": True} if backend == "pallas" else {}
+    got = np.asarray(
+        fpca_forward(
+            images, kernel, spec, backend=backend, block_mask=block_mask,
+            **kw, **common,
+        )["counts"]
+    )
+    keep = active_window_mask(spec, block_mask)
+    np.testing.assert_array_equal(got[:, keep], dense[:, keep])
+    assert np.all(got[:, ~keep] == 0)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel region skipping: masked vs dense, bit-exact on kept windows
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["basis", "pallas"])
+def test_masked_parity_smoke(bucket_model, backend):
+    """Fast-lane streaming smoke: sparse mask through the compacted path."""
+    spec = _spec(5, 5, 1)
+    _assert_masked_parity(bucket_model, spec, backend, _sparse_block_mask(spec))
+
+
+PARITY_GRID = [
+    (kernel, stride, binning)
+    for kernel in (3, 5)
+    for stride in (kernel, 2)
+    for binning in (1, 2)
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kernel,stride,binning", PARITY_GRID)
+@pytest.mark.parametrize("backend", ["basis", "pallas"])
+def test_masked_parity_full_grid(bucket_model, kernel, stride, binning, backend):
+    """Full reconfiguration grid x both fused backends (streaming sweep)."""
+    spec = _spec(kernel, stride, binning)
+    _assert_masked_parity(bucket_model, spec, backend, _sparse_block_mask(spec))
+
+
+def test_window_bucket_bounded_pow2():
+    assert window_bucket(1, 400) == 1
+    assert window_bucket(3, 400) == 4
+    assert window_bucket(129, 400) == 256
+    assert window_bucket(300, 400) == 400   # capped -> dense fallback
+    assert window_bucket(0, 400) == 1       # empty mask still a valid bucket
+
+
+def test_pipeline_masked_request_skips_compute(bucket_model):
+    """The scheduler executes only the kept-window bucket, not the grid."""
+    spec = _spec()
+    _, kernel = _data(spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    h_o, w_o = output_dims(spec)
+    mask = _sparse_block_mask(spec)
+    img = _data(spec, batch=1)[0][0]
+    out = pipe.submit([FrontendRequest("cam", img, block_mask=mask)])[0]
+    keep = active_window_mask(spec, mask)
+    dense = pipe.submit([FrontendRequest("cam", img)])[0]
+    np.testing.assert_array_equal(np.asarray(out)[keep], np.asarray(dense)[keep])
+    assert np.all(np.asarray(out)[~keep] == 0)
+    # 2 batches: the masked one ran a pow2 bucket < full grid, the dense one
+    # the whole grid
+    assert pipe.stats.windows_executed < pipe.stats.windows_total
+    assert pipe.stats.windows_executed < h_o * w_o + window_bucket(
+        int(keep.sum()), h_o * w_o
+    ) + 1
+
+
+# ---------------------------------------------------------------------------
+# temporal delta gate
+# ---------------------------------------------------------------------------
+
+
+def _flat_frames(spec, n, value=0.5):
+    return [np.full((H, W, 3), value, np.float32) for _ in range(n)]
+
+
+def test_block_delta_mask_localises_change():
+    spec = _spec()
+    a = np.full((spec.eff_h, spec.eff_w), 0.5, np.float32)
+    b = a.copy()
+    b[:8, 8:16] += 0.2                      # bump exactly block (0, 1)
+    mask = block_delta_mask(a, b, spec, threshold=0.05)
+    want = np.zeros_like(mask)
+    want[0, 1] = True
+    np.testing.assert_array_equal(mask, want)
+
+
+def test_delta_gate_keyframe_and_hysteresis():
+    spec = _spec()
+    gate = DeltaGateConfig(threshold=0.05, hysteresis=1, keyframe_interval=6)
+    from repro.serving.streaming import StreamSession
+
+    session = StreamSession("s", "cam", spec, gate)
+    frames = _flat_frames(spec, 10)
+    # frame 2 changes one block, everything else is static
+    frames[2] = frames[2].copy()
+    frames[2][:8, :8] += 0.3
+    masks = [session.step(f) for f in frames]
+    assert masks[0].all()                   # first frame = keyframe
+    assert not masks[1].any()               # static scene goes quiet
+    assert masks[2][0, 0] and masks[2].sum() == 1       # change detected
+    assert masks[3][0, 0] and masks[3].sum() == 1       # hysteresis frame 1
+    # frame 4: change was 2 frames ago (> hysteresis) AND the bumped frame
+    # reverting also registers as a change at frame 3 -> block lives one
+    # extra pair, then dies
+    assert masks[4][0, 0] and masks[4].sum() == 1       # revert delta + hyst
+    assert not masks[5].any()
+    assert masks[6].all()                   # keyframe refresh at interval 6
+    assert not masks[7].any()               # ...and quiet again right after
+
+
+def test_delta_gate_disabled_session_is_dense():
+    from repro.serving.streaming import StreamSession
+
+    session = StreamSession("s", "cam", _spec(), None)
+    assert session.step(np.zeros((H, W, 3), np.float32)) is None
+
+
+# ---------------------------------------------------------------------------
+# double-buffered serving loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def stream_pipe(bucket_model):
+    """One pipeline (and executable cache) shared by all serving-loop tests."""
+    spec = _spec()
+    _, kernel = _data(spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    return pipe
+
+
+def _make_server(pipe, n_streams=1, **server_kw):
+    server = StreamServer(
+        pipe, DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=8),
+        **server_kw,
+    )
+    for i in range(n_streams):
+        server.add_stream(f"s{i}", "cam")
+    return server
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_double_buffer_results_in_frame_order(stream_pipe, depth):
+    """Results come back tick-ordered for any in-flight depth, and the depth
+    never changes the numbers."""
+    server = _make_server(stream_pipe, depth=depth)
+    stream = SyntheticMovingObject((H, W), seed=3, radius=4.0)
+    results = list(server.serve("s0", stream.frames(7)))
+    assert [r.frame_idx for r in results] == list(range(7))
+    ref_server = _make_server(stream_pipe, depth=1)
+    ref = list(ref_server.serve("s0", stream.frames(7)))
+    for a, b in zip(results, ref):
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_multi_stream_fan_in_matches_looped_single_stream(stream_pipe):
+    """Two cameras in one device batch == each camera served alone."""
+    server = _make_server(stream_pipe, n_streams=2, depth=2)
+    cams = {
+        "s0": SyntheticMovingObject((H, W), seed=4, radius=4.0),
+        "s1": SyntheticMovingObject((H, W), seed=5, radius=4.0),
+    }
+    ticks = [{sid: cam.frame_at(t) for sid, cam in cams.items()} for t in range(5)]
+    fanned = [r for results in server.run(ticks) for r in results]
+    for sid, cam in cams.items():
+        solo_server = _make_server(stream_pipe, depth=2)
+        solo = list(solo_server.serve("s0", cam.frames(5)))
+        mine = [r for r in fanned if r.stream_id == sid]
+        assert [r.frame_idx for r in mine] == list(range(5))
+        for a, b in zip(mine, solo):
+            np.testing.assert_array_equal(a.counts, b.counts)
+            np.testing.assert_array_equal(a.block_mask, b.block_mask)
+
+
+def test_stream_server_gated_faster_windows_than_dense(stream_pipe):
+    """The gate's executed-window count actually drops below dense."""
+    server = _make_server(stream_pipe, depth=2)
+    stream = SyntheticMovingObject((H, W), seed=6, radius=4.0)
+    list(server.serve("s0", stream.frames(6)))
+    assert server.stats.windows_kept < server.stats.windows_total
+    assert stream_pipe.stats.windows_executed < stream_pipe.stats.windows_total
+    rep = server.sessions["s0"].energy_report()
+    assert rep["frames"] == 6
+    assert 0 < rep["kept_window_frac"] < 1
+    assert rep["energy_vs_dense"] < 1 and rep["latency_vs_dense"] <= 1
+
+
+def test_stream_server_unknown_stream_or_config():
+    from repro.core.curvefit import BucketCurvefitModel  # noqa: F401  (import path smoke)
+
+    pipe = FPCAPipeline(backend="basis")
+    server = StreamServer(pipe)
+    with pytest.raises(KeyError):
+        server.add_stream("s0", "nope")
+
+
+# ---------------------------------------------------------------------------
+# cross-config channel batching
+# ---------------------------------------------------------------------------
+
+
+def test_cross_config_batching_merges_and_matches(bucket_model):
+    spec = _spec()
+    rng = np.random.default_rng(11)
+    kA = (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32)
+    kB = (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32)
+    img0 = rng.uniform(0, 1, (H, W, 3)).astype(np.float32)
+    img1 = rng.uniform(0, 1, (H, W, 3)).astype(np.float32)
+    reqs = [
+        FrontendRequest("A", img0),
+        FrontendRequest("B", img1),
+        FrontendRequest("A", img1, block_mask=_sparse_block_mask(spec)),
+    ]
+
+    plain = FPCAPipeline(bucket_model, backend="basis")
+    plain.register("A", spec, kA)
+    plain.register("B", spec, kB)
+    want = plain.submit(reqs)
+    assert plain.stats.batches == 2 and plain.stats.merged_groups == 0
+
+    merged = FPCAPipeline(bucket_model, backend="basis", cross_config_batching=True)
+    merged.register("A", spec, kA)
+    merged.register("B", spec, kB)
+    got = merged.submit(reqs)
+    assert merged.stats.batches == 1 and merged.stats.merged_groups == 1
+    for a, b in zip(got, want):
+        assert a.shape == (4, 4, 4)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cross_config_batching_leaves_distinct_specs_alone(bucket_model):
+    specA, specB = _spec(5, 5, 1), _spec(3, 2, 1)
+    rng = np.random.default_rng(12)
+    pipe = FPCAPipeline(bucket_model, backend="basis", cross_config_batching=True)
+    pipe.register("A", specA, (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32))
+    pipe.register("B", specB, (rng.normal(size=(4, 3, 3, 3)) * 0.2).astype(np.float32))
+    img = rng.uniform(0, 1, (H, W, 3)).astype(np.float32)
+    res = pipe.submit([FrontendRequest("A", img), FrontendRequest("B", img)])
+    assert pipe.stats.batches == 2 and pipe.stats.merged_groups == 0
+    assert res[0].shape == (4, 4, 4)
+    h_o, w_o = output_dims(specB)
+    assert res[1].shape == (h_o, w_o, 4)
+
+
+# ---------------------------------------------------------------------------
+# saliency (library home of the former example helper)
+# ---------------------------------------------------------------------------
+
+
+def test_saliency_mask_shape_and_fraction():
+    spec = _spec()
+    rng = np.random.default_rng(13)
+    img = rng.uniform(0, 1, (H, W, 3)).astype(np.float32)
+    mask = saliency_mask(img, spec, keep_frac=0.4)
+    bh = -(-spec.eff_h // spec.skip_block)
+    bw = -(-spec.eff_w // spec.skip_block)
+    assert mask.shape == (bh, bw) and mask.dtype == bool
+    assert 1 <= mask.sum() <= mask.size
+
+
+def test_saliency_mask_binned_grid():
+    spec = _spec(5, 5, binning=2)
+    rng = np.random.default_rng(14)
+    img = rng.uniform(0, 1, (H, W, 3)).astype(np.float32)
+    mask = saliency_mask(img, spec, keep_frac=0.5)
+    bh = -(-spec.eff_h // spec.skip_block)
+    bw = -(-spec.eff_w // spec.skip_block)
+    assert mask.shape == (bh, bw)
