@@ -56,6 +56,22 @@ def compare_stream(frontend_path: Path, stream_path: Path) -> None:
     print(f"  sensor-model accounting   : "
           f"energy {st['sensor_model']['energy_vs_dense']:.2f}x, "
           f"latency {st['sensor_model']['latency_vs_dense']:.2f}x dense")
+    # control-plane fields (absent in pre-adaptive BENCH_stream.json files)
+    sb = st.get("sticky_buckets")
+    if sb:
+        print(f"  sticky buckets (K={sb['patience']}) : "
+              f"{sb['switches_sticky']} executable switches "
+              f"vs {sb['switches_flap']} stateless "
+              f"({sb['shrinks_deferred']} shrinks deferred, "
+              f"{sb['frames_per_s']:.1f} frames/s)")
+    ctl = st.get("controller")
+    if ctl:
+        conv = ctl["converged_tick"]
+        conv_s = f"tick {conv}" if conv is not None else "never"
+        print(f"  keep-fraction servo       : target {ctl['target_kept_frac']:.2f} "
+              f"converged at {conv_s} / {ctl['ticks']} ticks "
+              f"(final thr {ctl['final_threshold']:.4f}, "
+              f"ema {ctl['final_ema']:.3f})")
 
 
 def main() -> None:

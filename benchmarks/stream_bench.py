@@ -1,10 +1,14 @@
-"""Streaming frontend benchmark: delta-gated vs dense serving throughput.
+"""Streaming frontend benchmark: delta-gated vs dense serving throughput,
+plus the adaptive control plane on top.
 
 A synthetic moving-object stream (small frame-to-frame change fraction —
 the paper's continuous-vision regime) runs through the double-buffered
-:class:`~repro.serving.streaming.StreamServer` twice: once with the temporal
-delta gate compacting windows in-kernel, once dense.  Records frames/sec,
-the kept/skipped window fractions, and the masked-over-dense speedup to
+:class:`~repro.serving.streaming.StreamServer` three ways: dense, delta-gated
+with the stateless (flapping) row bucket, and delta-gated with sticky bucket
+hysteresis (``bucket_patience``).  Records frames/sec, the kept/skipped
+window fractions, the masked-over-dense speedup, the executable bucket
+switch counts (sticky vs flap), and a keep-fraction servo convergence trace
+(:class:`~repro.serving.control.GateController` against a 0.15 budget) to
 ``BENCH_stream.json`` at the repo root — compare against the PR-1 batch
 baseline with ``python -m benchmarks.perf_compare --stream``.
 """
@@ -21,10 +25,23 @@ from benchmarks.common import Row
 from repro.core.curvefit import fit_bucket_model
 from repro.core.mapping import FPCASpec, output_dims
 from repro.data.pipeline import SyntheticMovingObject
+from repro.serving.control import GateControllerConfig
 from repro.serving.fpca_pipeline import FPCAPipeline
 from repro.serving.streaming import DeltaGateConfig, StreamServer
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_stream.json"
+
+
+def _jsonable(obj):
+    """Map non-finite floats to None: the accounting reports fps=inf for
+    all-skipped histories, which strict RFC 8259 parsers reject."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
 
 # c_o = 32 puts real matmul-bank work behind every window (the Fig. 9
 # "savings erased at c_o=32" operating point) — small channel counts are
@@ -34,10 +51,20 @@ C_O = 32
 N_FRAMES = 48
 N_STREAMS = 2
 GATE = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=24)
+BUCKET_PATIENCE = 4
+# servo scene: blob big enough that the 0.15 budget is inside the gate's
+# reachable kept-fraction range at this resolution
+CONTROLLER = GateControllerConfig(target=0.15)
+SERVO_RADIUS = 18.0
 
 
-def _serve(pipe: FPCAPipeline, cams: dict, gating: bool) -> tuple[float, StreamServer]:
-    server = StreamServer(pipe, GATE, depth=2, gating=gating)
+def _serve(
+    pipe: FPCAPipeline,
+    cams: dict,
+    gating: bool,
+    controller: GateControllerConfig | None = None,
+) -> tuple[float, StreamServer]:
+    server = StreamServer(pipe, GATE, depth=2, gating=gating, controller=controller)
     for name in cams:
         server.add_stream(name, "cam")
     ticks = (
@@ -55,22 +82,49 @@ def run() -> list[Row]:
     spec = FPCASpec(image_h=H, image_w=H, out_channels=C_O, kernel=5, stride=5)
     rng = np.random.default_rng(0)
     kernel = (rng.normal(size=(C_O, 5, 5, 3)) * 0.2).astype(np.float32)
-    pipe = FPCAPipeline(model, backend="basis")
-    pipe.register("cam", spec, kernel)
+
+    def make_pipe(patience: int) -> FPCAPipeline:
+        pipe = FPCAPipeline(model, backend="basis", bucket_patience=patience)
+        pipe.register("cam", spec, kernel)
+        return pipe
+
+    pipe_flap = make_pipe(1)            # stateless buckets: the PR-2 behaviour
+    pipe_sticky = make_pipe(BUCKET_PATIENCE)
     cams = {
         f"cam{i}": SyntheticMovingObject((H, H), seed=i + 1)
         for i in range(N_STREAMS)
     }
 
-    # warm both paths (compiles), then time
-    _serve(pipe, cams, gating=True)
-    _serve(pipe, cams, gating=False)
-    t_gated, server = _serve(pipe, cams, gating=True)
-    t_dense, _ = _serve(pipe, cams, gating=False)
+    # warm both pipelines (compiles), then time; bucket-switch counts are
+    # measured over the timed serve only (stats delta)
+    _serve(pipe_flap, cams, gating=True)
+    _serve(pipe_flap, cams, gating=False)
+    _serve(pipe_sticky, cams, gating=True)
+
+    # reset sticky state so each timed pass replays exactly the bucket
+    # sequence its warm-up compiled (and switch counts are self-contained)
+    pipe_flap.reset_bucket_state()
+    sw0 = pipe_flap.stats.bucket_switches
+    t_gated, server = _serve(pipe_flap, cams, gating=True)
+    switches_flap = pipe_flap.stats.bucket_switches - sw0
+    t_dense, _ = _serve(pipe_flap, cams, gating=False)
+    pipe_sticky.reset_bucket_state()
+    sw0 = pipe_sticky.stats.bucket_switches
+    df0 = pipe_sticky.stats.bucket_shrinks_deferred
+    t_sticky, _ = _serve(pipe_sticky, cams, gating=True)
+    switches_sticky = pipe_sticky.stats.bucket_switches - sw0
+    shrinks_deferred = pipe_sticky.stats.bucket_shrinks_deferred - df0
+
+    # keep-fraction servo convergence (one camera, servo-friendly scene)
+    servo_cams = {"cam0": SyntheticMovingObject((H, H), seed=1, radius=SERVO_RADIUS)}
+    _, servo_server = _serve(pipe_sticky, servo_cams, gating=True, controller=CONTROLLER)
+    ctl = servo_server.sessions["cam0"].controller
+    assert ctl is not None
 
     frames = N_FRAMES * N_STREAMS
     fps_gated = frames / t_gated
     fps_dense = frames / t_dense
+    fps_sticky = frames / t_sticky
     s = server.stats
     kept_frac = s.windows_kept / s.windows_total
     h_o, w_o = output_dims(spec)
@@ -92,13 +146,37 @@ def run() -> list[Row]:
         "speedup_masked_vs_dense": fps_gated / fps_dense,
         "kept_window_frac": kept_frac,
         "skipped_window_frac": 1.0 - kept_frac,
+        "sticky_buckets": {
+            "patience": BUCKET_PATIENCE,
+            "switches_flap": switches_flap,
+            "switches_sticky": switches_sticky,
+            "shrinks_deferred": shrinks_deferred,
+            "s_total": t_sticky,
+            "frames_per_s": fps_sticky,
+        },
+        "controller": {
+            "target_kept_frac": CONTROLLER.target,
+            "metric": CONTROLLER.metric,
+            "servo_radius": SERVO_RADIUS,
+            "converged_tick": ctl.converged_tick(rel_tol=0.2),
+            "ticks": len(ctl.history),
+            "final_threshold": ctl.threshold,
+            "final_ema": ctl.ema,
+            "history": [
+                {"tick": h["tick"], "threshold": round(h["threshold"], 6),
+                 "ema": None if h["ema"] is None else round(h["ema"], 4)}
+                for h in ctl.history
+            ],
+        },
         "sensor_model": {
             "energy_vs_dense": rep["energy_vs_dense"],
             "latency_vs_dense": rep["latency_vs_dense"],
             "fps_effective": rep["fps_effective"],
         },
     }
-    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    BENCH_JSON.write_text(
+        json.dumps(_jsonable(record), indent=2, allow_nan=False) + "\n"
+    )
 
     us_gated = t_gated / frames * 1e6
     us_dense = t_dense / frames * 1e6
@@ -108,4 +186,11 @@ def run() -> list[Row]:
          f"kept={kept_frac:.1%} speedup_vs_dense="
          f"{record['speedup_masked_vs_dense']:.2f}x (json: {BENCH_JSON.name})"),
         ("stream_dense", us_dense, f"{fps_dense:.0f} frames/s"),
+        ("stream_sticky_buckets", t_sticky / frames * 1e6,
+         f"{fps_sticky:.0f} frames/s  bucket switches {switches_sticky} "
+         f"(vs {switches_flap} stateless)"),
+        ("stream_servo", 0.0,
+         f"kept->{CONTROLLER.target:.2f} budget converged at tick "
+         f"{record['controller']['converged_tick']} "
+         f"(thr {ctl.threshold:.4f}, ema {ctl.ema:.3f})"),
     ]

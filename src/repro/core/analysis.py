@@ -88,7 +88,10 @@ def frontend_latency(
     _, w_o = mapping.output_dims(spec)
     t_io = w_o * const.b_adc / (const.bw_io * const.n_io_pads)
     t_total = n_c * (const.t_exp + const.t_adc + t_io)
-    return {"n_cycles": n_c, "t_io": t_io, "t_total": t_total, "fps": 1.0 / t_total}
+    # an all-skipped frame fires zero cycles (t_total == 0): the sensor is
+    # idle, not infinitely slow — report fps as inf rather than divide by zero
+    fps = 1.0 / t_total if t_total > 0 else math.inf
+    return {"n_cycles": n_c, "t_io": t_io, "t_total": t_total, "fps": fps}
 
 
 def streaming_frontend_report(
@@ -126,7 +129,9 @@ def streaming_frontend_report(
         "kept_window_frac": windows / (n * h_o * w_o),
         "e_total": e_total,
         "t_total": t_total,
-        "fps_effective": n / t_total,
+        # a history of all-skipped frames executes nothing (t_total == 0);
+        # the effective rate is unbounded, not a division error
+        "fps_effective": n / t_total if t_total > 0 else math.inf,
         "energy_vs_dense": e_total / (n * dense_e["e_total"]),
         "latency_vs_dense": t_total / (n * dense_t["t_total"]),
     }

@@ -1,8 +1,16 @@
 from repro.kernels.fpca_conv.kernel import fpca_conv_pallas, precompute_weight_planes
-from repro.kernels.fpca_conv.ops import fpca_conv, freeze_model, pad_to_lanes, thaw_model
+from repro.kernels.fpca_conv.ops import (
+    StickyBucket,
+    fpca_conv,
+    freeze_model,
+    pad_to_lanes,
+    thaw_model,
+    window_bucket,
+)
 from repro.kernels.fpca_conv.ref import fpca_conv_ref
 
 __all__ = [
+    "StickyBucket",
     "fpca_conv",
     "fpca_conv_pallas",
     "fpca_conv_ref",
@@ -10,4 +18,5 @@ __all__ = [
     "pad_to_lanes",
     "precompute_weight_planes",
     "thaw_model",
+    "window_bucket",
 ]

@@ -42,7 +42,7 @@ import numpy as np
 from repro.core.adc import ADCConfig
 from repro.core.curvefit import BucketCurvefitModel
 from repro.core.fpca_sim import WeightEncoding, encode_weights, extract_windows
-from repro.core.mapping import FPCASpec
+from repro.core.mapping import FPCASpec, output_dims
 from repro.kernels.fpca_conv.kernel import fpca_conv_pallas
 
 __all__ = [
@@ -53,6 +53,7 @@ __all__ = [
     "freeze_model",
     "thaw_model",
     "window_bucket",
+    "StickyBucket",
 ]
 
 _LANES = 128
@@ -66,6 +67,72 @@ def window_bucket(n_keep: int, m_total: int) -> int:
     the masked impl serves the dense fallback (same outputs, no gather).
     """
     return min(1 << (max(n_keep, 1) - 1).bit_length(), m_total)
+
+
+class StickyBucket:
+    """Cross-call hysteresis on :func:`window_bucket` (streaming §3.4.5).
+
+    A busy scene makes per-tick kept-window counts oscillate across a
+    power-of-two boundary, and a stateless :func:`window_bucket` then flaps
+    the compiled bucket size between neighbours — every flap is an
+    executable-cache switch (at worst a recompile, at best a working-set
+    swap).  This helper holds the bucket *up*:
+
+    * growth is immediate — the gather contract requires the bucket to hold
+      every kept window, so a busier tick must switch up right away;
+    * shrinkage waits for ``patience`` **consecutive** under-full ticks
+      (raw bucket below the held one); only then does the bucket drop to the
+      current tick's raw requirement.
+
+    ``patience=1`` reproduces the stateless behaviour exactly (one
+    under-full tick suffices).  ``switches`` counts bucket transitions
+    actually served, ``shrinks_deferred`` the under-full ticks that kept the
+    larger bucket — the flap events hysteresis absorbed.
+
+    All-skipped ticks launch nothing, so they transition no executable —
+    but they are maximally under-full, so callers report them via
+    :meth:`observe_idle` to advance the shrink streak; after a quiet period
+    of at least ``patience`` ticks, the first active tick shrinks
+    immediately instead of serving a stale oversized bucket.
+    """
+
+    def __init__(self, patience: int = 4):
+        if patience < 1:
+            raise ValueError("patience must be >= 1")
+        self.patience = patience
+        self.bucket_size: int | None = None    # bucket currently held
+        self.switches = 0
+        self.shrinks_deferred = 0
+        self._under = 0                        # consecutive under-full ticks
+
+    def observe_idle(self) -> None:
+        """Count an all-skipped tick (nothing served, no transition) toward
+        the consecutive-under-full streak."""
+        if self.bucket_size is not None:
+            self._under += 1
+
+    def bucket(self, n_keep: int, m_total: int) -> int:
+        """Bucket to serve this tick's ``n_keep`` kept windows with."""
+        raw = window_bucket(n_keep, m_total)
+        held = self.bucket_size
+        if held is None or raw > held:
+            new = raw
+            self._under = 0
+        elif raw < held:
+            self._under += 1
+            if self._under >= self.patience:
+                new = raw
+                self._under = 0
+            else:
+                new = held
+                self.shrinks_deferred += 1
+        else:
+            new = held
+            self._under = 0
+        if held is not None and new != held:
+            self.switches += 1
+        self.bucket_size = new
+        return new
 
 
 def _tup(x) -> tuple:
@@ -403,17 +470,30 @@ def fpca_conv(
     if bn_offset is None:
         bn_offset = jnp.zeros((c_o,), jnp.float32)
     if window_mask is not None:
+        # sizing the bucket (m_bucket=None) and checking an undersized one
+        # need the concrete kept count; with an explicit full-size m_bucket
+        # the mask stays un-materialised (trace-safe, as before the
+        # zero-keep short-circuit existed)
+        n_keep = (
+            int(np.count_nonzero(np.asarray(window_mask)))
+            if m_bucket is None or m_bucket < int(np.size(window_mask))
+            else None
+        )
+        if n_keep == 0:
+            # all-skipped frame: the output is exact zeros by contract, so
+            # short-circuit without any kernel launch (an idle camera tick
+            # costs nothing on-device, matching the sensor's gated RS/SW
+            # lines never firing)
+            h_o, w_o = output_dims(spec)
+            return jnp.zeros((images.shape[0], h_o, w_o, c_o), jnp.float32)
         window_mask = jnp.asarray(window_mask)
         if m_bucket is None:
-            n_keep = int(np.count_nonzero(np.asarray(window_mask)))
             m_bucket = window_bucket(n_keep, int(window_mask.size))
-        elif m_bucket < int(window_mask.size):
-            n_keep = int(np.count_nonzero(np.asarray(window_mask)))
-            if n_keep > m_bucket:
-                raise ValueError(
-                    f"mask keeps {n_keep} windows > m_bucket {m_bucket}; the "
-                    "fixed-size gather would silently drop kept windows"
-                )
+        elif n_keep is not None and n_keep > m_bucket:
+            raise ValueError(
+                f"mask keeps {n_keep} windows > m_bucket {m_bucket}; the "
+                "fixed-size gather would silently drop kept windows"
+            )
     return _fpca_conv_jit(
         images,
         kernel,

@@ -1,0 +1,235 @@
+"""Adaptive streaming control plane: the keep-fraction / energy servo.
+
+The FPCA's point is *field*-programmability — §3.4.5 region skipping and the
+delta gate of :mod:`repro.serving.streaming` only become deployable once the
+gate threshold stops being a magic constant.  A sensor in the field must hold
+a frame-rate / energy budget while the scene changes under it (the servoed
+compute budget of the PPA line of work: Bose et al. 2019, Kaiser et al.
+2023).  This module closes that loop:
+
+* :class:`GateController` servos a stream's ``DeltaGateConfig.threshold``
+  against a **target kept-window fraction** (or executed-energy fraction)
+  per tick.  Each non-keyframe tick it observes the executed-window stats of
+  the latest gate mask — the kept fraction straight from the window keep
+  grid (bit-identical to
+  :func:`repro.core.analysis.streaming_frontend_report`'s
+  ``kept_window_frac``, minus its dense-baseline work), or
+  ``energy_vs_dense`` through that full report for the energy metric —
+  folds them into an EMA, and applies a proportional–integral step to the
+  threshold **in log space** (the block-delta statistics span decades;
+  multiplicative steps behave the same at 1e-3 as at 1e-1).
+
+* The step is **bounded** (``max_step`` nats per tick) and the threshold is
+  clamped to ``[min_threshold, max_threshold]``; the integrator uses
+  conditional **anti-windup** — it only accumulates while the actuator is
+  unsaturated, so a long stretch pinned at a bound (e.g. an empty scene that
+  can never reach the budget) does not wind up error that would overshoot for
+  seconds once the scene wakes up.
+
+* **Keyframe ticks are held out**: a keyframe keeps every block by
+  construction, so its kept fraction says nothing about the threshold.  The
+  controller records the tick in its history but neither updates the EMA nor
+  moves the threshold.
+
+Wiring: :class:`repro.serving.streaming.StreamServer` instantiates one
+controller per stream when given a :class:`GateControllerConfig`; each
+:class:`~repro.serving.streaming.StreamSession` then re-derives its own
+``DeltaGateConfig`` after every frame, so many cameras on one server converge
+independently to the shared budget.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import analysis, mapping
+
+__all__ = ["GateControllerConfig", "GateController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GateControllerConfig:
+    """Closed-loop gate-threshold servo knobs (per stream).
+
+    ``target`` is the budget: the kept-window fraction (``metric="keep"``)
+    or the executed-energy fraction of a dense readout (``metric="energy"``)
+    the stream should settle at.  The servo error is measured *relative to
+    the target* — ``(ema - target) / target``, clipped to
+    ``[err_low, err_high]`` — so a 5% budget and a 50% budget servo with the
+    same gains, and a saturated scene (observation pinned at 0 or 1) applies
+    a bounded, steady corrective step instead of a runaway one.
+
+    Gains are in nats of log-threshold per unit of *relative* error;
+    ``max_step`` bounds the per-tick actuation.  The integrator **leaks**
+    (``leak`` per tick) and is clamped to ``±windup``, and it only
+    accumulates while the actuator is unsaturated — three layers of
+    anti-windup, because the gate's block statistics give the plant a hard
+    cliff (a threshold above every block delta keeps nothing) that a plain
+    PI loop winds up against.
+    """
+
+    target: float = 0.15
+    metric: str = "keep"            # "keep" | "energy"
+    ema_alpha: float = 0.4          # EMA weight of the newest observation
+    kp: float = 0.35                # proportional gain  [nats / unit rel-error]
+    ki: float = 0.03                # integral gain      [nats / unit rel-error]
+    max_step: float = 0.4           # |Δ ln threshold| bound per tick [nats]
+    leak: float = 0.85              # integrator decay per tick
+    windup: float = 2.0             # |integrator| clamp [rel-error ticks]
+    err_low: float = -1.0           # rel-error clip (0 kept = exactly -1)
+    err_high: float = 3.0
+    deadband: float = 0.0           # |rel error| below which the servo holds
+    min_threshold: float = 1e-4
+    max_threshold: float = 1.0
+    history_len: int = 512          # ticks of trajectory retained (no leak)
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.target <= 1.0:
+            raise ValueError("target must be in (0, 1]")
+        if self.metric not in ("keep", "energy"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+        if not 0.0 < self.ema_alpha <= 1.0:
+            raise ValueError("ema_alpha must be in (0, 1]")
+        if self.max_step <= 0.0:
+            raise ValueError("max_step must be > 0")
+        if not 0.0 <= self.leak <= 1.0:
+            raise ValueError("leak must be in [0, 1]")
+        if self.err_low >= self.err_high:
+            raise ValueError("need err_low < err_high")
+        if not 0.0 < self.min_threshold <= self.max_threshold:
+            raise ValueError("need 0 < min_threshold <= max_threshold")
+        if self.history_len < 1:
+            raise ValueError("history_len must be >= 1")
+
+
+class GateController:
+    """Per-stream PI servo on the delta-gate threshold (see module docstring).
+
+    Call :meth:`observe` once per gated tick with that tick's block keep
+    mask; it returns the threshold the *next* tick should gate with.  The
+    trajectory is kept in :attr:`history` (one dict per tick, bounded to the
+    last ``history_len`` ticks so a long-running stream does not leak) so
+    benchmarks and tests can audit convergence.
+    """
+
+    def __init__(
+        self,
+        config: GateControllerConfig,
+        spec: mapping.FPCASpec,
+        threshold: float,
+        const: analysis.FrontendConstants | None = None,
+    ):
+        self.config = config
+        self.spec = spec
+        self.const = const or analysis.FrontendConstants()
+        self.threshold = float(
+            np.clip(threshold, config.min_threshold, config.max_threshold)
+        )
+        self._log_thr = math.log(self.threshold)
+        # dense baseline depends only on (spec, const): pay it once, not
+        # per tick on the serving hot loop
+        self._dense_e = analysis.frontend_energy(spec, self.const)["e_total"]
+        self._ema: float | None = None
+        self._integral = 0.0
+        self._tick = 0
+        self.history: collections.deque[dict] = collections.deque(
+            maxlen=config.history_len
+        )
+
+    @property
+    def ema(self) -> float | None:
+        """Current budget-metric EMA (None until the first non-keyframe tick)."""
+        return self._ema
+
+    def converged_tick(self, rel_tol: float = 0.2) -> int | None:
+        """First tick from which the EMA stays within ``±rel_tol`` of the
+        target for the rest of the *retained* history (None = never settled)."""
+        lo = self.config.target * (1.0 - rel_tol)
+        hi = self.config.target * (1.0 + rel_tol)
+        settled: int | None = None
+        for h in self.history:
+            if h["ema"] is not None and lo <= h["ema"] <= hi:
+                if settled is None:
+                    settled = h["tick"]
+            else:
+                settled = None
+        return settled
+
+    def _observation(self, block_mask: np.ndarray) -> float:
+        if self.config.metric == "keep":
+            # identical to streaming_frontend_report's kept_window_frac for
+            # a single mask, without the dense-baseline / cycle-schedule
+            # work — this runs on the host side of the serving hot loop
+            return float(mapping.active_window_mask(self.spec, block_mask).mean())
+        # identical to streaming_frontend_report's energy_vs_dense for a
+        # single mask, with the constant dense baseline hoisted to __init__
+        e = analysis.frontend_energy(self.spec, self.const, block_mask=block_mask)
+        return float(e["e_total"] / self._dense_e)
+
+    def observe(
+        self,
+        block_mask: np.ndarray,
+        *,
+        keyframe: bool = False,
+        observation: float | None = None,
+    ) -> float:
+        """Fold one tick's gate mask into the servo; returns the new threshold.
+
+        Keyframe ticks (mask keeps everything by construction) are recorded
+        but do not move the EMA or the threshold.  ``observation`` lets a
+        caller that already derived this tick's budget metric (the streaming
+        server computes the window keep grid anyway) pass it in instead of
+        having it re-derived from ``block_mask``.
+        """
+        cfg = self.config
+        observed: float | None = None
+        if not keyframe:
+            observed = (
+                observation if observation is not None
+                else self._observation(block_mask)
+            )
+            self._ema = (
+                observed
+                if self._ema is None
+                else cfg.ema_alpha * observed + (1.0 - cfg.ema_alpha) * self._ema
+            )
+            err = float(
+                np.clip(
+                    (self._ema - cfg.target) / cfg.target, cfg.err_low, cfg.err_high
+                )
+            )
+            if abs(err) > cfg.deadband:
+                u = cfg.kp * err + cfg.ki * self._integral
+                step = float(np.clip(u, -cfg.max_step, cfg.max_step))
+                new_log = float(
+                    np.clip(
+                        self._log_thr + step,
+                        math.log(cfg.min_threshold),
+                        math.log(cfg.max_threshold),
+                    )
+                )
+                saturated = (step != u) or (new_log != self._log_thr + step)
+                self._integral = float(
+                    np.clip(
+                        cfg.leak * self._integral + (0.0 if saturated else err),
+                        -cfg.windup,
+                        cfg.windup,
+                    )
+                )
+                self._log_thr = new_log
+                self.threshold = math.exp(new_log)
+        self.history.append(
+            {
+                "tick": self._tick,
+                "threshold": self.threshold,
+                "observed": observed,
+                "ema": self._ema,
+                "keyframe": keyframe,
+            }
+        )
+        self._tick += 1
+        return self.threshold

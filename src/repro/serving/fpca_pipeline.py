@@ -57,7 +57,7 @@ from repro.core.adc import ADCConfig
 from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
 from repro.core.fpca_sim import WeightEncoding
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
-from repro.kernels.fpca_conv.ops import make_fpca_conv_executable, window_bucket
+from repro.kernels.fpca_conv.ops import StickyBucket, make_fpca_conv_executable
 from repro.launch.mesh import data_axes
 
 __all__ = [
@@ -115,8 +115,12 @@ class PipelineStats:
     cache_misses: int = 0
     evictions: int = 0
     merged_groups: int = 0          # cross-config channel-stacked batches
+    fanout_batches: int = 0         # multi-config stream fan-out calls
     windows_total: int = 0          # windows submitted (incl. batch padding)
     windows_executed: int = 0       # windows that actually reached the kernel
+    launches_skipped: int = 0       # all-skipped batches short-circuited
+    bucket_switches: int = 0        # served bucket-size transitions
+    bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
 
 
 class _ExecutableCache:
@@ -171,6 +175,18 @@ class FPCAPipeline:
         a compile signature into one channel-stacked executable call (see
         module docstring).  Off by default: the per-config path preserves the
         exact reprogram-without-recompile executable reuse the base tests pin.
+      bucket_patience: sticky-bucket hysteresis for the region-skip row
+        buckets (:class:`repro.kernels.fpca_conv.ops.StickyBucket`).  Each
+        (compile signature, window count) keeps its own sticky state; a
+        bucket grows immediately but only shrinks after ``bucket_patience``
+        consecutive under-full batches, cutting executable-cache switches on
+        busy streams.  The default ``1`` is the stateless behaviour
+        (shrink immediately — exactly the pre-hysteresis pipeline).
+        Trade-off: a deferred shrink serves an up-to-2x-oversized row bucket
+        for up to ``bucket_patience`` ticks, so hysteresis pays off where a
+        switch is expensive (a recompile on a real-TPU serving path) and can
+        *cost* throughput where switches are cheap (warm-cache CPU hosts —
+        see the flap-vs-sticky numbers in ``BENCH_stream.json``).
     """
 
     def __init__(
@@ -184,6 +200,7 @@ class FPCAPipeline:
         cache_capacity: int = 8,
         mesh: jax.sharding.Mesh | None = None,
         cross_config_batching: bool = False,
+        bucket_patience: int = 1,
     ):
         if backend is None:
             backend = "pallas" if jax.default_backend() == "tpu" else "basis"
@@ -195,12 +212,19 @@ class FPCAPipeline:
         self.interpret = interpret
         self.mesh = mesh
         self.cross_config_batching = cross_config_batching
+        if bucket_patience < 1:
+            raise ValueError("bucket_patience must be >= 1")
+        self.bucket_patience = bucket_patience
+        self._sticky: dict[tuple, StickyBucket] = {}
         self._models: dict[int, BucketCurvefitModel] = {}
         if isinstance(model, BucketCurvefitModel):
             self._models[model.n_pixels] = model
         elif isinstance(model, dict):
             self._models.update(model)
         self._configs: dict[str, FrontendConfig] = {}
+        # channel-stacked (kernel, bn) planes per fan-out tuple: configs are
+        # immutable once registered, so the concat is paid once, not per tick
+        self._stacked: dict[tuple[str, ...], tuple[jax.Array, jax.Array]] = {}
         self._cache = _ExecutableCache(cache_capacity)
         self.stats = PipelineStats()
 
@@ -312,47 +336,136 @@ class FPCAPipeline:
                 window_keep = np.concatenate(
                     [window_keep, np.zeros((padded - b, h_o, w_o), bool)]
                 )
-        images = self._shard_batch(images)
         c_o = int(kernel.shape[0])
         m_total = padded * h_o * w_o
-        self.stats.batches += 1
         self.stats.windows_total += m_total
         if window_keep is None:
+            images = self._shard_batch(images)
+            self.stats.batches += 1
             run = self._executable(spec, c_o)
             self.stats.windows_executed += m_total
             return run(images, kernel, bn_offset)[:b]
         n_keep = int(np.count_nonzero(window_keep))
-        m_bucket = window_bucket(n_keep, m_total)
+        if n_keep == 0:
+            # all-skipped tick: the result is exact zeros by contract, so no
+            # kernel launches at all (0 executed windows in the stats); the
+            # sticky bucket still counts the tick as under-full so a stale
+            # large bucket shrinks on the first active tick after the lull
+            self.stats.launches_skipped += 1
+            sticky = self._sticky.get(
+                spec_signature(spec, c_o, self.adc, self.enc) + (m_total,)
+            )
+            if sticky is not None:
+                sticky.observe_idle()
+            return jnp.zeros((b, h_o, w_o, c_o), jnp.float32)
+        images = self._shard_batch(images)
+        self.stats.batches += 1
+        m_bucket = self._bucket_for(spec, c_o, n_keep, m_total)
         run = self._executable(spec, c_o, m_bucket=m_bucket)
         self.stats.windows_executed += m_bucket
         return run(images, kernel, bn_offset, jnp.asarray(window_keep))[:b]
 
+    def reset_bucket_state(self) -> None:
+        """Forget all sticky row-bucket state (counters in ``stats`` remain).
+
+        Benchmarks use this to make repeated serves of one scene evolve their
+        bucket sequence identically (so a timed pass replays only executables
+        the warm-up pass already compiled)."""
+        self._sticky.clear()
+
+    def _bucket_for(self, spec: FPCASpec, c_o: int, n_keep: int, m_total: int) -> int:
+        """Sticky row bucket for one (signature, window-count) batch shape.
+
+        With ``bucket_patience=1`` this is exactly
+        :func:`repro.kernels.fpca_conv.ops.window_bucket`, but bucket
+        transitions are still counted — ``stats.bucket_switches`` is the
+        flap count a hysteresis-free pipeline pays.
+        """
+        key = spec_signature(spec, c_o, self.adc, self.enc) + (m_total,)
+        sticky = self._sticky.get(key)
+        if sticky is None:
+            sticky = self._sticky[key] = StickyBucket(self.bucket_patience)
+        before = (sticky.switches, sticky.shrinks_deferred)
+        m_bucket = sticky.bucket(n_keep, m_total)
+        self.stats.bucket_switches += sticky.switches - before[0]
+        self.stats.bucket_shrinks_deferred += sticky.shrinks_deferred - before[1]
+        return m_bucket
+
     def run_config_batch(
         self,
-        name: str,
+        name: str | Sequence[str],
         images: Any,
         window_keep: np.ndarray | None = None,
     ) -> jax.Array:
-        """Non-blocking fused call for a frame batch of one registered config.
+        """Non-blocking fused call for a frame batch of registered config(s).
 
-        Returns ``(b, h_o, w_o, c_o)`` SS-ADC counts, dispatched but not
-        blocked on — the streaming server's double-buffered loop lives on
-        this method.  ``window_keep`` rows belonging to skipped windows come
-        back as exact zeros without having been computed.
+        With a single config name, returns ``(b, h_o, w_o, c_o)`` SS-ADC
+        counts, dispatched but not blocked on — the streaming server's
+        double-buffered loop lives on this method.  ``window_keep`` rows
+        belonging to skipped windows come back as exact zeros without having
+        been computed.
+
+        With a *sequence* of config names (multi-config fan-out: one camera
+        feeding several programmed configurations), every named config must
+        share the first one's :class:`FPCASpec`; their NVM weight planes are
+        stacked along the channel axis and the whole fan-out runs as ONE
+        fused call — the cross-config channel stacking of
+        :meth:`_submit_merged`, reused per streaming tick.  Returns
+        ``(b, h_o, w_o, sum(c_o))``; slice per-config channel ranges with
+        :meth:`config_channel_slices`.
         """
-        if name not in self._configs:
-            raise KeyError(f"unknown config {name!r}")
-        cfg = self._configs[name]
+        names = [name] if isinstance(name, str) else list(name)
+        if not names:
+            raise ValueError("need at least one config name")
+        for n in names:
+            if n not in self._configs:
+                raise KeyError(f"unknown config {n!r}")
+        cfgs = [self._configs[n] for n in names]
+        spec = cfgs[0].spec
+        for cfg in cfgs[1:]:
+            if cfg.spec != spec:
+                raise ValueError(
+                    f"multi-config fan-out requires a shared spec: config "
+                    f"{cfg.name!r} differs from {cfgs[0].name!r}"
+                )
         images = jnp.asarray(images, jnp.float32)
-        want = (cfg.spec.image_h, cfg.spec.image_w, cfg.spec.in_channels)
+        want = (spec.image_h, spec.image_w, spec.in_channels)
         if images.ndim != 4 or images.shape[1:] != want:
             raise ValueError(
                 f"expected (b, {want[0]}, {want[1]}, {want[2]}) batch for "
-                f"config {name!r}, got {images.shape}"
+                f"config {names[0]!r}, got {images.shape}"
             )
-        return self._run_batch(
-            cfg.spec, cfg.kernel, cfg.bn_offset, images, window_keep
-        )
+        if len(cfgs) == 1:
+            cfg = cfgs[0]
+            return self._run_batch(
+                spec, cfg.kernel, cfg.bn_offset, images, window_keep
+            )
+        stacked = self._stacked.get(tuple(names))
+        if stacked is None:
+            stacked = self._stacked[tuple(names)] = (
+                jnp.concatenate([c.kernel for c in cfgs], axis=0),
+                jnp.concatenate([c.bn_offset for c in cfgs], axis=0),
+            )
+        kernel, bn = stacked
+        batches_before = self.stats.batches
+        counts = self._run_batch(spec, kernel, bn, images, window_keep)
+        # a zero-kept tick short-circuits inside _run_batch: only count the
+        # fan-outs that actually launched a stacked call
+        self.stats.fanout_batches += self.stats.batches - batches_before
+        return counts
+
+    def config_channel_slices(
+        self, names: Sequence[str]
+    ) -> list[tuple[str, int, int]]:
+        """Per-config ``(name, lo, hi)`` channel ranges of a stacked fan-out
+        call (the channel order :meth:`run_config_batch` concatenates in)."""
+        slices: list[tuple[str, int, int]] = []
+        lo = 0
+        for n in names:
+            c_o = int(self._configs[n].kernel.shape[0])
+            slices.append((n, lo, lo + c_o))
+            lo += c_o
+        return slices
 
     def _group_window_keep(
         self, cfg: FrontendConfig, reqs: list[FrontendRequest]

@@ -28,6 +28,27 @@ are derived frame-to-frame.  This module closes that loop:
   configuration fan into ONE device batch per tick, reusing the pipeline's
   LRU executable cache and mesh sharding.
 
+Adaptive control plane (the deployment loop on top):
+
+* **Keep-fraction servo** — pass a
+  :class:`~repro.serving.control.GateControllerConfig` and every stream gets
+  its own :class:`~repro.serving.control.GateController`, closed-loop
+  servoing its gate threshold against a kept-fraction / energy budget from
+  the executed-window stats of each tick (EMA + bounded PI step in log
+  space, anti-windup; keyframe ticks held out).
+
+* **Multi-config fan-out** — a stream may be attached to *several*
+  registered configurations sharing one spec
+  (``add_stream(sid, ("edges", "blobs"))``); each tick gates the frame once
+  and serves every configuration through ONE channel-stacked fused call
+  (:meth:`FPCAPipeline.run_config_batch` with a name list), yielding one
+  :class:`StreamFrameResult` per (stream, config).
+
+* **Sticky buckets** — the pipeline's ``bucket_patience`` keeps the
+  compacted row bucket from flapping between power-of-two neighbours on
+  busy scenes; the server mirrors the switch counters into
+  :class:`StreamStats`.
+
 Bit-exactness contract: kept-window activations are identical to a dense
 readout (the dense reference in :mod:`repro.core.fpca_sim` is the oracle);
 skipped windows read as exact zeros.
@@ -38,16 +59,19 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
-from typing import Any, Iterable, Iterator, Mapping
+from typing import Any, Iterable, Iterator, Mapping, Sequence
 
 import jax
 import numpy as np
 
 from repro.core import analysis, mapping
+from repro.serving.control import GateController, GateControllerConfig
 from repro.serving.fpca_pipeline import FPCAPipeline
 
 __all__ = [
     "DeltaGateConfig",
+    "GateController",
+    "GateControllerConfig",
     "StreamSession",
     "StreamFrameResult",
     "StreamServer",
@@ -106,21 +130,36 @@ def block_delta_mask(
 
 
 class StreamSession:
-    """Per-stream state: previous frame, block ages, programmed config."""
+    """Per-stream state: previous frame, block ages, programmed config(s).
+
+    ``config`` may be one registered configuration name or a sequence of
+    names sharing one spec (multi-config fan-out); :attr:`configs` always
+    holds the normalised tuple and :attr:`config` the primary name.  With a
+    ``controller``, every gated frame feeds the closed-loop threshold servo
+    and the session's :attr:`gate` is re-derived for the next frame.
+    """
 
     def __init__(
         self,
         stream_id: str,
-        config: str,
+        config: str | Sequence[str],
         spec: mapping.FPCASpec,
         gate: DeltaGateConfig | None,
         history: int = 512,
+        controller: GateController | None = None,
     ):
         self.stream_id = stream_id
-        self.config = config
+        self.configs: tuple[str, ...] = (
+            (config,) if isinstance(config, str) else tuple(config)
+        )
+        if not self.configs:
+            raise ValueError("need at least one config name")
         self.spec = spec
         self.gate = gate                       # None = gating off (dense)
+        self.controller = controller if gate is not None else None
         self.frame_idx = 0
+        self.last_keyframe = False
+        self.last_window_mask: np.ndarray | None = None
         self._prev: np.ndarray | None = None
         bh = math.ceil(spec.eff_h / spec.skip_block)
         bw = math.ceil(spec.eff_w / spec.skip_block)
@@ -132,13 +171,20 @@ class StreamSession:
             maxlen=history
         )
 
+    @property
+    def config(self) -> str:
+        """Primary configuration name (first of :attr:`configs`)."""
+        return self.configs[0]
+
     def step(self, frame: np.ndarray) -> np.ndarray | None:
         """Advance one frame; returns the block keep mask (None = dense).
 
         A block is kept iff it changed within the last ``hysteresis + 1``
         frames; keyframes (the first frame, then every ``keyframe_interval``)
         keep everything but do NOT reset the ages — a static scene goes quiet
-        again immediately after the refresh.
+        again immediately after the refresh.  With a controller attached, the
+        mask also feeds the threshold servo, so the NEXT frame gates with the
+        servoed threshold.
         """
         if self.gate is None:
             self.frame_idx += 1
@@ -158,7 +204,24 @@ class StreamSession:
         )
         self._prev = cur
         self.frame_idx += 1
+        self.last_keyframe = keyframe
         self.block_masks.append(keep)
+        # derive the per-window keep grid ONCE per frame: the dispatch loop
+        # reuses it (last_window_mask) and the keep-metric servo observes its
+        # mean instead of re-deriving it
+        window = mapping.active_window_mask(self.spec, keep)
+        self.last_window_mask = window
+        if self.controller is not None:
+            obs = (
+                float(window.mean())
+                if self.controller.config.metric == "keep"
+                else None
+            )
+            new_thr = self.controller.observe(
+                keep, keyframe=keyframe, observation=obs
+            )
+            if new_thr != self.gate.threshold:
+                self.gate = dataclasses.replace(self.gate, threshold=new_thr)
         return keep
 
     def energy_report(self, const: analysis.FrontendConstants | None = None) -> dict:
@@ -171,7 +234,12 @@ class StreamSession:
 
 @dataclasses.dataclass
 class StreamFrameResult:
-    """One stream's activations for one tick of the serving loop."""
+    """One (stream, config)'s activations for one tick of the serving loop.
+
+    Single-config streams yield one result per tick; a multi-config stream
+    yields one per fanned-out configuration (same ``frame_idx`` and
+    ``block_mask``, per-config ``counts``), distinguished by ``config``.
+    """
 
     stream_id: str
     frame_idx: int
@@ -179,6 +247,7 @@ class StreamFrameResult:
     block_mask: np.ndarray | None   # gate output (None = dense readout)
     kept_windows: int
     total_windows: int
+    config: str = ""                # configuration these counts belong to
 
     @property
     def kept_fraction(self) -> float:
@@ -191,6 +260,9 @@ class StreamStats:
     frames: int = 0
     windows_total: int = 0
     windows_kept: int = 0           # logical kept windows (pre-bucket-pad)
+    launches_skipped: int = 0       # all-skipped ticks (no kernel launch)
+    bucket_switches: int = 0        # served bucket-size transitions
+    bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
 
 
 class StreamServer:
@@ -201,7 +273,12 @@ class StreamServer:
         executable cache and mesh sharding this server reuses.
       gate: delta-gate configuration applied to every stream; pass
         ``gating=False`` for a dense baseline server (no skipping — what the
-        benchmark compares against).
+        benchmark compares against).  With a ``controller``, this is only the
+        *initial* gate — each stream's threshold is then servoed
+        independently.
+      controller: optional :class:`GateControllerConfig`; every stream added
+        afterwards gets its own :class:`GateController` closed-loop servoing
+        the gate threshold against the configured budget.
       depth: maximum in-flight ticks.  ``2`` is classic double buffering:
         while the device chews on tick ``t``, the host gates and batches tick
         ``t+1``; results for ``t`` are realised only when ``t+2`` is about to
@@ -215,40 +292,72 @@ class StreamServer:
         *,
         depth: int = 2,
         gating: bool = True,
+        controller: GateControllerConfig | None = None,
     ):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self.pipeline = pipeline
         self.gate = gate if gating else None
+        self.controller = controller if gating else None
         self.depth = depth
         self.sessions: dict[str, StreamSession] = {}
         self.stats = StreamStats()
 
-    def add_stream(self, stream_id: str, config: str) -> StreamSession:
-        """Attach a camera stream to a registered pipeline configuration."""
+    def add_stream(
+        self, stream_id: str, config: str | Sequence[str]
+    ) -> StreamSession:
+        """Attach a camera stream to registered pipeline configuration(s).
+
+        A sequence of names fans the stream out to several programmed
+        configurations sharing one spec: each tick is gated once and served
+        through one channel-stacked fused call, yielding one
+        :class:`StreamFrameResult` per configuration.
+        """
         if stream_id in self.sessions:
             raise ValueError(f"stream {stream_id!r} already attached")
-        cfg = self.pipeline._configs.get(config)
-        if cfg is None:
-            raise KeyError(f"unknown config {config!r}")
-        session = StreamSession(stream_id, config, cfg.spec, self.gate)
+        names = (config,) if isinstance(config, str) else tuple(config)
+        cfgs = []
+        for n in names:
+            cfg = self.pipeline._configs.get(n)
+            if cfg is None:
+                raise KeyError(f"unknown config {n!r}")
+            cfgs.append(cfg)
+        spec = cfgs[0].spec
+        for cfg in cfgs[1:]:
+            if cfg.spec != spec:
+                raise ValueError(
+                    f"multi-config stream needs a shared spec: config "
+                    f"{cfg.name!r} differs from {cfgs[0].name!r}"
+                )
+        ctl = (
+            GateController(self.controller, spec, self.gate.threshold)
+            if (self.controller is not None and self.gate is not None)
+            else None
+        )
+        session = StreamSession(stream_id, names, spec, self.gate, controller=ctl)
         self.sessions[stream_id] = session
         return session
 
     # -- serving loop --------------------------------------------------------
     def _dispatch(self, frames: Mapping[str, Any]) -> list[dict]:
         """Host side of one tick: gate every stream, fan streams into one
-        batch per configuration, dispatch without blocking."""
-        per_config: dict[str, list[tuple[StreamSession, np.ndarray]]] = {}
+        batch per configuration group, dispatch without blocking."""
+        per_group: dict[tuple[str, ...], list[tuple[StreamSession, np.ndarray]]] = {}
         for stream_id, frame in frames.items():
             session = self.sessions.get(stream_id)
             if session is None:
                 raise KeyError(f"unknown stream {stream_id!r}")
-            per_config.setdefault(session.config, []).append(
+            per_group.setdefault(session.configs, []).append(
                 (session, np.asarray(frame, np.float32))
             )
+        pstats = self.pipeline.stats
+        before = (
+            pstats.bucket_switches,
+            pstats.bucket_shrinks_deferred,
+            pstats.launches_skipped,
+        )
         launches: list[dict] = []
-        for config, members in per_config.items():
+        for configs, members in per_group.items():
             spec = members[0][0].spec
             h_o, w_o = mapping.output_dims(spec)
             entries = []
@@ -257,9 +366,7 @@ class StreamServer:
             for session, frame in members:
                 frame_idx = session.frame_idx
                 block = session.step(frame)
-                window = (
-                    mapping.active_window_mask(spec, block) if gated else None
-                )
+                window = session.last_window_mask if gated else None
                 kept = int(window.sum()) if window is not None else h_o * w_o
                 entries.append(
                     {
@@ -277,9 +384,19 @@ class StreamServer:
                 self.stats.windows_kept += kept
             images = np.stack([frame for _, frame in members])
             counts = self.pipeline.run_config_batch(
-                config, images, np.stack(keeps) if gated else None
+                configs[0] if len(configs) == 1 else list(configs),
+                images,
+                np.stack(keeps) if gated else None,
             )
-            launches.append({"counts": counts, "entries": entries})
+            slices = (
+                self.pipeline.config_channel_slices(configs)
+                if len(configs) > 1
+                else [(configs[0], None, None)]
+            )
+            launches.append({"counts": counts, "entries": entries, "slices": slices})
+        self.stats.bucket_switches += pstats.bucket_switches - before[0]
+        self.stats.bucket_shrinks_deferred += pstats.bucket_shrinks_deferred - before[1]
+        self.stats.launches_skipped += pstats.launches_skipped - before[2]
         return launches
 
     def _finalize(self, launches: list[dict]) -> list[StreamFrameResult]:
@@ -288,16 +405,18 @@ class StreamServer:
         for launch in launches:
             counts = np.asarray(launch["counts"])     # blocks until ready
             for row, e in enumerate(launch["entries"]):
-                results.append(
-                    StreamFrameResult(
-                        stream_id=e["stream_id"],
-                        frame_idx=e["frame_idx"],
-                        counts=counts[row],
-                        block_mask=e["block_mask"],
-                        kept_windows=e["kept"],
-                        total_windows=e["total"],
+                for name, lo, hi in launch["slices"]:
+                    results.append(
+                        StreamFrameResult(
+                            stream_id=e["stream_id"],
+                            frame_idx=e["frame_idx"],
+                            counts=counts[row] if lo is None else counts[row, ..., lo:hi],
+                            block_mask=e["block_mask"],
+                            kept_windows=e["kept"],
+                            total_windows=e["total"],
+                            config=name,
+                        )
                     )
-                )
         return results
 
     def run(
@@ -320,6 +439,11 @@ class StreamServer:
             yield self._finalize(inflight.popleft())
 
     def serve(self, stream_id: str, frames: Iterable[Any]) -> Iterator[StreamFrameResult]:
-        """Single-stream convenience wrapper around :meth:`run`."""
+        """Single-stream convenience wrapper around :meth:`run`.
+
+        Yields one result per tick for a single-config stream; a
+        multi-config stream yields its per-config results back to back
+        (same ``frame_idx``, distinguished by ``result.config``).
+        """
         for results in self.run({stream_id: f} for f in frames):
-            yield results[0]
+            yield from results

@@ -21,15 +21,18 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+from repro.core import analysis
 from repro.core.fpca_sim import fpca_forward
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
 from repro.data.pipeline import SyntheticMovingObject
-from repro.kernels.fpca_conv.ops import window_bucket
+from repro.kernels.fpca_conv.ops import fpca_conv, window_bucket
 from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
 from repro.serving.saliency import saliency_mask
 from repro.serving.streaming import (
     DeltaGateConfig,
+    GateControllerConfig,
     StreamServer,
+    StreamSession,
     block_delta_mask,
 )
 
@@ -341,3 +344,317 @@ def test_saliency_mask_binned_grid():
     bh = -(-spec.eff_h // spec.skip_block)
     bw = -(-spec.eff_w // spec.skip_block)
     assert mask.shape == (bh, bw)
+
+
+# ---------------------------------------------------------------------------
+# bucket-edge bitwise parity: the flap-prone kept counts the grid never pins
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["basis", "pallas"])
+def test_masked_parity_at_bucket_edges(bucket_model, backend):
+    """Bit-exact masked-vs-dense at n_keep = 0, 1, pow2-1, pow2, pow2+1, M.
+
+    These kept counts sit exactly on the bucket boundaries (window_bucket
+    transitions), where an off-by-one in the gather/row-validity logic would
+    truncate a kept window or leak a padding row — the PR-2 parity grid only
+    ever exercised one sparse mask far from the edges.
+    """
+    spec = _spec(5, 5, 1)
+    images, kernel = _data(spec, batch=2)
+    h_o, w_o = output_dims(spec)
+    M = images.shape[0] * h_o * w_o
+    dense = np.asarray(
+        fpca_forward(
+            images, kernel, spec, model=bucket_model, mode="bucket_sigmoid",
+            hard=True,
+        )["counts"]
+    )
+    kw = {"interpret": True} if backend == "pallas" else {}
+    pow2 = 8
+    rng = np.random.default_rng(21)
+    scatter = rng.permutation(M)
+    for n_keep in (0, 1, pow2 - 1, pow2, pow2 + 1, M):
+        flat = np.zeros(M, bool)
+        flat[scatter[:n_keep]] = True
+        wm = flat.reshape(images.shape[0], h_o, w_o)
+        got = np.asarray(
+            fpca_conv(
+                images, kernel, bucket_model, spec=spec, impl=backend,
+                window_mask=wm, **kw,
+            )
+        )
+        np.testing.assert_array_equal(got[wm], dense[wm], err_msg=f"n_keep={n_keep}")
+        assert np.all(got[~wm] == 0), f"n_keep={n_keep}"
+
+
+# ---------------------------------------------------------------------------
+# zero-kept ticks: short-circuit, and the accounting stays division-safe
+# ---------------------------------------------------------------------------
+
+
+def test_masked_call_with_full_bucket_stays_trace_safe(bucket_model):
+    """With an explicit full-size m_bucket the mask is never materialised on
+    host, so the masked entry point still jits over traced masks (the
+    zero-keep short-circuit must not regress this)."""
+    import jax
+
+    spec = _spec()
+    images, kernel = _data(spec, batch=1)
+    h_o, w_o = output_dims(spec)
+    M = h_o * w_o
+
+    @jax.jit
+    def run(imgs, mask):
+        return fpca_conv(
+            imgs, kernel, bucket_model, spec=spec, impl="basis",
+            window_mask=mask, m_bucket=M,
+        )
+
+    keep = np.zeros((1, h_o, w_o), bool)
+    keep[0, 0, 0] = True
+    out = np.asarray(run(images, keep))          # traces without concretising
+    dense = np.asarray(
+        fpca_forward(
+            images, kernel, spec, model=bucket_model, mode="bucket_sigmoid",
+            hard=True,
+        )["counts"]
+    )
+    np.testing.assert_array_equal(out[keep], dense[keep])
+    assert np.all(out[~keep] == 0)
+
+
+@pytest.mark.parametrize("backend", ["basis", "pallas"])
+def test_compacted_kernel_handles_zero_valid_rows(bucket_model, backend):
+    """The in-kernel gather/row-validity path at zero valid rows.
+
+    An eager all-false mask short-circuits on host before any launch, so
+    this is only reachable through a pre-built bucketed executable (the
+    serving cache's entry point, whose masks enter traced) — the kernel then
+    runs a bucket whose every row is padding and the epilogue must still
+    produce exact zeros."""
+    import jax.numpy as jnp
+
+    from repro.kernels.fpca_conv.ops import make_fpca_conv_executable
+
+    spec = _spec()
+    images, kernel = _data(spec, batch=1)
+    h_o, w_o = output_dims(spec)
+    kw = {"interpret": True} if backend == "pallas" else {}
+    run_exe = make_fpca_conv_executable(
+        bucket_model, spec=spec, impl=backend, m_bucket=8, **kw  # 8 < M
+    )
+    bn = jnp.zeros((spec.out_channels,), jnp.float32)
+
+    def run(imgs, mask):
+        return run_exe(jnp.asarray(imgs), jnp.asarray(kernel), bn, jnp.asarray(mask))
+
+    out = np.asarray(run(images, np.zeros((1, h_o, w_o), bool)))
+    assert out.shape == (1, h_o, w_o, spec.out_channels)
+    assert np.all(out == 0)
+    # ...and with valid rows present, the same jitted bucket stays bit-exact
+    keep = np.zeros((1, h_o, w_o), bool)
+    keep.flat[[0, 3, 7]] = True
+    got = np.asarray(run(images, keep))
+    dense = np.asarray(
+        fpca_forward(
+            images, kernel, spec, model=bucket_model, mode="bucket_sigmoid",
+            hard=True,
+        )["counts"]
+    )
+    np.testing.assert_array_equal(got[keep], dense[keep])
+    assert np.all(got[~keep] == 0)
+
+
+def test_zero_kept_tick_short_circuits_without_launch(bucket_model):
+    spec = _spec()
+    _, kernel = _data(spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    h_o, w_o = output_dims(spec)
+    img = _data(spec, batch=1)[0]
+    before = (pipe.stats.batches, pipe.stats.windows_executed)
+    out = pipe.run_config_batch("cam", img, np.zeros((1, h_o, w_o), bool))
+    assert out.shape == (1, h_o, w_o, spec.out_channels)
+    assert np.all(np.asarray(out) == 0)
+    # no fused call was dispatched and no window was executed
+    assert pipe.stats.batches == before[0]
+    assert pipe.stats.windows_executed == before[1]
+    assert pipe.stats.launches_skipped == 1
+
+
+def test_zero_kept_accounting_no_division_by_zero():
+    spec = _spec()
+    bh = -(-spec.eff_h // spec.skip_block)
+    bw = -(-spec.eff_w // spec.skip_block)
+    empty = np.zeros((bh, bw), bool)
+    lat = analysis.frontend_latency(spec, block_mask=empty)
+    assert lat["n_cycles"] == 0 and lat["t_total"] == 0
+    assert lat["fps"] == float("inf")
+    rep = analysis.streaming_frontend_report(spec, [empty, empty])
+    assert rep["executed_windows"] == 0 and rep["executed_cycles"] == 0
+    assert rep["kept_window_frac"] == 0 and rep["energy_vs_dense"] == 0
+    assert rep["fps_effective"] == float("inf")
+    # ...and through the session-level report
+    session = StreamSession("s", "cam", spec, DeltaGateConfig())
+    session.block_masks.extend([empty, empty])
+    srep = session.energy_report()
+    assert srep["executed_windows"] == 0
+
+
+def test_all_skipped_stream_ticks_skip_launches(bucket_model):
+    """A static scene (no keyframes) produces all-skipped ticks end to end."""
+    spec = _spec()
+    _, kernel = _data(spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    server = StreamServer(
+        pipe, DeltaGateConfig(threshold=0.05, hysteresis=0, keyframe_interval=0)
+    )
+    server.add_stream("s0", "cam")
+    frame = np.full((H, W, 3), 0.5, np.float32)
+    results = list(server.serve("s0", [frame] * 4))
+    assert [r.kept_windows for r in results[1:]] == [0, 0, 0]
+    assert all(np.all(r.counts == 0) for r in results[1:])
+    assert server.stats.launches_skipped == 3
+
+
+# ---------------------------------------------------------------------------
+# sticky bucket hysteresis through the serving stack
+# ---------------------------------------------------------------------------
+
+
+def test_sticky_buckets_cut_switches_with_identical_outputs(bucket_model):
+    """Keyframe-driven bucket flaps: patience rides them out, counts match."""
+    spec = _spec()
+    _, kernel = _data(spec)
+    gate = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=4)
+    stream = SyntheticMovingObject((H, W), seed=8, radius=4.0)
+
+    def serve(patience):
+        pipe = FPCAPipeline(bucket_model, backend="basis", bucket_patience=patience)
+        pipe.register("cam", spec, kernel)
+        server = StreamServer(pipe, gate)
+        server.add_stream("s0", "cam")
+        results = list(server.serve("s0", stream.frames(12)))
+        return results, server
+
+    flap, flap_server = serve(1)
+    sticky, sticky_server = serve(8)
+    # identical gate decisions, bit-identical activations
+    for a, b in zip(flap, sticky):
+        np.testing.assert_array_equal(a.counts, b.counts)
+        np.testing.assert_array_equal(a.block_mask, b.block_mask)
+    # keyframes force the dense bucket every 4 ticks: the stateless pipeline
+    # flaps down after each, the sticky one holds
+    assert flap_server.stats.bucket_switches > 0
+    assert sticky_server.stats.bucket_switches < flap_server.stats.bucket_switches
+    assert sticky_server.stats.bucket_shrinks_deferred > 0
+
+
+# ---------------------------------------------------------------------------
+# keep-fraction servo: convergence on the synthetic stream (§ acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_controller_converges_to_keep_budget():
+    """The servo lands the kept fraction within ±20% of a 0.15 budget inside
+    32 ticks of a SyntheticMovingObject stream (no kernels needed: the servo
+    runs on the gate masks alone)."""
+    spec = FPCASpec(image_h=64, image_w=64, out_channels=4, kernel=5, stride=5)
+    from repro.serving.control import GateController
+
+    gate = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=0)
+    ctl = GateController(GateControllerConfig(target=0.15), spec, gate.threshold)
+    session = StreamSession("s", "cam", spec, gate, controller=ctl)
+    stream = SyntheticMovingObject((64, 64), seed=2, radius=7.0)
+    for t in range(40):
+        session.step(stream.frame_at(t))
+    converged = ctl.converged_tick(rel_tol=0.2)
+    assert converged is not None and converged <= 32
+    assert 0.12 <= ctl.ema <= 0.18
+    # the servoed threshold is what the session now gates with
+    assert session.gate.threshold == ctl.threshold
+
+
+def test_controller_server_wiring_per_stream(bucket_model):
+    """Each stream servos independently; thresholds actually move."""
+    spec = _spec()
+    _, kernel = _data(spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    server = StreamServer(
+        pipe,
+        DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=0),
+        controller=GateControllerConfig(target=0.3),
+    )
+    server.add_stream("s0", "cam")
+    server.add_stream("s1", "cam")
+    cams = {
+        "s0": SyntheticMovingObject((H, W), seed=4, radius=4.0),
+        "s1": SyntheticMovingObject((H, W), seed=9, radius=6.0),
+    }
+    ticks = [{sid: cam.frame_at(t) for sid, cam in cams.items()} for t in range(8)]
+    for _ in server.run(ticks):
+        pass
+    c0 = server.sessions["s0"].controller
+    c1 = server.sessions["s1"].controller
+    assert c0 is not None and c1 is not None and c0 is not c1
+    assert len(c0.history) == 8 and len(c1.history) == 8
+    # different scenes -> different servoed thresholds
+    assert server.sessions["s0"].gate.threshold != server.sessions["s1"].gate.threshold
+
+
+# ---------------------------------------------------------------------------
+# multi-config streams: one camera fanned to several programmed configs
+# ---------------------------------------------------------------------------
+
+
+def test_multi_config_stream_matches_single_config_serving(bucket_model):
+    """One channel-stacked call per tick == each config served alone."""
+    spec = _spec()
+    rng = np.random.default_rng(31)
+    kA = (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32)
+    kB = (rng.normal(size=(6, 5, 5, 3)) * 0.2).astype(np.float32)
+    gate = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=4)
+    stream = SyntheticMovingObject((H, W), seed=12, radius=4.0)
+    # ONE pipeline (and executable cache) serves all three runs: parity does
+    # not depend on cache state, and sharing keeps the fast lane cheap
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("A", spec, kA)
+    pipe.register("B", spec, kB)
+
+    def serve(configs):
+        server = StreamServer(pipe, gate)
+        server.add_stream("s0", configs)
+        return [
+            r
+            for results in server.run({"s0": stream.frame_at(t)} for t in range(5))
+            for r in results
+        ]
+
+    b0, f0 = pipe.stats.batches, pipe.stats.fanout_batches
+    fanned = serve(("A", "B"))
+    # one result per (tick, config), served by ONE stacked call per tick
+    assert pipe.stats.fanout_batches - f0 == 5
+    assert pipe.stats.batches - b0 == 5         # not 10: the fan-out is fused
+    soloA = serve("A")
+    soloB = serve("B")
+    assert [r.config for r in fanned] == ["A", "B"] * 5
+    for got, want in zip([r for r in fanned if r.config == "A"], soloA):
+        assert got.counts.shape == (4, 4, 4)
+        np.testing.assert_array_equal(got.counts, want.counts)
+        np.testing.assert_array_equal(got.block_mask, want.block_mask)
+    for got, want in zip([r for r in fanned if r.config == "B"], soloB):
+        assert got.counts.shape == (4, 4, 6)
+        np.testing.assert_array_equal(got.counts, want.counts)
+
+
+def test_multi_config_stream_requires_shared_spec(bucket_model):
+    rng = np.random.default_rng(32)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("A", _spec(5, 5, 1), (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32))
+    pipe.register("B", _spec(3, 2, 1), (rng.normal(size=(4, 3, 3, 3)) * 0.2).astype(np.float32))
+    server = StreamServer(pipe)
+    with pytest.raises(ValueError, match="shared spec"):
+        server.add_stream("s0", ("A", "B"))
