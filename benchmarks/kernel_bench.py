@@ -90,12 +90,12 @@ def _frontend_rows(model) -> list[Row]:
     pipe = FPCAPipeline(model, backend="basis")
     pipe.register("bench", spec, kernel)
     reqs = [FrontendRequest("bench", frames[i]) for i in range(B)]
-    us_batched = time_fn(lambda: pipe.submit(reqs), iters=5)
+    us_batched = time_fn(lambda: pipe.serve(reqs), iters=5)
 
     # per-image loop over the same fused backend: what batching buys
     # (a real B-iteration loop, not an extrapolated singleton timing)
     singles = [[FrontendRequest("bench", frames[i])] for i in range(B)]
-    us_loop = time_fn(lambda: [pipe.submit(s) for s in singles], iters=3)
+    us_loop = time_fn(lambda: [pipe.serve(s) for s in singles], iters=3)
 
     # dense reference simulation, batched (the pre-kernel path)
     ref = jax.jit(

@@ -72,6 +72,14 @@ def compare_stream(frontend_path: Path, stream_path: Path) -> None:
               f"converged at {conv_s} / {ctl['ticks']} ticks "
               f"(final thr {ctl['final_threshold']:.4f}, "
               f"ema {ctl['final_ema']:.3f})")
+    ctl_e = st.get("controller_energy")
+    if ctl_e:
+        conv = ctl_e["converged_tick"]
+        conv_s = f"tick {conv}" if conv is not None else "never"
+        print(f"  energy-budget servo       : target {ctl_e['target_energy_frac']:.2f} "
+              f"converged at {conv_s} / {ctl_e['ticks']} ticks "
+              f"(final thr {ctl_e['final_threshold']:.4f}, "
+              f"ema {ctl_e['final_ema']:.3f})")
 
 
 def main() -> None:

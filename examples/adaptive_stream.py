@@ -20,9 +20,9 @@ import numpy as np
 from repro.core.curvefit import fit_bucket_model
 from repro.core.mapping import FPCASpec
 from repro.data.pipeline import SyntheticMovingObject
-from repro.serving.control import GateControllerConfig
+from repro.fpca import DeltaGateConfig, GateControllerConfig
 from repro.serving.fpca_pipeline import FPCAPipeline
-from repro.serving.streaming import DeltaGateConfig, StreamServer
+from repro.serving.streaming import StreamServer
 
 H = W = 96
 N_FRAMES = 40
@@ -46,8 +46,21 @@ def main() -> None:
         DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=0),
         controller=GateControllerConfig(target=TARGET),
     )
-    # one camera, fanned to BOTH configs: one stacked kernel call per tick
-    server.add_stream("cam0", ("edges", "blobs"))
+    # one camera, fanned to BOTH configs: one stacked kernel call per tick.
+    # Each config gets its OWN gate + servo (per-config thresholds): "edges"
+    # servos to the tight budget, "blobs" to a looser one — the fused call
+    # executes the union mask, each config's counts honour its own gate.
+    server.add_stream(
+        "cam0", ("edges", "blobs"),
+        gate={
+            "edges": DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=0),
+            "blobs": DeltaGateConfig(threshold=0.05, hysteresis=1, keyframe_interval=0),
+        },
+        controller={
+            "edges": GateControllerConfig(target=TARGET),
+            "blobs": GateControllerConfig(target=2 * TARGET),
+        },
+    )
     cam = SyntheticMovingObject((H, W), seed=1, radius=12.0)
 
     print(f"\nservoing gate threshold to a {TARGET:.0%} kept-window budget:")
@@ -64,10 +77,14 @@ def main() -> None:
             )
             print(f"{h['tick']:>4} {h['threshold']:>10.4f} {ema}  {served}")
 
-    ctl = server.sessions["cam0"].controller
+    session = server.sessions["cam0"]
+    ctl = session.controller                      # primary config ("edges")
     conv = ctl.converged_tick(rel_tol=0.2)
-    print(f"\nconverged to ±20% of budget at tick {conv} "
+    print(f"\nedges converged to ±20% of budget at tick {conv} "
           f"(final threshold {ctl.threshold:.4f}, EMA {ctl.ema:.3f})")
+    ctl_b = session.state_for("blobs").controller
+    print(f"blobs servoed independently to its own {2*TARGET:.0%} budget "
+          f"(threshold {ctl_b.threshold:.4f}, EMA {ctl_b.ema:.3f})")
     print(f"fan-out: {pipe.stats.fanout_batches} stacked calls served "
           f"{n_results} (stream, config) results")
     print(f"sticky buckets: {server.stats.bucket_switches} executable "

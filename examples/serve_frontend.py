@@ -8,8 +8,9 @@ then streams a shuffled mix of frames through the spec-bucketed scheduler:
 
 * requests are grouped per configuration and served as one fused batched
   kernel call each;
-* jitted executables come from a bounded LRU cache keyed by compile
-  signature — reprogramming weights does not recompile;
+* every compile signature is one explicit ``repro.fpca.CompiledFrontend``
+  handle; all handles share one bounded LRU executable cache — reprogramming
+  weights does not recompile;
 * on TPU the Pallas kernel serves; this script uses the XLA basis-form
   backend so it runs fast on any host.
 """
@@ -18,6 +19,7 @@ import time
 
 import numpy as np
 
+from repro import fpca
 from repro.core.curvefit import fit_bucket_model
 from repro.core.mapping import FPCASpec
 from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
@@ -26,21 +28,39 @@ from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
 def main() -> None:
     print("fitting bucket-select curvefit model (one-off calibration)...")
     model = fit_bucket_model(n_pixels=75)
-    pipe = FPCAPipeline(model, backend="basis", cache_capacity=4)
 
     rng = np.random.default_rng(0)
+    spec = FPCASpec(image_h=80, image_w=80, out_channels=8, kernel=5, stride=5)
+
+    # -- the unified API on one handle: compile -> run -> reprogram ----------
+    kernel = rng.normal(size=(8, 5, 5, 3)).astype(np.float32) * 0.2
+    fe = fpca.compile(fpca.FPCAProgram(spec=spec), backend="basis",
+                      weights=kernel, model=model)
+    batch = rng.uniform(0, 1, (4, 80, 80, 3)).astype(np.float32)
+    counts = fe.run(batch)
+    fe.reprogram(rng.normal(size=(8, 5, 5, 3)).astype(np.float32) * 0.2)
+    counts = fe.run(batch)                      # same executable, new weights
+    info = fe.cache_info()
+    print(f"compiled handle: {counts.shape} counts; cache {info.misses} "
+          f"compiles across {fe.stats.reprograms} reprograms "
+          f"(hits={info.hits})")
+
+    # -- heterogeneous fleet serving through the pipeline layer --------------
+    pipe = FPCAPipeline(model, backend="basis", cache_capacity=4)
     configs = {
-        "dense_5x5": FPCASpec(image_h=80, image_w=80, out_channels=8, kernel=5, stride=5),
+        "dense_5x5": spec,
         "overlap_3x3": FPCASpec(image_h=80, image_w=80, out_channels=8, kernel=3, stride=2),
         "binned_lowpower": FPCASpec(
             image_h=80, image_w=80, out_channels=8, kernel=5, stride=5, binning=2
         ),
     }
-    for name, spec in configs.items():
-        k = spec.kernel
-        kernel = rng.normal(size=(spec.out_channels, k, k, 3)).astype(np.float32) * 0.2
-        pipe.register(name, spec, kernel)
-        print(f"registered {name}: out_shape={pipe._configs[name].out_shape}")
+    for name, s in configs.items():
+        k = s.kernel
+        cfg = pipe.register(
+            name, s,
+            rng.normal(size=(s.out_channels, k, k, 3)).astype(np.float32) * 0.2,
+        )
+        print(f"registered {name}: out_shape={cfg.out_shape}")
 
     names = list(configs)
     requests = [
@@ -52,10 +72,10 @@ def main() -> None:
     ]
 
     t0 = time.perf_counter()
-    results = pipe.submit(requests)   # cold: includes compiles
+    results = pipe.serve(requests)   # cold: includes compiles
     t_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    results = pipe.submit(requests)   # warm: pure serving
+    results = pipe.serve(requests)   # warm: pure serving
     t_warm = time.perf_counter() - t0
 
     print(f"served {len(results)} frames across {len(configs)} specs")

@@ -20,8 +20,9 @@ import numpy as np
 from repro.core.curvefit import fit_bucket_model
 from repro.core.mapping import FPCASpec
 from repro.data.pipeline import SyntheticMovingObject
+from repro.fpca import DeltaGateConfig
 from repro.serving.fpca_pipeline import FPCAPipeline
-from repro.serving.streaming import DeltaGateConfig, StreamServer
+from repro.serving.streaming import StreamServer
 
 H = W = 96
 N_FRAMES = 48

@@ -30,8 +30,9 @@ import numpy as np
 
 from repro.core.curvefit import fit_bucket_model
 from repro.core.device_models import CircuitParams
-from repro.core.frontend import FPCAFrontend, FPCAFrontendConfig
+from repro.core.frontend import FPCAFrontend
 from repro.core.mapping import FPCASpec, output_dims
+from repro.fpca import FPCAProgram
 from repro.data.pipeline import SyntheticVWW
 from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
 
@@ -124,7 +125,7 @@ def main() -> None:
     print("fitting bucket model...")
     model = fit_bucket_model(circuit)
     layer = FPCAFrontend(
-        FPCAFrontendConfig(
+        FPCAProgram(
             spec=SPEC,
             circuit=circuit,
             adc=ADCConfig(bits=args.adc_bits),

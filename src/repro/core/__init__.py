@@ -36,7 +36,7 @@ from repro.core.fpca_sim import (
     extract_windows,
     fpca_forward,
 )
-from repro.core.frontend import FPCAFrontend, FPCAFrontendConfig
+from repro.core.frontend import FPCAFrontend
 from repro.core.mapping import (
     FPCASpec,
     active_window_mask,
@@ -45,6 +45,17 @@ from repro.core.mapping import (
     output_dims,
     schedule,
 )
+
+
+def __getattr__(name: str):
+    # deprecated names forward lazily so `import repro.core` stays clean
+    # under -W error::DeprecationWarning; accessing them warns (see
+    # repro.core.frontend / repro.fpca for the canonical replacements)
+    if name == "FPCAFrontendConfig":
+        from repro.core import frontend
+
+        return frontend.FPCAFrontendConfig
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "ADCConfig",

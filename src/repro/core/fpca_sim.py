@@ -32,6 +32,7 @@ evaluated through one fused call (the MXU-friendly layout); the cycle
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Literal
 
 import jax
@@ -52,6 +53,8 @@ __all__ = [
 ]
 
 Mode = Literal["oracle", "bucket_hard", "bucket_sigmoid"]
+# Backend names resolve through the repro.fpca.backends registry; the Literal
+# documents the built-ins, third-party registrations are equally valid.
 Backend = Literal["reference", "pallas", "basis"]
 
 
@@ -210,9 +213,28 @@ def fpca_forward(
     circuit = circuit or CircuitParams()
     adc = adc or ADCConfig()
     enc = enc or WeightEncoding()
-    if backend not in ("reference", "pallas", "basis"):
-        raise ValueError(f"unknown backend {backend!r}")
-    if backend != "reference":
+    # resolve through the pluggable backend registry (repro.fpca.backends);
+    # imported lazily — the registry package imports this module
+    from repro.fpca.backends import get_backend
+
+    be = get_backend(backend)
+    if not be.fused and be.name != "reference":
+        # a registered non-fused third-party backend has no entry point
+        # here: falling through to the built-in dense path would silently
+        # serve reference-sim outputs under the third party's name
+        raise ValueError(
+            f"backend {be.name!r} is not servable through fpca_forward; "
+            f"use repro.fpca.compile(program, backend={be.name!r}).run(images)"
+        )
+    if be.fused:
+        warnings.warn(
+            "fpca_forward(backend=...) fused serving is a deprecation shim; "
+            "use repro.fpca.compile(program, backend=...).run(images) — the "
+            "explicit executable handle with a held cache and "
+            "reprogram-without-recompile",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         if mode != "bucket_sigmoid" or not hard:
             raise ValueError(
                 f"backend={backend!r} serves the calibrated bucket model with hard "
@@ -221,7 +243,12 @@ def fpca_forward(
             )
         if model is None:
             raise ValueError("fused backends need a fitted BucketCurvefitModel")
-        from repro.kernels.fpca_conv.ops import fpca_conv  # circular at import time
+        if be.conv is None:
+            raise ValueError(
+                f"backend {be.name!r} registers no one-shot conv entry point; "
+                f"serve it through repro.fpca.compile(program, "
+                f"backend={be.name!r}).run(images)"
+            )
 
         images = image if image.ndim == 4 else image[None]
         c_o = kernel.shape[0]
@@ -235,9 +262,9 @@ def fpca_forward(
             # below stays the bit-exact oracle on kept windows)
             keep = mapping.active_window_mask(spec, block_mask)
             window_mask = np.broadcast_to(keep, (images.shape[0],) + keep.shape)
-        counts = fpca_conv(
+        counts = be.conv(
             images, kernel, model, spec=spec, adc=adc, enc=enc, bn_offset=bn,
-            impl=backend, interpret=interpret, window_mask=window_mask,
+            interpret=interpret, window_mask=window_mask,
         )
         if image.ndim == 3:
             counts = counts[0]

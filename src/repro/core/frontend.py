@@ -8,37 +8,49 @@ oracle.  The gap between the two *is* the hardware/algorithm co-design story:
 ``examples/train_fpca_cnn.py`` shows that a network trained through the bucket
 model keeps its accuracy when evaluated on the oracle, while a naively trained
 network (ideal conv) degrades.
+
+The layer is configured by an :class:`repro.fpca.FPCAProgram` (the unified
+program spec); the former ``FPCAFrontendConfig`` name is a deprecated alias
+of it, kept importable from here.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.adc import ADCConfig
 from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
-from repro.core.device_models import CircuitParams
-from repro.core.fpca_sim import WeightEncoding, calibrate_gain, fpca_forward
-from repro.core.mapping import FPCASpec, output_dims
+from repro.core.fpca_sim import calibrate_gain, fpca_forward
+from repro.core.mapping import output_dims
 
 __all__ = ["FPCAFrontendConfig", "FPCAFrontend"]
 
 
-@dataclasses.dataclass(frozen=True)
-class FPCAFrontendConfig:
-    spec: FPCASpec
-    circuit: CircuitParams = CircuitParams()
-    adc: ADCConfig = ADCConfig()
-    enc: WeightEncoding = WeightEncoding(n_levels=16, w_scale=1.0)
+def __getattr__(name: str) -> Any:
+    if name == "FPCAFrontendConfig":
+        warnings.warn(
+            "FPCAFrontendConfig is deprecated; use repro.fpca.FPCAProgram "
+            "(same fields: spec, circuit, adc, enc)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.fpca.program import FPCAProgram
+
+        return FPCAProgram
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class FPCAFrontend:
-    """Functional module: ``init(key) -> params``, ``apply(params, x) -> y``."""
+    """Functional module: ``init(key) -> params``, ``apply(params, x) -> y``.
 
-    def __init__(self, config: FPCAFrontendConfig, model: BucketCurvefitModel | None = None):
+    ``config`` is an :class:`repro.fpca.FPCAProgram` (``spec`` / ``circuit``
+    / ``adc`` / ``enc`` are the fields this layer reads).
+    """
+
+    def __init__(self, config: Any, model: BucketCurvefitModel | None = None):
         self.config = config
         # One fitted bucket model per circuit configuration (cached by caller
         # across layers/experiments; fitting is a one-off ~seconds cost).
@@ -82,9 +94,9 @@ class FPCAFrontend:
         ``train=True``: differentiable path (sigmoid bucket model + STEs);
         reference backend only.
         ``train=False``: deployment path.  ``backend="reference"`` evaluates
-        the circuit oracle (ground truth); ``backend="pallas"`` / ``"basis"``
-        serve the calibrated bucket model through the fused production kernel
-        — the whole batch in one flattened kernel call.
+        the circuit oracle (ground truth); fused backends route through the
+        (deprecated) ``fpca_forward`` shim — prefer
+        ``repro.fpca.compile(program).run(images)`` for fused serving.
         """
         cfg = self.config
         if train and backend != "reference":

@@ -1,0 +1,84 @@
+"""``repro.fpca`` — the unified compile/execute API for the FPCA frontend.
+
+One program spec, explicit executables, pluggable backends::
+
+    from repro import fpca
+    from repro.core.mapping import FPCASpec
+
+    program = fpca.FPCAProgram(
+        spec=FPCASpec(image_h=96, image_w=96, out_channels=8, kernel=5,
+                      stride=5),
+        gate=fpca.DeltaGateConfig(threshold=0.02),
+    )
+    fe = fpca.compile(program, backend="basis", weights=kernel)
+    counts = fe.run(batch)                  # fused serving call
+    fe.reprogram(new_kernel)                # NVM rewrite — zero recompiles
+    for result in fe.stream(camera_frames):  # delta-gated continuous vision
+        ...
+
+Layer map:
+
+* :mod:`repro.fpca.program`    — :class:`FPCAProgram` (the one validated
+  spec) + stable :func:`spec_signature`;
+* :mod:`repro.fpca.backends`   — the :class:`Backend` registry
+  (``reference`` / ``pallas`` / ``basis`` built in, third parties register
+  via :func:`register_backend`);
+* :mod:`repro.fpca.executable` — :func:`compile` and
+  :class:`CompiledFrontend` (bounded executable LRU, sticky region-skip
+  buckets, mesh sharding, stats);
+* :mod:`repro.fpca.cache`      — the introspectable
+  :class:`ExecutableCache` / :class:`CacheInfo`.
+
+The batch scheduler (:class:`repro.serving.fpca_pipeline.FPCAPipeline`) and
+the streaming fleet server (:class:`repro.serving.streaming.StreamServer`)
+are thin orchestration layers over :class:`CompiledFrontend`.
+"""
+
+from __future__ import annotations
+
+from repro.core.adc import ADCConfig
+from repro.core.device_models import CircuitParams
+from repro.core.fpca_sim import WeightEncoding
+from repro.core.mapping import FPCASpec
+from repro.fpca.backends import (
+    Backend,
+    available_backends,
+    default_backend_name,
+    get_backend,
+    register_backend,
+)
+from repro.fpca.cache import CacheInfo, ExecutableCache
+from repro.fpca.executable import CompiledFrontend, FrontendStats, compile
+from repro.fpca.program import (
+    DeltaGateConfig,
+    FPCAProgram,
+    GateControllerConfig,
+    ProgrammedConfig,
+    spec_signature,
+)
+
+__all__ = [
+    # program spec
+    "FPCAProgram",
+    "ProgrammedConfig",
+    "DeltaGateConfig",
+    "GateControllerConfig",
+    "spec_signature",
+    # re-exported building blocks of a program
+    "FPCASpec",
+    "CircuitParams",
+    "ADCConfig",
+    "WeightEncoding",
+    # compile/execute
+    "compile",
+    "CompiledFrontend",
+    "FrontendStats",
+    "ExecutableCache",
+    "CacheInfo",
+    # backend registry
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "default_backend_name",
+]

@@ -1,0 +1,255 @@
+"""Pluggable execution backends for the FPCA frontend.
+
+Replaces the string-literal dispatch that used to live inside
+:func:`repro.core.fpca_sim.fpca_forward` with a registry: each
+:class:`Backend` names one way of evaluating a programmed array and carries
+the two entry points the rest of the stack needs —
+
+* ``conv``            — one-shot batched forward (what ``fpca_forward``
+  dispatches fused backends through);
+* ``make_executable`` — a factory returning a *fresh* jitted
+  ``(images, kernel, bn_offset[, window_mask]) -> counts`` closure whose
+  compiled programs die with it.  This is what
+  :class:`repro.fpca.CompiledFrontend` holds in its bounded LRU cache, so a
+  serving host genuinely bounds live executables by dropping references.
+
+Built-ins (registered at import):
+
+* ``"reference"`` — the dense jnp simulation (every mode, the only
+  differentiable path; the parity oracle).  Its executables serve the same
+  calibrated bucket-sigmoid + hard-ADC semantics as the fused backends, so
+  backends are interchangeable behind one :class:`CompiledFrontend`.
+* ``"pallas"``    — the fused TPU kernel (``interpret=True`` off-TPU;
+  validation only there).
+* ``"basis"``     — the identical basis-expanded matmul-bank math lowered
+  through XLA — the fast deployment path on non-TPU hosts.
+
+Third parties register with the decorator::
+
+    @register_backend("mysim", description="in-house RTL cosim")
+    def _mysim_executable(model, *, spec, adc, enc, interpret=None,
+                          m_bucket=None):
+        ...return a (images, kernel, bn_offset[, window_mask]) callable...
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig, updown_readout
+from repro.core.curvefit import BucketCurvefitModel
+from repro.core.fpca_sim import WeightEncoding, _analog_read, encode_weights, extract_windows
+from repro.core.mapping import FPCASpec
+
+__all__ = [
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "default_backend_name",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One registered execution backend.
+
+    ``fused`` marks backends that serve the calibrated bucket-sigmoid model
+    with hard ADC rounding through a single fused call (deployment-mode
+    serving of the sensor model); non-fused backends run the dense
+    simulation and may be differentiable.
+    """
+
+    name: str
+    make_executable: Callable
+    conv: Callable | None = None
+    fused: bool = True
+    differentiable: bool = False
+    # whether executables differ per region-skip row bucket (m_bucket).
+    # Fused kernels compile one program per bucket size; backends that
+    # evaluate densely and mask post-hoc (the reference oracle) serve every
+    # bucket with one executable, so caches can collapse the key.
+    bucket_sensitive: bool = True
+    description: str = ""
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(
+    name: str,
+    *,
+    conv: Callable | None = None,
+    fused: bool = True,
+    differentiable: bool = False,
+    bucket_sensitive: bool = True,
+    description: str = "",
+    overwrite: bool = False,
+) -> Callable[[Callable], Callable]:
+    """Decorator registering an executable factory as backend ``name``.
+
+    The decorated callable must have the signature
+    ``factory(model, *, spec, adc, enc, interpret=None, m_bucket=None)`` and
+    return a jitted ``(images, kernel, bn_offset) -> counts`` closure —
+    ``(images, kernel, bn_offset, window_mask)`` when ``m_bucket`` is set
+    (the region-skip compacted serving path).
+    """
+
+    def deco(make_executable: Callable) -> Callable:
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = Backend(
+            name=name,
+            make_executable=make_executable,
+            conv=conv,
+            fused=fused,
+            differentiable=differentiable,
+            bucket_sensitive=bucket_sensitive,
+            description=description,
+        )
+        return make_executable
+
+    return deco
+
+
+def get_backend(name: str | Backend) -> Backend:
+    """Resolve a backend by name (raises ``ValueError`` listing the options)."""
+    if isinstance(name, Backend):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def default_backend_name() -> str:
+    """Platform auto-select: the Pallas kernel on TPU, the XLA basis form
+    elsewhere (interpret-mode Pallas is validation-only, far too slow to
+    serve)."""
+    return "pallas" if jax.default_backend() == "tpu" else "basis"
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _fused_conv(impl: str) -> Callable:
+    def conv(
+        images: jax.Array,
+        kernel: jax.Array,
+        model: BucketCurvefitModel,
+        *,
+        spec: FPCASpec,
+        adc: ADCConfig,
+        enc: WeightEncoding,
+        bn_offset: jax.Array,
+        interpret: bool | None = None,
+        window_mask=None,
+    ) -> jax.Array:
+        from repro.kernels.fpca_conv.ops import fpca_conv
+
+        return fpca_conv(
+            images, kernel, model, spec=spec, adc=adc, enc=enc,
+            bn_offset=bn_offset, impl=impl, interpret=interpret,
+            window_mask=window_mask,
+        )
+
+    return conv
+
+
+def _fused_factory(impl: str) -> Callable:
+    def make_executable(
+        model: BucketCurvefitModel,
+        *,
+        spec: FPCASpec,
+        adc: ADCConfig | None = None,
+        enc: WeightEncoding | None = None,
+        interpret: bool | None = None,
+        m_bucket: int | None = None,
+    ) -> Callable:
+        from repro.kernels.fpca_conv.ops import make_fpca_conv_executable
+
+        return make_fpca_conv_executable(
+            model, spec=spec, adc=adc, enc=enc, impl=impl,
+            interpret=interpret, m_bucket=m_bucket,
+        )
+
+    return make_executable
+
+
+register_backend(
+    "pallas",
+    conv=_fused_conv("pallas"),
+    description="fused TPU Pallas kernel (interpret-mode off-TPU: validation only)",
+)(_fused_factory("pallas"))
+
+register_backend(
+    "basis",
+    conv=_fused_conv("basis"),
+    description="basis-expanded matmul-bank math lowered through XLA "
+    "(fast serving path on non-TPU hosts)",
+)(_fused_factory("basis"))
+
+
+@register_backend(
+    "reference",
+    fused=False,
+    differentiable=True,
+    bucket_sensitive=False,   # dense eval + post-hoc mask: one jit serves all buckets
+    description="dense jnp simulation (parity oracle; the only "
+    "differentiable path)",
+)
+def _reference_executable(
+    model: BucketCurvefitModel,
+    *,
+    spec: FPCASpec,
+    adc: ADCConfig | None = None,
+    enc: WeightEncoding | None = None,
+    interpret: bool | None = None,
+    m_bucket: int | None = None,
+) -> Callable:
+    """Dense-reference executable serving the same deployment semantics as
+    the fused kernels (calibrated bucket-sigmoid model, hard ADC).
+
+    The masked variant evaluates every window and zeroes skipped slots
+    post-hoc — the bit-exact oracle the compacted fused paths are pinned
+    against; no compute is saved (use a fused backend to serve).
+    """
+    del interpret  # dense jnp path: nothing to interpret
+    adc = adc or ADCConfig()
+    enc = enc or WeightEncoding()
+
+    def _counts(images: jax.Array, kernel: jax.Array, bn_offset: jax.Array) -> jax.Array:
+        w_pos, w_neg = encode_weights(kernel, spec, enc, hard=True)
+        I = extract_windows(images, spec)
+        n_active = spec.n_active_pixels
+        v_pos = _analog_read(I, w_pos, "bucket_sigmoid", None, model, n_active)
+        v_neg = _analog_read(I, w_neg, "bucket_sigmoid", None, model, n_active)
+        return updown_readout(v_pos, v_neg, adc, bn_offset, hard=True)
+
+    if m_bucket is None:
+
+        @jax.jit
+        def run(images, kernel, bn_offset):
+            return _counts(images, kernel, bn_offset)
+
+    else:
+
+        @jax.jit
+        def run(images, kernel, bn_offset, window_mask):
+            counts = _counts(images, kernel, bn_offset)
+            keep = jnp.reshape(window_mask, counts.shape[:-1])
+            return counts * keep[..., None].astype(counts.dtype)
+
+    return run

@@ -1,0 +1,77 @@
+"""Bounded LRU of jitted executables, keyed by compile signature.
+
+One cache instance can back many :class:`repro.fpca.CompiledFrontend`
+handles (that is how :class:`repro.serving.FPCAPipeline` bounds the *total*
+number of live executables across every registered configuration): entries
+are fresh jitted closures whose compiled programs are owned by the closure,
+so LRU eviction genuinely frees them.
+
+Counters are introspectable via :meth:`ExecutableCache.info` — the
+``functools.lru_cache``-style :class:`CacheInfo` that
+``CompiledFrontend.cache_info()`` surfaces, and the mechanism the
+reprogram-without-recompile contract is asserted against (``misses`` must
+not move across a ``reprogram()``).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Callable, NamedTuple
+
+__all__ = ["CacheInfo", "ExecutableCache"]
+
+
+class CacheInfo(NamedTuple):
+    hits: int
+    misses: int
+    evictions: int
+    currsize: int
+    maxsize: int
+
+
+class ExecutableCache:
+    """Bounded LRU: ``get(key, build)`` returns the cached executable or
+    builds, inserts and (on overflow) evicts the least recently used."""
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._entries: collections.OrderedDict[tuple, Callable] = (
+            collections.OrderedDict()
+        )
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return self._entries[key]
+        self.misses += 1
+        fn = build()
+        self._entries[key] = fn
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return fn
+
+    def info(self) -> CacheInfo:
+        return CacheInfo(
+            hits=self.hits,
+            misses=self.misses,
+            evictions=self.evictions,
+            currsize=len(self._entries),
+            maxsize=self.capacity,
+        )
+
+    def counters(self) -> tuple[int, int, int]:
+        """(hits, misses, evictions) snapshot — for delta-based mirroring."""
+        return (self.hits, self.misses, self.evictions)

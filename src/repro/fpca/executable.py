@@ -1,0 +1,494 @@
+"""``compile()`` and :class:`CompiledFrontend` — the explicit executable
+handle of the unified FPCA API.
+
+The paper's programming model, as an API contract::
+
+    program = FPCAProgram(spec=FPCASpec(...))      # what to fabricate-free
+    fe = fpca.compile(program, backend="basis")    # compile the array once
+    fe.reprogram(kernel)                           # cheap NVM rewrite
+    counts = fe.run(batch)                         # fused serving call
+    fe.reprogram(other_kernel)                     # STILL zero recompiles
+    for result in fe.stream(frames):               # delta-gated streaming
+        ...
+
+``compile()`` fits (or accepts) the calibrated bucket model, resolves the
+backend from the registry and returns a handle that owns everything that
+used to be implicit module / scheduler state: the bounded LRU of jitted
+executables (introspectable via :meth:`CompiledFrontend.cache_info`), the
+sticky region-skip row buckets, batch padding + mesh sharding, and the
+executed-window accounting (:attr:`CompiledFrontend.stats`).
+
+Reprogramming is guaranteed recompile-free because weights enter every
+executable *traced* while the cache key is the program's
+:meth:`~repro.fpca.FPCAProgram.signature` (which excludes weights by
+construction) — asserted by the API test suite via ``cache_info()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
+from repro.core.mapping import FPCASpec, active_window_mask, output_dims
+from repro.fpca.backends import Backend, default_backend_name, get_backend
+from repro.fpca.cache import CacheInfo, ExecutableCache
+from repro.fpca.program import FPCAProgram
+from repro.kernels.fpca_conv.ops import StickyBucket
+from repro.launch.mesh import data_axes, data_extent
+
+__all__ = ["FrontendStats", "CompiledFrontend", "compile"]
+
+_USE_PROGRAM = object()   # stream() sentinel: "inherit from program"
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Per-handle serving counters (all monotonic)."""
+
+    runs: int = 0                   # fused executable invocations
+    reprograms: int = 0             # NVM weight rewrites
+    windows_total: int = 0          # windows submitted (incl. batch padding)
+    windows_executed: int = 0       # windows that actually reached the kernel
+    launches_skipped: int = 0       # all-skipped batches short-circuited
+    bucket_switches: int = 0        # served bucket-size transitions
+    bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
+
+    def snapshot(self) -> tuple[int, ...]:
+        return dataclasses.astuple(self)
+
+
+def _round_up_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+class CompiledFrontend:
+    """An explicitly-held FPCA executable: one program, one backend, weights
+    swappable without recompiling.
+
+    Construct via :func:`compile`.  The handle is the unit every serving
+    layer now composes over: :class:`repro.serving.FPCAPipeline` keeps one
+    per distinct compile signature (sharing one :class:`ExecutableCache`),
+    and :meth:`stream` gives single-camera continuous vision without any
+    scheduler at all.
+    """
+
+    def __init__(
+        self,
+        program: FPCAProgram,
+        *,
+        backend: Backend,
+        model: BucketCurvefitModel,
+        mesh: jax.sharding.Mesh | None = None,
+        cache: ExecutableCache | None = None,
+        cache_capacity: int = 8,
+        bucket_patience: int = 1,
+        interpret: bool | None = None,
+    ):
+        if bucket_patience < 1:
+            raise ValueError("bucket_patience must be >= 1")
+        self.program = program
+        self.backend = backend
+        self.model = model
+        self.mesh = mesh
+        self.interpret = interpret
+        self.bucket_patience = bucket_patience
+        self._cache = cache if cache is not None else ExecutableCache(cache_capacity)
+        self._sig = program.signature()
+        self._sticky: dict[int, StickyBucket] = {}   # keyed by padded window count
+        self._kernel: jax.Array | None = None
+        self._bn: jax.Array | None = None
+        self.stats = FrontendStats()
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def spec(self) -> FPCASpec:
+        return self.program.spec
+
+    @property
+    def out_channels(self) -> int:
+        return int(self.program.out_channels)
+
+    @property
+    def out_shape(self) -> tuple[int, int, int]:
+        return self.program.out_shape
+
+    @property
+    def kernel(self) -> jax.Array | None:
+        """Currently programmed NVM weights (None until :meth:`reprogram`)."""
+        return self._kernel
+
+    @property
+    def bn_offset(self) -> jax.Array | None:
+        return self._bn
+
+    def signature(self) -> tuple:
+        return self._sig
+
+    def cache_info(self) -> CacheInfo:
+        """LRU executable-cache counters (``hits/misses/evictions/currsize``).
+
+        ``misses`` counts compiles: it must not move across
+        :meth:`reprogram` — the field-programmability contract."""
+        return self._cache.info()
+
+    def reset_bucket_state(self) -> None:
+        """Forget sticky row-bucket state (counters in ``stats`` remain)."""
+        self._sticky.clear()
+
+    # -- programming ---------------------------------------------------------
+    def reprogram(
+        self, kernel: Any, bn_offset: Any | None = None
+    ) -> "CompiledFrontend":
+        """Rewrite the NVM weight planes (and BN offsets) in place.
+
+        Guaranteed not to recompile: weights enter every executable traced,
+        and the cache key is the program signature, which excludes them by
+        construction.  Returns ``self`` so ``compile(...).reprogram(k)``
+        chains.
+        """
+        kernel = jnp.asarray(kernel, jnp.float32)
+        want = self.program.kernel_shape
+        if tuple(kernel.shape) != want:
+            raise ValueError(
+                f"kernel shape {tuple(kernel.shape)} does not match program "
+                f"kernel shape {want}"
+            )
+        if bn_offset is None:
+            bn_offset = (
+                self._bn
+                if self._bn is not None
+                else jnp.zeros((self.out_channels,), jnp.float32)
+            )
+        bn_offset = jnp.asarray(bn_offset, jnp.float32)
+        if bn_offset.shape != (self.out_channels,):
+            raise ValueError(
+                f"bn_offset shape {tuple(bn_offset.shape)} != "
+                f"({self.out_channels},)"
+            )
+        self._kernel = kernel
+        self._bn = bn_offset
+        self.stats.reprograms += 1
+        return self
+
+    # -- execution -----------------------------------------------------------
+    def run(
+        self,
+        images: Any,
+        *,
+        block_mask: np.ndarray | None = None,
+        window_keep: np.ndarray | None = None,
+    ) -> jax.Array:
+        """Serve one frame ``(H, W, c_i)`` or batch ``(B, H, W, c_i)``.
+
+        ``block_mask`` is the §3.4.5 per-block keep grid (one grid applied
+        to every frame, or a leading batch axis of grids); ``window_keep``
+        is the already-derived per-window ``(B, h_o, w_o)`` boolean mask —
+        pass at most one.  Skipped windows never execute on fused backends
+        and come back as exact zeros.  Dispatch is non-blocking (jax async);
+        the squeezed result mirrors the input's batchedness.
+        """
+        if self._kernel is None:
+            raise RuntimeError(
+                "no weights programmed: call reprogram(kernel) first "
+                "(or pass weights= to compile())"
+            )
+        images = jnp.asarray(images, jnp.float32)
+        squeeze = images.ndim == 3
+        if squeeze:
+            images = images[None]
+        if block_mask is not None:
+            if window_keep is not None:
+                raise ValueError("pass block_mask or window_keep, not both")
+            block_mask = np.asarray(block_mask)
+            if block_mask.ndim == 2:
+                keep = active_window_mask(self.spec, block_mask)
+                window_keep = np.broadcast_to(
+                    keep, (images.shape[0],) + keep.shape
+                )
+            else:
+                window_keep = np.stack(
+                    [active_window_mask(self.spec, m) for m in block_mask]
+                )
+        counts = self.run_weighted(self._kernel, self._bn, images, window_keep)
+        return counts[0] if squeeze else counts
+
+    def run_weighted(
+        self,
+        kernel: jax.Array,
+        bn_offset: jax.Array,
+        images: jax.Array,
+        window_keep: np.ndarray | None = None,
+    ) -> jax.Array:
+        """One fused executable call with explicit weights — the core
+        dispatch every serving layer routes to.
+
+        ``images`` is a ``(b, H, W, c_i)`` batch; ``window_keep`` an optional
+        per-window ``(b, h_o, w_o)`` boolean keep grid.  The batch is padded
+        to its pow-2 bucket (mesh-aligned), padding frames are masked out
+        *in-kernel* whenever a keep grid is present, and the call is
+        dispatched asynchronously — the returned array is unrealised, so
+        callers can overlap host prep with device compute and block later.
+
+        The weights are per-call state (this is what lets
+        :class:`repro.serving.FPCAPipeline` serve many programmed
+        configurations — including channel-stacked fan-outs — through
+        signature-shared handles); :meth:`run` binds the handle's own
+        programmed weights.
+        """
+        spec = self.spec
+        images = jnp.asarray(images, jnp.float32)
+        want = (spec.image_h, spec.image_w, spec.in_channels)
+        if images.ndim != 4 or images.shape[1:] != want:
+            raise ValueError(
+                f"expected (b, {want[0]}, {want[1]}, {want[2]}) batch, "
+                f"got {images.shape}"
+            )
+        c_o = int(kernel.shape[0])
+        if c_o != self.out_channels:
+            raise ValueError(
+                f"kernel has {c_o} output channels; this handle is compiled "
+                f"for {self.out_channels}"
+            )
+        b = images.shape[0]
+        h_o, w_o = output_dims(spec)
+        if window_keep is not None and window_keep.shape != (b, h_o, w_o):
+            raise ValueError(
+                f"window_keep shape {window_keep.shape} != {(b, h_o, w_o)}"
+            )
+        padded = self._padded_batch(b)
+        if padded > b:
+            images = jnp.pad(images, ((0, padded - b), (0, 0), (0, 0), (0, 0)))
+            if window_keep is not None:
+                window_keep = np.concatenate(
+                    [window_keep, np.zeros((padded - b, h_o, w_o), bool)]
+                )
+        m_total = padded * h_o * w_o
+        self.stats.windows_total += m_total
+        if window_keep is None:
+            images = self._shard_batch(images)
+            self.stats.runs += 1
+            run = self._executable(None)
+            self.stats.windows_executed += m_total
+            return run(images, kernel, bn_offset)[:b]
+        n_keep = int(np.count_nonzero(window_keep))
+        if n_keep == 0:
+            # all-skipped tick: the result is exact zeros by contract, so no
+            # kernel launches at all (0 executed windows in the stats); the
+            # sticky bucket still counts the tick as under-full so a stale
+            # large bucket shrinks on the first active tick after the lull
+            self.stats.launches_skipped += 1
+            sticky = self._sticky.get(m_total)
+            if sticky is not None:
+                sticky.observe_idle()
+            return jnp.zeros((b, h_o, w_o, c_o), jnp.float32)
+        images = self._shard_batch(images)
+        self.stats.runs += 1
+        m_bucket = self._bucket_for(n_keep, m_total)
+        run = self._executable(m_bucket)
+        self.stats.windows_executed += m_bucket
+        return run(images, kernel, bn_offset, jnp.asarray(window_keep))[:b]
+
+    def stream(
+        self,
+        frames: Iterable[Any],
+        *,
+        gate: Any = _USE_PROGRAM,
+        controller: Any = _USE_PROGRAM,
+        depth: int = 2,
+        stream_id: str = "stream0",
+    ) -> Iterator[Any]:
+        """Serve a continuous frame stream through this handle.
+
+        The single-camera counterpart of
+        :class:`repro.serving.StreamServer`: each frame steps a temporal
+        delta gate (defaults to ``program.gate``; pass an explicit
+        ``gate=None`` for a dense readout even on a gated program),
+        optionally servoed by a closed-loop threshold controller (defaults
+        to ``program.controller``; explicit ``None`` disables), and the
+        resulting keep mask is compacted in-kernel.  Up to ``depth`` ticks
+        stay in flight (dispatch is non-blocking), results yield strictly in
+        frame order as :class:`repro.serving.streaming.StreamFrameResult`.
+        """
+        import collections as _collections
+
+        from repro.serving.control import GateController
+        from repro.serving.streaming import StreamFrameResult, StreamSession
+
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        gate = self.program.gate if gate is _USE_PROGRAM else gate
+        cconf = (
+            self.program.controller
+            if controller is _USE_PROGRAM
+            else controller
+        )
+        ctl = (
+            GateController(cconf, self.spec, gate.threshold)
+            if (cconf is not None and gate is not None)
+            else None
+        )
+        session = StreamSession(stream_id, "__compiled__", self.spec, gate,
+                                controller=ctl)
+        self._stream_session = session   # introspectable (controller history)
+        h_o, w_o = output_dims(self.spec)
+
+        def _finalize(entry: dict) -> StreamFrameResult:
+            return StreamFrameResult(
+                stream_id=stream_id,
+                frame_idx=entry["frame_idx"],
+                counts=np.asarray(entry["counts"])[0],   # blocks until ready
+                block_mask=entry["block_mask"],
+                kept_windows=entry["kept"],
+                total_windows=h_o * w_o,
+                config="__compiled__",
+            )
+
+        inflight: _collections.deque[dict] = _collections.deque()
+        for frame in frames:
+            frame = np.asarray(frame, np.float32)
+            frame_idx = session.frame_idx
+            block = session.step(frame)
+            window = session.last_window_mask if gate is not None else None
+            kept = int(window.sum()) if window is not None else h_o * w_o
+            counts = self.run_weighted(
+                self._require_weights(), self._bn, jnp.asarray(frame)[None],
+                None if window is None else window[None],
+            )
+            inflight.append(
+                {"frame_idx": frame_idx, "counts": counts,
+                 "block_mask": block, "kept": kept}
+            )
+            while len(inflight) > depth:
+                yield _finalize(inflight.popleft())
+        while inflight:
+            yield _finalize(inflight.popleft())
+
+    # -- internals -----------------------------------------------------------
+    def _require_weights(self) -> jax.Array:
+        if self._kernel is None:
+            raise RuntimeError(
+                "no weights programmed: call reprogram(kernel) first"
+            )
+        return self._kernel
+
+    def _padded_batch(self, b: int) -> int:
+        padded = _round_up_pow2(b)
+        if self.mesh is not None:
+            n_data = data_extent(self.mesh)
+            padded = -(-padded // n_data) * n_data
+        return padded
+
+    def _shard_batch(self, images: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return images
+        P = jax.sharding.PartitionSpec
+        sharding = jax.sharding.NamedSharding(
+            self.mesh, P(data_axes(self.mesh), *([None] * (images.ndim - 1)))
+        )
+        return jax.device_put(images, sharding)
+
+    def _executable(self, m_bucket: int | None) -> Callable:
+        # bucket-insensitive backends (dense eval + post-hoc mask) serve
+        # every bucket size with one executable: collapse the key so sticky
+        # bucket transitions don't churn the shared LRU with identical jits
+        if m_bucket is not None and not self.backend.bucket_sensitive:
+            m_bucket = -1
+        key = self._sig + (self.backend.name, m_bucket)
+
+        def build() -> Callable:
+            # a FRESH jitted closure per signature: its compiled programs are
+            # owned by the closure, so LRU eviction genuinely frees the
+            # executable (a shared module-level jit cache would keep them
+            # alive).
+            return self.backend.make_executable(
+                self.model,
+                spec=self.spec,
+                adc=self.program.adc,
+                enc=self.program.enc,
+                interpret=self.interpret,
+                m_bucket=m_bucket,
+            )
+
+        return self._cache.get(key, build)
+
+    def _bucket_for(self, n_keep: int, m_total: int) -> int:
+        """Sticky row bucket for one (handle, window-count) batch shape.
+
+        With ``bucket_patience=1`` this is exactly
+        :func:`repro.kernels.fpca_conv.ops.window_bucket`, but bucket
+        transitions are still counted — ``stats.bucket_switches`` is the
+        flap count a hysteresis-free server pays.
+        """
+        sticky = self._sticky.get(m_total)
+        if sticky is None:
+            sticky = self._sticky[m_total] = StickyBucket(self.bucket_patience)
+        before = (sticky.switches, sticky.shrinks_deferred)
+        m_bucket = sticky.bucket(n_keep, m_total)
+        self.stats.bucket_switches += sticky.switches - before[0]
+        self.stats.bucket_shrinks_deferred += sticky.shrinks_deferred - before[1]
+        return m_bucket
+
+
+def compile(  # noqa: A001  (torch.compile-style public name)
+    program: FPCAProgram | FPCASpec,
+    *,
+    backend: str | Backend | None = None,
+    mesh: jax.sharding.Mesh | None = None,
+    weights: Any | None = None,
+    bn_offset: Any | None = None,
+    model: BucketCurvefitModel | None = None,
+    cache: ExecutableCache | None = None,
+    cache_capacity: int = 8,
+    bucket_patience: int = 1,
+    interpret: bool | None = None,
+) -> CompiledFrontend:
+    """Compile an :class:`FPCAProgram` into a held executable handle.
+
+    Args:
+      program: the validated program spec (a bare :class:`FPCASpec` is
+        wrapped in a default program for convenience).
+      backend: registered backend name (see
+        :func:`repro.fpca.available_backends`) or a :class:`Backend`
+        instance; ``None`` auto-selects by platform (Pallas on TPU, the XLA
+        basis form elsewhere).
+      mesh: optional ``jax.sharding.Mesh`` — batches shard over its data
+        axes and batch padding rounds up to the data-axis extent.
+      weights / bn_offset: optionally program the NVM planes immediately
+        (equivalent to calling :meth:`CompiledFrontend.reprogram`).
+      model: fitted :class:`BucketCurvefitModel`; fitted on demand from
+        ``program.circuit`` when omitted (a one-off ~seconds calibration, as
+        a deployment would run once).
+      cache: share a bounded :class:`ExecutableCache` across handles (the
+        pipeline does this to bound total live executables); a private cache
+        of ``cache_capacity`` otherwise.
+      bucket_patience: sticky-bucket hysteresis for region-skip row buckets
+        (``1`` = stateless).
+      interpret: forwarded to Pallas (default: interpret off-TPU).
+    """
+    if isinstance(program, FPCASpec):
+        program = FPCAProgram(spec=program)
+    if not isinstance(program, FPCAProgram):
+        raise TypeError(f"expected FPCAProgram or FPCASpec, got {type(program)}")
+    be = get_backend(backend if backend is not None else default_backend_name())
+    if model is None:
+        model = fit_bucket_model(
+            program.circuit, n_pixels=program.spec.n_active_pixels
+        )
+    handle = CompiledFrontend(
+        program,
+        backend=be,
+        model=model,
+        mesh=mesh,
+        cache=cache,
+        cache_capacity=cache_capacity,
+        bucket_patience=bucket_patience,
+        interpret=interpret,
+    )
+    if weights is not None:
+        handle.reprogram(weights, bn_offset)
+    return handle

@@ -1,0 +1,264 @@
+"""Declarative FPCA program spec — the single source of truth for "what is
+programmed into the array".
+
+The paper's headline is *field-programmability*: one pixel array is
+dynamically reprogrammed (weights, kernel / channel / stride geometry)
+without refabrication.  :class:`FPCAProgram` is that statement as a single
+validated dataclass: everything that is **static to a compiled executable**
+(sensor geometry, circuit constants, ADC precision, NVM weight encoding)
+plus the optional streaming-control plane (delta gate, threshold servo)
+composed into one spec with a stable :meth:`~FPCAProgram.signature`.
+
+The split the API enforces:
+
+* the **program** (this module) pins the compiled artifact — two programs
+  with equal signatures share one executable;
+* the **weights** (NVM conductance planes) enter traced — reprogramming them
+  (:meth:`repro.fpca.CompiledFrontend.reprogram`) never recompiles.  That is
+  the paper's field-programmability as an API contract, and it is why
+  ``kernel`` / ``bn_offset`` are *not* program fields: they live in
+  :class:`ProgrammedConfig` (a program bound to weights).
+
+Signatures are **versioned primitive tuples** (ints / floats / strs only, no
+dataclass instances), so they are stable across refactors of the config
+classes themselves — a golden test pins them, because silently changing a
+signature silently invalidates every warm executable cache in a fleet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.adc import ADCConfig
+from repro.core.device_models import CircuitParams
+from repro.core.fpca_sim import WeightEncoding
+from repro.core.mapping import FPCASpec, output_dims
+
+__all__ = [
+    "DeltaGateConfig",
+    "GateControllerConfig",
+    "FPCAProgram",
+    "ProgrammedConfig",
+    "spec_signature",
+]
+
+# Bump when the *meaning* of a signature field changes; appending new fields
+# keeps old-version tuples distinct by construction.
+_SIG_VERSION = "repro.fpca/1"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaGateConfig:
+    """Temporal delta gate knobs (per stream, or per config of a stream)."""
+
+    threshold: float = 0.02      # mean |Δ| per block that counts as "changed"
+    hysteresis: int = 1          # frames a block stays live after its change
+    keyframe_interval: int = 30  # full-frame refresh period (0 = never)
+
+
+@dataclasses.dataclass(frozen=True)
+class GateControllerConfig:
+    """Closed-loop gate-threshold servo knobs (per stream).
+
+    ``target`` is the budget: the kept-window fraction (``metric="keep"``)
+    or the executed-energy fraction of a dense readout (``metric="energy"``)
+    the stream should settle at.  The servo error is measured *relative to
+    the target* — ``(ema - target) / target``, clipped to
+    ``[err_low, err_high]`` — so a 5% budget and a 50% budget servo with the
+    same gains, and a saturated scene (observation pinned at 0 or 1) applies
+    a bounded, steady corrective step instead of a runaway one.
+
+    Gains are in nats of log-threshold per unit of *relative* error;
+    ``max_step`` bounds the per-tick actuation.  The integrator **leaks**
+    (``leak`` per tick) and is clamped to ``±windup``, and it only
+    accumulates while the actuator is unsaturated — three layers of
+    anti-windup, because the gate's block statistics give the plant a hard
+    cliff (a threshold above every block delta keeps nothing) that a plain
+    PI loop winds up against.
+    """
+
+    target: float = 0.15
+    metric: str = "keep"            # "keep" | "energy"
+    ema_alpha: float = 0.4          # EMA weight of the newest observation
+    kp: float = 0.35                # proportional gain  [nats / unit rel-error]
+    ki: float = 0.03                # integral gain      [nats / unit rel-error]
+    max_step: float = 0.4           # |Δ ln threshold| bound per tick [nats]
+    leak: float = 0.85              # integrator decay per tick
+    windup: float = 2.0             # |integrator| clamp [rel-error ticks]
+    err_low: float = -1.0           # rel-error clip (0 kept = exactly -1)
+    err_high: float = 3.0
+    deadband: float = 0.0           # |rel error| below which the servo holds
+    min_threshold: float = 1e-4
+    max_threshold: float = 1.0
+    history_len: int = 512          # ticks of trajectory retained (no leak)
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.target <= 1.0:
+            raise ValueError("target must be in (0, 1]")
+        if self.metric not in ("keep", "energy"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+        if not 0.0 < self.ema_alpha <= 1.0:
+            raise ValueError("ema_alpha must be in (0, 1]")
+        if self.max_step <= 0.0:
+            raise ValueError("max_step must be > 0")
+        if not 0.0 <= self.leak <= 1.0:
+            raise ValueError("leak must be in [0, 1]")
+        if self.err_low >= self.err_high:
+            raise ValueError("need err_low < err_high")
+        if not 0.0 < self.min_threshold <= self.max_threshold:
+            raise ValueError("need 0 < min_threshold <= max_threshold")
+        if self.history_len < 1:
+            raise ValueError("history_len must be >= 1")
+
+
+def spec_signature(
+    spec: FPCASpec, out_channels: int, adc: ADCConfig, enc: WeightEncoding
+) -> tuple:
+    """Hashable compiled-kernel signature, as a versioned primitive tuple.
+
+    Everything that is *static* to a jitted executable: the spec pins patch
+    geometry, ``out_channels`` the weight-plane width, adc/enc the epilogue
+    constants.  Weights and BN offsets enter traced, so reprogramming the
+    NVM planes does NOT change the signature (no recompile — the point of
+    field-programmability).
+
+    The tuple contains only primitives (never the dataclass instances), so
+    adding a method or reordering fields on :class:`FPCASpec` /
+    :class:`ADCConfig` / :class:`WeightEncoding` cannot silently change it;
+    ``tests/test_fpca_api.py`` pins golden values.
+    """
+    return (
+        _SIG_VERSION,
+        ("spec", int(spec.image_h), int(spec.image_w), int(spec.out_channels),
+         int(spec.kernel), int(spec.stride), int(spec.max_kernel),
+         int(spec.in_channels), int(spec.padding), int(spec.binning),
+         int(spec.skip_block)),
+        ("out_channels", int(out_channels)),
+        ("adc", int(adc.bits), float(adc.v_ref)),
+        ("enc", int(enc.n_levels), float(enc.w_scale)),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FPCAProgram:
+    """One validated FPCA array program: the canonical configuration object.
+
+    Composes everything the repo previously scattered across
+    ``FPCAFrontendConfig`` (core) and the pipeline/server keyword soup:
+
+    * ``spec``        — sensor + convolution geometry (:class:`FPCASpec`);
+    * ``circuit``     — analog circuit constants the bucket model is fitted
+      against;
+    * ``adc`` / ``enc`` — SS-ADC precision and NVM weight encoding (the
+      fused-kernel epilogue constants);
+    * ``out_channels`` — programmed weight-plane width; defaults to
+      ``spec.out_channels`` but may differ (e.g. a channel-stacked
+      multi-config executable);
+    * ``gate`` / ``controller`` — optional streaming control plane (temporal
+      delta gate and its closed-loop threshold servo).  These are *runtime*
+      knobs: they are deliberately **excluded** from :meth:`signature`, so
+      retuning a gate never invalidates a compiled executable.
+
+    Weights are not here: a program is the refabrication-free part of the
+    paper's story, weights are the cheap NVM rewrite
+    (:meth:`repro.fpca.CompiledFrontend.reprogram`).
+    """
+
+    spec: FPCASpec
+    circuit: CircuitParams = CircuitParams()
+    adc: ADCConfig = ADCConfig()
+    enc: WeightEncoding = WeightEncoding()
+    out_channels: int | None = None
+    gate: DeltaGateConfig | None = None
+    controller: GateControllerConfig | None = None
+
+    def __post_init__(self) -> None:
+        if self.out_channels is None:
+            object.__setattr__(self, "out_channels", self.spec.out_channels)
+        if int(self.out_channels) < 1:
+            raise ValueError("out_channels must be >= 1")
+        if self.controller is not None and not isinstance(
+            self.controller, GateControllerConfig
+        ):
+            raise TypeError("controller must be a GateControllerConfig")
+        if self.gate is not None and not isinstance(self.gate, DeltaGateConfig):
+            raise TypeError("gate must be a DeltaGateConfig")
+
+    # -- derived geometry ----------------------------------------------------
+    @property
+    def out_shape(self) -> tuple[int, int, int]:
+        h_o, w_o = output_dims(self.spec)
+        return (h_o, w_o, int(self.out_channels))
+
+    @property
+    def kernel_shape(self) -> tuple[int, int, int, int]:
+        """Shape of the float kernel this program accepts: (c_o, k, k, c_i)."""
+        s = self.spec
+        return (int(self.out_channels), s.kernel, s.kernel, s.in_channels)
+
+    # -- identity ------------------------------------------------------------
+    def signature(self) -> tuple:
+        """Stable compile signature of this program (primitive tuple).
+
+        Extends :func:`spec_signature` with the circuit constants (they are
+        baked into the compiled executable through the fitted bucket model).
+        ``gate`` / ``controller`` / weights are runtime state and excluded —
+        reprogramming any of them must never recompile.  Cached on first
+        call: serving layers key handle lookups on it per tick.
+        """
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            circuit = tuple(
+                (f.name, float(getattr(self.circuit, f.name)))
+                for f in dataclasses.fields(self.circuit)
+            )
+            sig = spec_signature(
+                self.spec, int(self.out_channels), self.adc, self.enc
+            ) + (("circuit",) + circuit,)
+            object.__setattr__(self, "_signature", sig)
+        return sig
+
+    def fanout_signature(self) -> tuple:
+        """Compile signature with the channel width normalised out.
+
+        Two programs may fan out into one channel-stacked fused call (their
+        NVM planes concatenated, one launch) iff these match: the stacked
+        executable serves a single adc/enc/circuit epilogue, so anything
+        beyond ``out_channels`` differing would silently mis-serve one of
+        them.
+        """
+        return self.replace(out_channels=1).signature()
+
+    def replace(self, **kw: Any) -> "FPCAProgram":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgrammedConfig:
+    """A program bound to NVM weights — one named, field-programmed state.
+
+    What a physical FPCA holds at any instant: the compiled-artifact spec
+    (:class:`FPCAProgram`) plus the conductance planes currently written to
+    the weight die.  Registered into :class:`repro.serving.FPCAPipeline`
+    under ``name``; the deprecated ``FrontendConfig`` alias forwards here.
+    """
+
+    name: str
+    program: FPCAProgram
+    kernel: jax.Array               # (c_o, k, k, c_i) float weights
+    bn_offset: jax.Array            # (c_o,) counts
+
+    @property
+    def spec(self) -> FPCASpec:
+        return self.program.spec
+
+    @property
+    def out_channels(self) -> int:
+        return int(self.program.out_channels)
+
+    @property
+    def out_shape(self) -> tuple[int, int, int]:
+        return self.program.out_shape

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro import compat
 
-__all__ = ["make_production_mesh", "make_host_mesh", "data_axes"]
+__all__ = ["make_production_mesh", "make_host_mesh", "data_axes", "data_extent"]
 
 
 def _mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
@@ -50,3 +50,9 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """Axes that carry the batch dimension (pure DP + FSDP axes)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_extent(mesh: jax.sharding.Mesh) -> int:
+    """Total device count along the batch-carrying axes — the multiple a
+    data-parallel batch must pad to (used by the FPCA serving handles)."""
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)], dtype=np.int64))

@@ -41,69 +41,14 @@ independently to the shared budget.
 from __future__ import annotations
 
 import collections
-import dataclasses
 import math
 
 import numpy as np
 
 from repro.core import analysis, mapping
+from repro.fpca.program import GateControllerConfig
 
 __all__ = ["GateControllerConfig", "GateController"]
-
-
-@dataclasses.dataclass(frozen=True)
-class GateControllerConfig:
-    """Closed-loop gate-threshold servo knobs (per stream).
-
-    ``target`` is the budget: the kept-window fraction (``metric="keep"``)
-    or the executed-energy fraction of a dense readout (``metric="energy"``)
-    the stream should settle at.  The servo error is measured *relative to
-    the target* — ``(ema - target) / target``, clipped to
-    ``[err_low, err_high]`` — so a 5% budget and a 50% budget servo with the
-    same gains, and a saturated scene (observation pinned at 0 or 1) applies
-    a bounded, steady corrective step instead of a runaway one.
-
-    Gains are in nats of log-threshold per unit of *relative* error;
-    ``max_step`` bounds the per-tick actuation.  The integrator **leaks**
-    (``leak`` per tick) and is clamped to ``±windup``, and it only
-    accumulates while the actuator is unsaturated — three layers of
-    anti-windup, because the gate's block statistics give the plant a hard
-    cliff (a threshold above every block delta keeps nothing) that a plain
-    PI loop winds up against.
-    """
-
-    target: float = 0.15
-    metric: str = "keep"            # "keep" | "energy"
-    ema_alpha: float = 0.4          # EMA weight of the newest observation
-    kp: float = 0.35                # proportional gain  [nats / unit rel-error]
-    ki: float = 0.03                # integral gain      [nats / unit rel-error]
-    max_step: float = 0.4           # |Δ ln threshold| bound per tick [nats]
-    leak: float = 0.85              # integrator decay per tick
-    windup: float = 2.0             # |integrator| clamp [rel-error ticks]
-    err_low: float = -1.0           # rel-error clip (0 kept = exactly -1)
-    err_high: float = 3.0
-    deadband: float = 0.0           # |rel error| below which the servo holds
-    min_threshold: float = 1e-4
-    max_threshold: float = 1.0
-    history_len: int = 512          # ticks of trajectory retained (no leak)
-
-    def __post_init__(self) -> None:
-        if not 0.0 < self.target <= 1.0:
-            raise ValueError("target must be in (0, 1]")
-        if self.metric not in ("keep", "energy"):
-            raise ValueError(f"unknown metric {self.metric!r}")
-        if not 0.0 < self.ema_alpha <= 1.0:
-            raise ValueError("ema_alpha must be in (0, 1]")
-        if self.max_step <= 0.0:
-            raise ValueError("max_step must be > 0")
-        if not 0.0 <= self.leak <= 1.0:
-            raise ValueError("leak must be in [0, 1]")
-        if self.err_low >= self.err_high:
-            raise ValueError("need err_low < err_high")
-        if not 0.0 < self.min_threshold <= self.max_threshold:
-            raise ValueError("need 0 < min_threshold <= max_threshold")
-        if self.history_len < 1:
-            raise ValueError("history_len must be >= 1")
 
 
 class GateController:

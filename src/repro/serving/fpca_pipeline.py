@@ -3,62 +3,59 @@
 The paper's headline claim is *field-programmability*: one pixel array serves
 many (kernel, stride, channel, binning) configurations.  This module is the
 serving-side counterpart — a reconfiguration scheduler that accepts a
-heterogeneous stream of frontend requests, buckets them by their
-compiled-kernel signature, and drives each bucket through one fused batched
-call of the production kernel (:func:`repro.kernels.fpca_conv.ops.fpca_conv`).
+heterogeneous stream of frontend requests, buckets them by their compile
+signature, and drives each bucket through one fused batched call.
 
-Flow per :meth:`FPCAPipeline.submit`:
+Since the :mod:`repro.fpca` redesign the pipeline is a **thin orchestration
+layer over explicit executables**: every distinct compile signature gets one
+:class:`repro.fpca.CompiledFrontend` handle (all handles share ONE bounded
+:class:`repro.fpca.ExecutableCache`, so the total number of live jitted
+executables stays bounded across every registered configuration), and the
+batch padding / mesh sharding / sticky region-skip buckets / zero-kept
+short-circuit all live behind the handle.  What remains here is pure
+scheduling:
 
-1. every request names a registered *configuration* (an :class:`FPCASpec`
-   plus programmed NVM weights — what a physical FPCA would hold in its
-   weight die) and carries one frame;
+1. every request names a registered *configuration* (an
+   :class:`repro.fpca.ProgrammedConfig` — a program plus programmed NVM
+   weights, what a physical FPCA would hold in its weight die) and carries
+   one frame;
 2. requests are grouped by configuration; each group's frames are stacked
-   into one ``(B, H, W, c_i)`` batch, padded up to a power-of-two bucket (and
-   to the mesh's data-axis extent) so recompiles stay bounded;
-3. each group runs through a jitted executable fetched from a **bounded LRU
-   cache** keyed by the configuration's compile signature
-   (:func:`spec_signature`) — configurations sharing (spec, c_o, adc, enc)
-   share one executable because weights enter traced, mirroring how a
-   deployment reprograms NVM planes without recompiling the readout;
+   into one ``(B, H, W, c_i)`` batch;
+3. each group runs through its signature's handle — configurations sharing
+   (spec, c_o, adc, enc) share one handle and therefore one executable,
+   because weights enter traced: reprogramming NVM planes never recompiles;
 4. results are un-padded and scattered back to the original request order.
-
-Region skipping is **in-kernel**: request ``block_mask``\\ s become per-window
-keep masks that compact the window list before the fused call (static
-power-of-two row buckets, so recompiles stay bounded), and batch-padding
-frames are masked out the same way — skipped windows cost no compute, not
-just zeroed results.  :meth:`FPCAPipeline.run_config_batch` exposes this as
-the low-level non-blocking entry point the streaming server
-(:mod:`repro.serving.streaming`) dispatches through.
 
 With ``cross_config_batching=True``, request groups whose configurations
 share a compile signature are additionally merged into ONE executable call
 by stacking their NVM weight planes along the channel axis (each request's
-counts are sliced from its configuration's channel range) — one dispatch and
-one big MXU launch instead of several small ones, at the cost of evaluating
-the merged channel set for every frame in the merged batch.
+counts are sliced from its configuration's channel range).
 
-Backend selection mirrors :func:`repro.core.fpca_sim.fpca_forward`:
-``"pallas"`` on TPU (interpret-mode elsewhere — validation only), ``"basis"``
-for the XLA lowering of the same math (the fast path on CPU hosts), and data
-parallelism over a host/production mesh via :mod:`repro.launch.mesh` helpers.
+Entry points: :meth:`FPCAPipeline.serve` (request mix), and
+:meth:`FPCAPipeline.run_config_batch` — the low-level non-blocking call the
+streaming server (:mod:`repro.serving.streaming`) dispatches through.
+:meth:`FPCAPipeline.submit` is a deprecation shim forwarding to ``serve``.
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
-from typing import Any, Callable, Sequence
+import warnings
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import fpca as _fpca
 from repro.core.adc import ADCConfig
 from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
+from repro.core.device_models import CircuitParams
 from repro.core.fpca_sim import WeightEncoding
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
-from repro.kernels.fpca_conv.ops import StickyBucket, make_fpca_conv_executable
-from repro.launch.mesh import data_axes
+from repro.fpca.cache import ExecutableCache
+from repro.fpca.executable import CompiledFrontend
+from repro.fpca.program import FPCAProgram, ProgrammedConfig, spec_signature
 
 __all__ = [
     "FrontendRequest",
@@ -69,42 +66,25 @@ __all__ = [
 ]
 
 
-@dataclasses.dataclass(frozen=True)
-class FrontendConfig:
-    """One programmed FPCA configuration (spec + NVM weight planes)."""
-
-    name: str
-    spec: FPCASpec
-    kernel: jax.Array               # (c_o, k, k, c_i)
-    bn_offset: jax.Array            # (c_o,) counts
-
-    @property
-    def out_shape(self) -> tuple[int, int, int]:
-        h_o, w_o = output_dims(self.spec)
-        return (h_o, w_o, self.spec.out_channels)
+def __getattr__(name: str) -> Any:
+    if name == "FrontendConfig":
+        warnings.warn(
+            "FrontendConfig is deprecated; use repro.fpca.ProgrammedConfig "
+            "(an FPCAProgram bound to NVM weights)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return ProgrammedConfig
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
 class FrontendRequest:
     """One frame for one registered configuration."""
 
-    config: str                     # registered FrontendConfig name
+    config: str                     # registered configuration name
     image: Any                      # (H, W, c_i) float in [0, 1]
     block_mask: np.ndarray | None = None   # region skipping (§3.4.5)
-
-
-def spec_signature(
-    spec: FPCASpec, out_channels: int, adc: ADCConfig, enc: WeightEncoding
-) -> tuple:
-    """Hashable compiled-kernel signature.
-
-    Everything that is *static* to the jitted executable: the spec pins patch
-    geometry, ``out_channels`` the weight-plane width, adc/enc the epilogue
-    constants.  Weights and BN offsets enter traced, so reprogramming the
-    NVM planes does NOT change the signature (no recompile — the point of
-    field-programmability).
-    """
-    return (spec, out_channels, adc, enc)
 
 
 @dataclasses.dataclass
@@ -123,70 +103,42 @@ class PipelineStats:
     bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
 
 
-class _ExecutableCache:
-    """Bounded LRU of jitted executables keyed by compile signature."""
-
-    def __init__(self, capacity: int):
-        if capacity < 1:
-            raise ValueError("cache capacity must be >= 1")
-        self.capacity = capacity
-        self._entries: collections.OrderedDict[tuple, Callable] = collections.OrderedDict()
-
-    def __len__(self) -> int:
-        return len(self._entries)
-
-    def __contains__(self, key: tuple) -> bool:
-        return key in self._entries
-
-    def get(self, key: tuple, build: Callable[[], Callable], stats: PipelineStats) -> Callable:
-        if key in self._entries:
-            self._entries.move_to_end(key)
-            stats.cache_hits += 1
-            return self._entries[key]
-        stats.cache_misses += 1
-        fn = build()
-        self._entries[key] = fn
-        if len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            stats.evictions += 1
-        return fn
-
-
-def _round_up_pow2(n: int) -> int:
-    return 1 << (n - 1).bit_length()
-
-
 class FPCAPipeline:
-    """Spec-bucketed reconfiguration scheduler over the fused FPCA kernel.
+    """Spec-bucketed reconfiguration scheduler over compiled FPCA handles.
 
     Args:
       model: fitted :class:`BucketCurvefitModel` (or dict keyed by
-        ``n_active_pixels``); missing entries are fitted on demand (a one-off
-        ~seconds cost per pixel count, as a deployment would calibrate once).
-      backend: ``"pallas"`` or ``"basis"`` (see module docstring); ``None``
-        (default) auto-selects by platform — Pallas on TPU, the XLA basis
-        form elsewhere (interpret-mode Pallas is validation-only, far too
-        slow to serve).
+        ``n_active_pixels``, or by ``(CircuitParams, n_active_pixels)`` for
+        custom-circuit programs); entries without an explicit circuit key
+        are taken as default-``CircuitParams`` calibrations.  Missing
+        entries are fitted on demand against the registering program's
+        circuit (a one-off ~seconds cost per (circuit, pixel count), as a
+        deployment would calibrate once).
+      backend: any name registered in :mod:`repro.fpca.backends` —
+        ``"pallas"`` (TPU kernel), ``"basis"`` (XLA lowering of the same
+        math; the fast path on CPU hosts), ``"reference"`` (dense oracle), or
+        a third-party registration.  ``None`` (default) auto-selects by
+        platform via :func:`repro.fpca.default_backend_name`.
       mesh: optional ``jax.sharding.Mesh`` — batches are sharded over its
-        data axes (:func:`repro.launch.mesh.data_axes`) for data-parallel
-        serving; batch padding also rounds up to the data-axis extent.
-      cache_capacity: bound on simultaneously-held jitted executables.
+        data axes for data-parallel serving; batch padding also rounds up to
+        the data-axis extent.
+      cache_capacity: bound on simultaneously-held jitted executables,
+        shared across ALL registered configurations (one
+        :class:`repro.fpca.ExecutableCache` backs every handle).
       cross_config_batching: merge request groups whose configurations share
         a compile signature into one channel-stacked executable call (see
         module docstring).  Off by default: the per-config path preserves the
         exact reprogram-without-recompile executable reuse the base tests pin.
       bucket_patience: sticky-bucket hysteresis for the region-skip row
-        buckets (:class:`repro.kernels.fpca_conv.ops.StickyBucket`).  Each
-        (compile signature, window count) keeps its own sticky state; a
-        bucket grows immediately but only shrinks after ``bucket_patience``
-        consecutive under-full batches, cutting executable-cache switches on
-        busy streams.  The default ``1`` is the stateless behaviour
-        (shrink immediately — exactly the pre-hysteresis pipeline).
-        Trade-off: a deferred shrink serves an up-to-2x-oversized row bucket
-        for up to ``bucket_patience`` ticks, so hysteresis pays off where a
-        switch is expensive (a recompile on a real-TPU serving path) and can
-        *cost* throughput where switches are cheap (warm-cache CPU hosts —
-        see the flap-vs-sticky numbers in ``BENCH_stream.json``).
+        buckets (held per handle; a bucket grows immediately but only
+        shrinks after ``bucket_patience`` consecutive under-full batches,
+        cutting executable-cache switches on busy streams).  The default
+        ``1`` is the stateless behaviour.  Trade-off: a deferred shrink
+        serves an up-to-2x-oversized row bucket for up to
+        ``bucket_patience`` ticks, so hysteresis pays off where a switch is
+        expensive (a recompile on a real-TPU serving path) and can *cost*
+        throughput where switches are cheap (warm-cache CPU hosts — see the
+        flap-vs-sticky numbers in ``BENCH_stream.json``).
     """
 
     def __init__(
@@ -202,49 +154,76 @@ class FPCAPipeline:
         cross_config_batching: bool = False,
         bucket_patience: int = 1,
     ):
-        if backend is None:
-            backend = "pallas" if jax.default_backend() == "tpu" else "basis"
-        if backend not in ("pallas", "basis"):
-            raise ValueError(f"unknown backend {backend!r}")
+        self._backend = _fpca.get_backend(
+            backend if backend is not None else _fpca.default_backend_name()
+        )
+        self.backend = self._backend.name
         self.adc = adc or ADCConfig()
         self.enc = enc or WeightEncoding()
-        self.backend = backend
         self.interpret = interpret
         self.mesh = mesh
         self.cross_config_batching = cross_config_batching
         if bucket_patience < 1:
             raise ValueError("bucket_patience must be >= 1")
         self.bucket_patience = bucket_patience
-        self._sticky: dict[tuple, StickyBucket] = {}
-        self._models: dict[int, BucketCurvefitModel] = {}
+        # fitted bucket models keyed by (circuit, n_active_pixels): programs
+        # registering a custom circuit get a model fitted against THAT
+        # circuit (matching fpca.compile), not the default calibration.
+        # Models passed in here are taken as default-CircuitParams
+        # calibrations unless keyed by an explicit (circuit, n_pixels) tuple.
+        default_circuit = CircuitParams()
+        self._models: dict[tuple[CircuitParams, int], BucketCurvefitModel] = {}
         if isinstance(model, BucketCurvefitModel):
-            self._models[model.n_pixels] = model
+            self._models[(default_circuit, model.n_pixels)] = model
         elif isinstance(model, dict):
-            self._models.update(model)
-        self._configs: dict[str, FrontendConfig] = {}
-        # channel-stacked (kernel, bn) planes per fan-out tuple: configs are
+            for k, v in model.items():
+                key = k if isinstance(k, tuple) else (default_circuit, k)
+                self._models[key] = v
+        self._configs: dict[str, ProgrammedConfig] = {}
+        # one CompiledFrontend per compile signature, all sharing one bounded
+        # executable cache — reprogramming weights never recompiles, and the
+        # total live-executable count stays bounded across configurations
+        self._handles: dict[tuple, CompiledFrontend] = {}
+        self._cache = ExecutableCache(cache_capacity)
+        # channel-stacked (kernel, bn, program) per fan-out tuple: configs are
         # immutable once registered, so the concat is paid once, not per tick
-        self._stacked: dict[tuple[str, ...], tuple[jax.Array, jax.Array]] = {}
-        self._cache = _ExecutableCache(cache_capacity)
+        self._stacked: dict[
+            tuple[str, ...], tuple[jax.Array, jax.Array, FPCAProgram]
+        ] = {}
         self.stats = PipelineStats()
 
     # -- configuration registry ----------------------------------------------
     def register(
         self,
         name: str,
-        spec: FPCASpec,
+        spec: FPCASpec | FPCAProgram,
         kernel: jax.Array,
         bn_offset: jax.Array | None = None,
-    ) -> FrontendConfig:
-        """Program one FPCA configuration (idempotent per unique name)."""
+    ) -> ProgrammedConfig:
+        """Program one FPCA configuration (idempotent per unique name).
+
+        ``spec`` may be a bare :class:`FPCASpec` (wrapped into a program with
+        this pipeline's adc/enc) or a full :class:`repro.fpca.FPCAProgram`.
+        """
         if name in self._configs:
             raise ValueError(f"config {name!r} already registered")
         c_o = int(kernel.shape[0])
+        if isinstance(spec, FPCAProgram):
+            if int(spec.out_channels) != c_o:
+                raise ValueError(
+                    f"kernel has {c_o} output channels; program for "
+                    f"{name!r} specifies {spec.out_channels}"
+                )
+            program = spec
+        else:
+            program = FPCAProgram(
+                spec=spec, adc=self.adc, enc=self.enc, out_channels=c_o
+            )
         if bn_offset is None:
             bn_offset = jnp.zeros((c_o,), jnp.float32)
-        cfg = FrontendConfig(
+        cfg = ProgrammedConfig(
             name=name,
-            spec=spec,
+            program=program,
             kernel=jnp.asarray(kernel, jnp.float32),
             bn_offset=jnp.asarray(bn_offset, jnp.float32),
         )
@@ -255,10 +234,60 @@ class FPCAPipeline:
     def cache_size(self) -> int:
         return len(self._cache)
 
-    def _model_for(self, n_pixels: int) -> BucketCurvefitModel:
-        if n_pixels not in self._models:
-            self._models[n_pixels] = fit_bucket_model(n_pixels=n_pixels)
-        return self._models[n_pixels]
+    def cache_info(self) -> _fpca.CacheInfo:
+        """Counters of the shared executable cache (all handles)."""
+        return self._cache.info()
+
+    def _model_for(self, program: FPCAProgram) -> BucketCurvefitModel:
+        key = (program.circuit, program.spec.n_active_pixels)
+        if key not in self._models:
+            self._models[key] = fit_bucket_model(
+                program.circuit, n_pixels=key[1]
+            )
+        return self._models[key]
+
+    def handle_for(
+        self, program: FPCAProgram | FPCASpec, out_channels: int | None = None
+    ) -> CompiledFrontend:
+        """The shared :class:`CompiledFrontend` serving one compile signature.
+
+        Created lazily, keyed by ``program.signature()`` (a bare spec is
+        wrapped with this pipeline's adc/enc); handles never hold weights
+        (requests supply them per call through ``run_weighted``), so
+        configurations sharing a signature genuinely share the executable.
+        """
+        if isinstance(program, FPCASpec):
+            program = FPCAProgram(
+                spec=program, adc=self.adc, enc=self.enc,
+                out_channels=out_channels,
+            )
+        elif out_channels is not None and int(out_channels) != int(
+            program.out_channels
+        ):
+            program = program.replace(out_channels=int(out_channels))
+        key = program.signature()
+        handle = self._handles.get(key)
+        if handle is None:
+            handle = CompiledFrontend(
+                program,
+                backend=self._backend,
+                model=self._model_for(program),
+                mesh=self.mesh,
+                cache=self._cache,
+                bucket_patience=self.bucket_patience,
+                interpret=self.interpret,
+            )
+            self._handles[key] = handle
+        return handle
+
+    def reset_bucket_state(self) -> None:
+        """Forget all sticky row-bucket state (counters in ``stats`` remain).
+
+        Benchmarks use this to make repeated serves of one scene evolve their
+        bucket sequence identically (so a timed pass replays only executables
+        the warm-up pass already compiled)."""
+        for handle in self._handles.values():
+            handle.reset_bucket_state()
 
     # -- scheduling ----------------------------------------------------------
     def group_requests(
@@ -272,124 +301,36 @@ class FPCAPipeline:
             groups.setdefault(req.config, []).append(i)
         return groups
 
-    def _padded_batch(self, b: int) -> int:
-        padded = _round_up_pow2(b)
-        if self.mesh is not None:
-            n_data = int(np.prod([self.mesh.shape[a] for a in data_axes(self.mesh)]))
-            padded = -(-padded // n_data) * n_data
-        return padded
-
-    def _executable(
-        self, spec: FPCASpec, c_o: int, m_bucket: int | None = None
-    ) -> Callable:
-        sig = spec_signature(spec, c_o, self.adc, self.enc) + (m_bucket,)
-
-        def build() -> Callable:
-            # a FRESH jit per signature: the compiled programs are owned by
-            # this closure, so LRU eviction genuinely frees the executable
-            # (the shared fpca_conv entry point would keep them alive in the
-            # module-level jit cache).
-            return make_fpca_conv_executable(
-                self._model_for(spec.n_active_pixels),
-                spec=spec, adc=self.adc, enc=self.enc,
-                impl=self.backend, interpret=self.interpret, m_bucket=m_bucket,
-            )
-
-        return self._cache.get(sig, build, self.stats)
-
-    def _shard_batch(self, images: jax.Array) -> jax.Array:
-        if self.mesh is None:
-            return images
-        P = jax.sharding.PartitionSpec
-        sharding = jax.sharding.NamedSharding(
-            self.mesh, P(data_axes(self.mesh), *([None] * (images.ndim - 1)))
-        )
-        return jax.device_put(images, sharding)
-
     def _run_batch(
         self,
-        spec: FPCASpec,
+        program: FPCAProgram,
         kernel: jax.Array,
         bn_offset: jax.Array,
         images: jax.Array,
         window_keep: np.ndarray | None = None,
     ) -> jax.Array:
-        """One fused executable call; the core dispatch everything routes to.
-
-        ``images`` is a ``(b, H, W, c_i)`` batch of ONE spec; ``window_keep``
-        an optional per-window ``(b, h_o, w_o)`` boolean keep grid.  The batch
-        is padded to its pow-2 bucket (mesh-aligned), padding frames are
-        masked out *in-kernel* whenever a keep grid is present, and the call
-        is dispatched asynchronously — the returned array is unrealised, so
-        callers can overlap host prep with device compute and block later.
-        """
-        b = images.shape[0]
-        h_o, w_o = output_dims(spec)
-        if window_keep is not None and window_keep.shape != (b, h_o, w_o):
-            raise ValueError(
-                f"window_keep shape {window_keep.shape} != {(b, h_o, w_o)}"
-            )
-        padded = self._padded_batch(b)
-        if padded > b:
-            images = jnp.pad(images, ((0, padded - b), (0, 0), (0, 0), (0, 0)))
-            if window_keep is not None:
-                window_keep = np.concatenate(
-                    [window_keep, np.zeros((padded - b, h_o, w_o), bool)]
-                )
-        c_o = int(kernel.shape[0])
-        m_total = padded * h_o * w_o
-        self.stats.windows_total += m_total
-        if window_keep is None:
-            images = self._shard_batch(images)
-            self.stats.batches += 1
-            run = self._executable(spec, c_o)
-            self.stats.windows_executed += m_total
-            return run(images, kernel, bn_offset)[:b]
-        n_keep = int(np.count_nonzero(window_keep))
-        if n_keep == 0:
-            # all-skipped tick: the result is exact zeros by contract, so no
-            # kernel launches at all (0 executed windows in the stats); the
-            # sticky bucket still counts the tick as under-full so a stale
-            # large bucket shrinks on the first active tick after the lull
-            self.stats.launches_skipped += 1
-            sticky = self._sticky.get(
-                spec_signature(spec, c_o, self.adc, self.enc) + (m_total,)
-            )
-            if sticky is not None:
-                sticky.observe_idle()
-            return jnp.zeros((b, h_o, w_o, c_o), jnp.float32)
-        images = self._shard_batch(images)
-        self.stats.batches += 1
-        m_bucket = self._bucket_for(spec, c_o, n_keep, m_total)
-        run = self._executable(spec, c_o, m_bucket=m_bucket)
-        self.stats.windows_executed += m_bucket
-        return run(images, kernel, bn_offset, jnp.asarray(window_keep))[:b]
-
-    def reset_bucket_state(self) -> None:
-        """Forget all sticky row-bucket state (counters in ``stats`` remain).
-
-        Benchmarks use this to make repeated serves of one scene evolve their
-        bucket sequence identically (so a timed pass replays only executables
-        the warm-up pass already compiled)."""
-        self._sticky.clear()
-
-    def _bucket_for(self, spec: FPCASpec, c_o: int, n_keep: int, m_total: int) -> int:
-        """Sticky row bucket for one (signature, window-count) batch shape.
-
-        With ``bucket_patience=1`` this is exactly
-        :func:`repro.kernels.fpca_conv.ops.window_bucket`, but bucket
-        transitions are still counted — ``stats.bucket_switches`` is the
-        flap count a hysteresis-free pipeline pays.
-        """
-        key = spec_signature(spec, c_o, self.adc, self.enc) + (m_total,)
-        sticky = self._sticky.get(key)
-        if sticky is None:
-            sticky = self._sticky[key] = StickyBucket(self.bucket_patience)
-        before = (sticky.switches, sticky.shrinks_deferred)
-        m_bucket = sticky.bucket(n_keep, m_total)
-        self.stats.bucket_switches += sticky.switches - before[0]
-        self.stats.bucket_shrinks_deferred += sticky.shrinks_deferred - before[1]
-        return m_bucket
+        """One fused handle call, with its counters mirrored into ``stats``."""
+        handle = self.handle_for(program, int(kernel.shape[0]))
+        hs = handle.stats
+        before = (
+            hs.runs, hs.windows_total, hs.windows_executed,
+            hs.launches_skipped, hs.bucket_switches, hs.bucket_shrinks_deferred,
+        )
+        cbefore = self._cache.counters()
+        counts = handle.run_weighted(kernel, bn_offset, images, window_keep)
+        self.stats.batches += hs.runs - before[0]
+        self.stats.windows_total += hs.windows_total - before[1]
+        self.stats.windows_executed += hs.windows_executed - before[2]
+        self.stats.launches_skipped += hs.launches_skipped - before[3]
+        self.stats.bucket_switches += hs.bucket_switches - before[4]
+        self.stats.bucket_shrinks_deferred += (
+            hs.bucket_shrinks_deferred - before[5]
+        )
+        hits, misses, evictions = self._cache.counters()
+        self.stats.cache_hits += hits - cbefore[0]
+        self.stats.cache_misses += misses - cbefore[1]
+        self.stats.evictions += evictions - cbefore[2]
+        return counts
 
     def run_config_batch(
         self,
@@ -438,21 +379,44 @@ class FPCAPipeline:
         if len(cfgs) == 1:
             cfg = cfgs[0]
             return self._run_batch(
-                spec, cfg.kernel, cfg.bn_offset, images, window_keep
+                cfg.program, cfg.kernel, cfg.bn_offset, images, window_keep
             )
-        stacked = self._stacked.get(tuple(names))
-        if stacked is None:
-            stacked = self._stacked[tuple(names)] = (
-                jnp.concatenate([c.kernel for c in cfgs], axis=0),
-                jnp.concatenate([c.bn_offset for c in cfgs], axis=0),
-            )
-        kernel, bn = stacked
+        kernel, bn, stacked_program = self._stacked_planes(names, cfgs)
         batches_before = self.stats.batches
-        counts = self._run_batch(spec, kernel, bn, images, window_keep)
-        # a zero-kept tick short-circuits inside _run_batch: only count the
+        counts = self._run_batch(stacked_program, kernel, bn, images, window_keep)
+        # a zero-kept tick short-circuits inside the handle: only count the
         # fan-outs that actually launched a stacked call
         self.stats.fanout_batches += self.stats.batches - batches_before
         return counts
+
+    def _stacked_planes(
+        self, names: Sequence[str], cfgs: Sequence[ProgrammedConfig]
+    ) -> tuple[jax.Array, jax.Array, FPCAProgram]:
+        """Channel-stacked (kernel, bn, program) for one fan-out tuple.
+
+        Cached per tuple — configs are immutable once registered, so the
+        concat (and the compile-signature compatibility check: one stacked
+        launch serves ONE adc/enc/circuit epilogue) is paid once, not per
+        tick.
+        """
+        key = tuple(names)
+        stacked = self._stacked.get(key)
+        if stacked is None:
+            base = cfgs[0].program.fanout_signature()
+            for cfg in cfgs[1:]:
+                if cfg.program.fanout_signature() != base:
+                    raise ValueError(
+                        f"multi-config fan-out requires a shared spec and "
+                        f"compile signature (adc/enc/circuit): config "
+                        f"{cfg.name!r} differs from {cfgs[0].name!r}"
+                    )
+            kernel = jnp.concatenate([c.kernel for c in cfgs], axis=0)
+            stacked = self._stacked[key] = (
+                kernel,
+                jnp.concatenate([c.bn_offset for c in cfgs], axis=0),
+                cfgs[0].program.replace(out_channels=int(kernel.shape[0])),
+            )
+        return stacked
 
     def config_channel_slices(
         self, names: Sequence[str]
@@ -468,7 +432,7 @@ class FPCAPipeline:
         return slices
 
     def _group_window_keep(
-        self, cfg: FrontendConfig, reqs: list[FrontendRequest]
+        self, cfg: ProgrammedConfig, reqs: list[FrontendRequest]
     ) -> np.ndarray | None:
         """Stacked per-window keep grid for a request group (None = dense)."""
         if all(r.block_mask is None for r in reqs):
@@ -496,7 +460,7 @@ class FPCAPipeline:
                     f"{name!r} sensor geometry {want_shape}"
                 )
 
-    def submit(self, requests: Sequence[FrontendRequest]) -> list[jax.Array]:
+    def serve(self, requests: Sequence[FrontendRequest]) -> list[jax.Array]:
         """Serve a heterogeneous request mix; results in request order.
 
         Returns one SS-ADC count map ``(h_o, w_o, c_o)`` per request.
@@ -507,10 +471,11 @@ class FPCAPipeline:
         merged: dict[tuple, list[str]] = {}
         for name in groups:
             cfg = self._configs[name]
-            sig = spec_signature(
-                cfg.spec, int(cfg.kernel.shape[0]), self.adc, self.enc
+            key = (
+                cfg.program.signature()
+                if self.cross_config_batching
+                else (name,)
             )
-            key = sig if self.cross_config_batching else (name,)
             merged.setdefault(key, []).append(name)
         for names in merged.values():
             if len(names) == 1:
@@ -518,6 +483,17 @@ class FPCAPipeline:
             else:
                 self._submit_merged(names, groups, requests, results)
         return results  # type: ignore[return-value]
+
+    def submit(self, requests: Sequence[FrontendRequest]) -> list[jax.Array]:
+        """Deprecation shim for :meth:`serve` (the pre-``repro.fpca`` name)."""
+        warnings.warn(
+            "FPCAPipeline.submit is deprecated; use FPCAPipeline.serve "
+            "(same semantics) or compile an explicit handle via "
+            "repro.fpca.compile",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.serve(requests)
 
     def _submit_group(
         self,
@@ -533,7 +509,7 @@ class FPCAPipeline:
         )
         window_keep = self._group_window_keep(cfg, [requests[i] for i in idxs])
         counts = self._run_batch(
-            cfg.spec, cfg.kernel, cfg.bn_offset, images, window_keep
+            cfg.program, cfg.kernel, cfg.bn_offset, images, window_keep
         )
         for j, i in enumerate(idxs):
             results[i] = counts[j]
@@ -549,11 +525,9 @@ class FPCAPipeline:
         ONE call with their NVM weight planes stacked along the channel axis;
         each request's counts are sliced from its config's channel range."""
         cfgs = [self._configs[n] for n in names]
-        spec = cfgs[0].spec
         for name in names:
             self._check_geometry(name, requests, groups[name])
-        kernel = jnp.concatenate([c.kernel for c in cfgs], axis=0)
-        bn = jnp.concatenate([c.bn_offset for c in cfgs], axis=0)
+        kernel, bn, program = self._stacked_planes(names, cfgs)
         idxs = [i for n in names for i in groups[n]]
         images = jnp.stack(
             [jnp.asarray(requests[i].image, jnp.float32) for i in idxs]
@@ -561,7 +535,7 @@ class FPCAPipeline:
         window_keep = self._group_window_keep(
             cfgs[0], [requests[i] for i in idxs]
         )
-        counts = self._run_batch(spec, kernel, bn, images, window_keep)
+        counts = self._run_batch(program, kernel, bn, images, window_keep)
         self.stats.merged_groups += 1
         offsets = np.cumsum([0] + [int(c.kernel.shape[0]) for c in cfgs])
         row = 0

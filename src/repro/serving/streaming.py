@@ -6,18 +6,18 @@ oracle: §3.4.5's region skipping only pays off when the block keep/skip masks
 are derived frame-to-frame.  This module closes that loop:
 
 * :class:`StreamSession` holds per-stream state — the previous (effective)
-  frame, the per-block change ages, and the registered
-  :class:`~repro.serving.fpca_pipeline.FrontendConfig` it is programmed
-  against.  Each frame steps a **temporal delta gate**
+  frame, the per-block change ages, and the registered configuration(s) it
+  is programmed against.  Each frame steps a **temporal delta gate**
   (:func:`block_delta_mask`): per-``skip_block`` change detection against the
   previous frame, with hysteresis (a changed block stays live for a few
   frames, riding out sensor noise and slow motion) and periodic keyframe
   refresh (a full readout every ``keyframe_interval`` frames bounds drift).
 
 * The resulting block mask is pushed *into the compute*: it becomes the
-  per-window keep mask that the fused kernel path compacts on
-  (:mod:`repro.kernels.fpca_conv`), so skipped windows never execute — the
-  savings §3.4.5 accounts analytically become real executed-window savings.
+  per-window keep mask the fused kernel path compacts on (behind
+  :class:`repro.fpca.CompiledFrontend`), so skipped windows never execute —
+  the savings §3.4.5 accounts analytically become real executed-window
+  savings.
 
 * :class:`StreamServer` drives everything through an **async double-buffered
   loop**: jax dispatch is non-blocking, so the host-side work for frame
@@ -26,23 +26,32 @@ are derived frame-to-frame.  This module closes that loop:
   bounds queue growth, and results are realised — and yielded — strictly in
   frame order.  Multiple streams (many cameras) registered on the same
   configuration fan into ONE device batch per tick, reusing the pipeline's
-  LRU executable cache and mesh sharding.
+  shared executable cache and mesh sharding.
 
 Adaptive control plane (the deployment loop on top):
 
-* **Keep-fraction servo** — pass a
-  :class:`~repro.serving.control.GateControllerConfig` and every stream gets
-  its own :class:`~repro.serving.control.GateController`, closed-loop
-  servoing its gate threshold against a kept-fraction / energy budget from
-  the executed-window stats of each tick (EMA + bounded PI step in log
-  space, anti-windup; keyframe ticks held out).
+* **Keep-fraction / energy servo** — pass a
+  :class:`~repro.fpca.GateControllerConfig` and every stream gets its own
+  :class:`~repro.serving.control.GateController`, closed-loop servoing its
+  gate threshold against a kept-fraction / energy budget from the
+  executed-window stats of each tick (EMA + bounded PI step in log space,
+  anti-windup; keyframe ticks held out).
 
 * **Multi-config fan-out** — a stream may be attached to *several*
   registered configurations sharing one spec
-  (``add_stream(sid, ("edges", "blobs"))``); each tick gates the frame once
-  and serves every configuration through ONE channel-stacked fused call
+  (``add_stream(sid, ("edges", "blobs"))``); each tick gates the frame and
+  serves every configuration through ONE channel-stacked fused call
   (:meth:`FPCAPipeline.run_config_batch` with a name list), yielding one
   :class:`StreamFrameResult` per (stream, config).
+
+* **Per-config gate thresholds** — a multi-config stream may give each
+  configuration its OWN delta gate (and its own servo):
+  ``add_stream(sid, ("A", "B"), gate={"A": DeltaGateConfig(...), "B": ...})``.
+  Each config keeps independent block ages / thresholds / controllers; the
+  fused call executes the **union** of the per-config window masks (still
+  one launch), and each config's channel slice is masked back to exactly its
+  own keep decision — bit-identical to serving that config alone with that
+  gate.
 
 * **Sticky buckets** — the pipeline's ``bucket_patience`` keeps the
   compacted row bucket from flapping between power-of-two neighbours on
@@ -61,11 +70,11 @@ import dataclasses
 import math
 from typing import Any, Iterable, Iterator, Mapping, Sequence
 
-import jax
 import numpy as np
 
 from repro.core import analysis, mapping
-from repro.serving.control import GateController, GateControllerConfig
+from repro.fpca.program import DeltaGateConfig, GateControllerConfig
+from repro.serving.control import GateController
 from repro.serving.fpca_pipeline import FPCAPipeline
 
 __all__ = [
@@ -75,17 +84,11 @@ __all__ = [
     "StreamSession",
     "StreamFrameResult",
     "StreamServer",
+    "block_delta",
     "block_delta_mask",
 ]
 
-
-@dataclasses.dataclass(frozen=True)
-class DeltaGateConfig:
-    """Temporal delta gate knobs (per-stream)."""
-
-    threshold: float = 0.02      # mean |Δ| per block that counts as "changed"
-    hysteresis: int = 1          # frames a block stays live after its change
-    keyframe_interval: int = 30  # full-frame refresh period (0 = never)
+_USE_SERVER = object()   # add_stream sentinel: "inherit the server default"
 
 
 def _effective_frame(frame: np.ndarray, spec: mapping.FPCASpec) -> np.ndarray:
@@ -112,6 +115,14 @@ def _block_reduce_mean(x: np.ndarray, block: int) -> np.ndarray:
     return sums / counts
 
 
+def block_delta(
+    prev_eff: np.ndarray, cur_eff: np.ndarray, spec: mapping.FPCASpec
+) -> np.ndarray:
+    """Mean absolute per-block change between two *effective* (binned)
+    frames — the statistic every per-config threshold compares against."""
+    return _block_reduce_mean(np.abs(cur_eff - prev_eff), spec.skip_block)
+
+
 def block_delta_mask(
     prev_eff: np.ndarray,
     cur_eff: np.ndarray,
@@ -125,91 +136,61 @@ def block_delta_mask(
     intensity) — the shape :func:`repro.core.mapping.active_window_mask`
     consumes.
     """
-    delta = np.abs(cur_eff - prev_eff)
-    return _block_reduce_mean(delta, spec.skip_block) > threshold
+    return block_delta(prev_eff, cur_eff, spec) > threshold
 
 
-class StreamSession:
-    """Per-stream state: previous frame, block ages, programmed config(s).
-
-    ``config`` may be one registered configuration name or a sequence of
-    names sharing one spec (multi-config fan-out); :attr:`configs` always
-    holds the normalised tuple and :attr:`config` the primary name.  With a
-    ``controller``, every gated frame feeds the closed-loop threshold servo
-    and the session's :attr:`gate` is re-derived for the next frame.
-    """
+class _GateState:
+    """Delta-gate state for one configuration of one stream: its own gate
+    knobs, block-age grid, servo controller and retained mask history."""
 
     def __init__(
         self,
-        stream_id: str,
-        config: str | Sequence[str],
-        spec: mapping.FPCASpec,
-        gate: DeltaGateConfig | None,
-        history: int = 512,
-        controller: GateController | None = None,
+        name: str,
+        gate: DeltaGateConfig,
+        controller: GateController | None,
+        block_shape: tuple[int, int],
+        history: int,
     ):
-        self.stream_id = stream_id
-        self.configs: tuple[str, ...] = (
-            (config,) if isinstance(config, str) else tuple(config)
-        )
-        if not self.configs:
-            raise ValueError("need at least one config name")
-        self.spec = spec
-        self.gate = gate                       # None = gating off (dense)
-        self.controller = controller if gate is not None else None
-        self.frame_idx = 0
+        self.name = name
+        self.gate = gate
+        self.controller = controller
+        self.age = np.full(block_shape, gate.hysteresis + 1, np.int64)
         self.last_keyframe = False
+        self.last_block_mask: np.ndarray | None = None
         self.last_window_mask: np.ndarray | None = None
-        self._prev: np.ndarray | None = None
-        bh = math.ceil(spec.eff_h / spec.skip_block)
-        bw = math.ceil(spec.eff_w / spec.skip_block)
-        stale = (gate.hysteresis + 1) if gate else 0
-        self._age = np.full((bh, bw), stale, np.int64)
         # gate history for energy accounting, bounded so a long-running
         # stream does not leak (the report covers the retained window)
         self.block_masks: collections.deque[np.ndarray] = collections.deque(
             maxlen=history
         )
 
-    @property
-    def config(self) -> str:
-        """Primary configuration name (first of :attr:`configs`)."""
-        return self.configs[0]
-
-    def step(self, frame: np.ndarray) -> np.ndarray | None:
-        """Advance one frame; returns the block keep mask (None = dense).
-
-        A block is kept iff it changed within the last ``hysteresis + 1``
-        frames; keyframes (the first frame, then every ``keyframe_interval``)
-        keep everything but do NOT reset the ages — a static scene goes quiet
-        again immediately after the refresh.  With a controller attached, the
-        mask also feeds the threshold servo, so the NEXT frame gates with the
-        servoed threshold.
-        """
-        if self.gate is None:
-            self.frame_idx += 1
-            return None
-        cur = _effective_frame(frame, self.spec)
-        if self._prev is not None:
-            changed = block_delta_mask(self._prev, cur, self.spec, self.gate.threshold)
-            self._age = np.where(changed, 0, self._age + 1)
-        keyframe = self._prev is None or (
+    def step(
+        self,
+        spec: mapping.FPCASpec,
+        delta_blocks: np.ndarray | None,
+        frame_idx: int,
+    ) -> np.ndarray:
+        """Advance this config's gate by one frame (``delta_blocks`` is the
+        shared per-block |Δ| grid, ``None`` on the first frame)."""
+        if delta_blocks is not None:
+            changed = delta_blocks > self.gate.threshold
+            self.age = np.where(changed, 0, self.age + 1)
+        keyframe = delta_blocks is None or (
             self.gate.keyframe_interval > 0
-            and self.frame_idx % self.gate.keyframe_interval == 0
+            and frame_idx % self.gate.keyframe_interval == 0
         )
         keep = (
-            np.ones_like(self._age, bool)
+            np.ones_like(self.age, bool)
             if keyframe
-            else self._age <= self.gate.hysteresis
+            else self.age <= self.gate.hysteresis
         )
-        self._prev = cur
-        self.frame_idx += 1
         self.last_keyframe = keyframe
+        self.last_block_mask = keep
         self.block_masks.append(keep)
         # derive the per-window keep grid ONCE per frame: the dispatch loop
         # reuses it (last_window_mask) and the keep-metric servo observes its
         # mean instead of re-deriving it
-        window = mapping.active_window_mask(self.spec, keep)
+        window = mapping.active_window_mask(spec, keep)
         self.last_window_mask = window
         if self.controller is not None:
             obs = (
@@ -224,11 +205,182 @@ class StreamSession:
                 self.gate = dataclasses.replace(self.gate, threshold=new_thr)
         return keep
 
-    def energy_report(self, const: analysis.FrontendConstants | None = None) -> dict:
+
+class StreamSession:
+    """Per-stream state: previous frame, block ages, programmed config(s).
+
+    ``config`` may be one registered configuration name or a sequence of
+    names sharing one spec (multi-config fan-out); :attr:`configs` always
+    holds the normalised tuple and :attr:`config` the primary name.
+
+    ``gate`` is one :class:`DeltaGateConfig` shared by every fanned-out
+    configuration (the classic behaviour), or a mapping
+    ``{config_name: DeltaGateConfig}`` giving each configuration its own
+    independent gate (per-config block ages and thresholds); ``controller``
+    follows the same shape with :class:`GateController` instances.  With
+    controllers attached, every gated frame feeds the closed-loop threshold
+    servo(s) and the per-config gates are re-derived for the next frame.
+    """
+
+    def __init__(
+        self,
+        stream_id: str,
+        config: str | Sequence[str],
+        spec: mapping.FPCASpec,
+        gate: DeltaGateConfig | Mapping[str, DeltaGateConfig] | None,
+        history: int = 512,
+        controller: GateController | Mapping[str, GateController] | None = None,
+    ):
+        self.stream_id = stream_id
+        self.configs: tuple[str, ...] = (
+            (config,) if isinstance(config, str) else tuple(config)
+        )
+        if not self.configs:
+            raise ValueError("need at least one config name")
+        self.spec = spec
+        self.per_config = isinstance(gate, Mapping) or isinstance(
+            controller, Mapping
+        )
+        self.frame_idx = 0
+        self._prev: np.ndarray | None = None
+        bh = math.ceil(spec.eff_h / spec.skip_block)
+        bw = math.ceil(spec.eff_w / spec.skip_block)
+        self.last_window_mask: np.ndarray | None = None
+
+        def _pick(mapping_or_one: Any, name: str, kind: str) -> Any:
+            if isinstance(mapping_or_one, Mapping):
+                try:
+                    return mapping_or_one[name]
+                except KeyError:
+                    raise KeyError(
+                        f"per-config {kind} mapping is missing config "
+                        f"{name!r} of stream {stream_id!r}"
+                    ) from None
+            return mapping_or_one
+
+        self._states: list[_GateState] = []
+        self._by_name: dict[str, _GateState] = {}
+        # gating-off sessions still expose a (never-appended) mask history so
+        # dense baselines keep the pre-redesign block_masks / energy_report
+        # surface
+        self._fallback_masks: collections.deque[np.ndarray] = collections.deque(
+            maxlen=history
+        )
+        if gate is None and not self.per_config:
+            self.gating = False
+            return
+        self.gating = True
+        if self.per_config:
+            for name in self.configs:
+                g = _pick(gate, name, "gate")
+                if g is None:
+                    raise ValueError(
+                        f"per-config gating needs a DeltaGateConfig for "
+                        f"config {name!r}"
+                    )
+                st = _GateState(
+                    name, g, _pick(controller, name, "controller"),
+                    (bh, bw), history,
+                )
+                self._states.append(st)
+                self._by_name[name] = st
+        else:
+            st = _GateState(
+                self.configs[0], gate, controller, (bh, bw), history
+            )
+            self._states.append(st)
+            for name in self.configs:
+                self._by_name[name] = st
+
+    # -- back-compat accessors (primary config's gate state) ----------------
+    @property
+    def config(self) -> str:
+        """Primary configuration name (first of :attr:`configs`)."""
+        return self.configs[0]
+
+    @property
+    def _primary(self) -> _GateState | None:
+        return self._states[0] if self._states else None
+
+    @property
+    def gate(self) -> DeltaGateConfig | None:
+        """Primary config's gate (None = gating off / dense)."""
+        st = self._primary
+        return st.gate if st is not None else None
+
+    @property
+    def controller(self) -> GateController | None:
+        st = self._primary
+        return st.controller if st is not None else None
+
+    @property
+    def last_keyframe(self) -> bool:
+        st = self._primary
+        return st.last_keyframe if st is not None else False
+
+    @property
+    def block_masks(self) -> collections.deque:
+        st = self._primary
+        return st.block_masks if st is not None else self._fallback_masks
+
+    def state_for(self, config: str) -> _GateState | None:
+        """This config's gate state (shared state unless per-config)."""
+        return self._by_name.get(config)
+
+    def step(self, frame: np.ndarray) -> np.ndarray | None:
+        """Advance one frame; returns the block keep mask (None = dense).
+
+        A block is kept iff it changed within the last ``hysteresis + 1``
+        frames; keyframes (the first frame, then every ``keyframe_interval``)
+        keep everything but do NOT reset the ages — a static scene goes quiet
+        again immediately after the refresh.  With controllers attached, the
+        masks also feed the threshold servo(s), so the NEXT frame gates with
+        the servoed threshold(s).
+
+        With per-config gates, the returned mask (and
+        :attr:`last_window_mask`) is the **union** over configs — what the
+        fused call must execute; each config's own decision is on its
+        :meth:`state_for` entry.
+        """
+        if not self.gating:
+            self.frame_idx += 1
+            return None
+        cur = _effective_frame(frame, self.spec)
+        delta_blocks = None
+        if self._prev is not None:
+            delta_blocks = block_delta(self._prev, cur, self.spec)
+        union_keep: np.ndarray | None = None
+        union_window: np.ndarray | None = None
+        for st in self._states:
+            keep = st.step(self.spec, delta_blocks, self.frame_idx)
+            union_keep = keep if union_keep is None else union_keep | keep
+            window = st.last_window_mask
+            union_window = (
+                window if union_window is None else union_window | window
+            )
+        self._prev = cur
+        self.frame_idx += 1
+        self.last_window_mask = union_window
+        return union_keep
+
+    def energy_report(
+        self,
+        const: analysis.FrontendConstants | None = None,
+        config: str | None = None,
+    ) -> dict:
         """Executed-window energy/cycle accounting over the retained gate
-        history (the last ``history`` frames)."""
+        history (the last ``history`` frames).  ``config`` selects one
+        fanned-out configuration's gate history (default: the primary's —
+        which under shared gating is *the* history)."""
+        if config is not None:
+            st = self._by_name.get(config)
+            if st is None:
+                raise KeyError(f"unknown config {config!r} for this session")
+            masks = st.block_masks
+        else:
+            masks = self.block_masks
         return analysis.streaming_frontend_report(
-            self.spec, list(self.block_masks), const or analysis.FrontendConstants()
+            self.spec, list(masks), const or analysis.FrontendConstants()
         )
 
 
@@ -237,8 +389,9 @@ class StreamFrameResult:
     """One (stream, config)'s activations for one tick of the serving loop.
 
     Single-config streams yield one result per tick; a multi-config stream
-    yields one per fanned-out configuration (same ``frame_idx`` and
-    ``block_mask``, per-config ``counts``), distinguished by ``config``.
+    yields one per fanned-out configuration (same ``frame_idx``; per-config
+    ``counts``, and per-config ``block_mask`` / ``kept_windows`` when the
+    stream uses per-config gates), distinguished by ``config``.
     """
 
     stream_id: str
@@ -268,6 +421,12 @@ class StreamStats:
 class StreamServer:
     """Async double-buffered multi-stream driver over :class:`FPCAPipeline`.
 
+    A thin fleet-orchestration layer: gating and batching happen here, every
+    fused launch goes through the pipeline's per-signature
+    :class:`repro.fpca.CompiledFrontend` handles (single-camera workloads
+    can skip this class entirely and use
+    :meth:`repro.fpca.CompiledFrontend.stream`).
+
     Args:
       pipeline: the serving pipeline whose registered configurations,
         executable cache and mesh sharding this server reuses.
@@ -275,7 +434,8 @@ class StreamServer:
         ``gating=False`` for a dense baseline server (no skipping — what the
         benchmark compares against).  With a ``controller``, this is only the
         *initial* gate — each stream's threshold is then servoed
-        independently.
+        independently.  Both can be overridden per stream (and per config)
+        in :meth:`add_stream`.
       controller: optional :class:`GateControllerConfig`; every stream added
         afterwards gets its own :class:`GateController` closed-loop servoing
         the gate threshold against the configured budget.
@@ -304,14 +464,31 @@ class StreamServer:
         self.stats = StreamStats()
 
     def add_stream(
-        self, stream_id: str, config: str | Sequence[str]
+        self,
+        stream_id: str,
+        config: str | Sequence[str],
+        *,
+        gate: Any = _USE_SERVER,
+        controller: Any = _USE_SERVER,
     ) -> StreamSession:
         """Attach a camera stream to registered pipeline configuration(s).
 
         A sequence of names fans the stream out to several programmed
-        configurations sharing one spec: each tick is gated once and served
+        configurations sharing one spec: each tick is gated and served
         through one channel-stacked fused call, yielding one
         :class:`StreamFrameResult` per configuration.
+
+        ``gate`` / ``controller`` override the server-wide defaults for this
+        stream: a :class:`DeltaGateConfig` /
+        :class:`GateControllerConfig` replaces the default, an explicit
+        ``None`` disables gating / servoing for this stream (a per-stream
+        dense baseline even on a gated server), and omitting the argument
+        inherits the server default.  Passing a mapping
+        ``{config_name: DeltaGateConfig}`` (and / or
+        ``{config_name: GateControllerConfig}``) gives each fanned-out
+        configuration its own independent gate state and servo — the fused
+        call then executes the union of the per-config masks and each
+        config's results are masked back to its own keep decision.
         """
         if stream_id in self.sessions:
             raise ValueError(f"stream {stream_id!r} already attached")
@@ -323,18 +500,62 @@ class StreamServer:
                 raise KeyError(f"unknown config {n!r}")
             cfgs.append(cfg)
         spec = cfgs[0].spec
+        base = cfgs[0].program.fanout_signature()
         for cfg in cfgs[1:]:
-            if cfg.spec != spec:
+            # one stacked call per tick serves one adc/enc/circuit epilogue:
+            # require full compile-signature compatibility, not just a
+            # shared spec (a 3-bit-ADC config stacked with an 8-bit one
+            # would silently serve the wrong saturation)
+            if cfg.program.fanout_signature() != base:
                 raise ValueError(
-                    f"multi-config stream needs a shared spec: config "
-                    f"{cfg.name!r} differs from {cfgs[0].name!r}"
+                    f"multi-config stream needs a shared spec and compile "
+                    f"signature (adc/enc/circuit): config {cfg.name!r} "
+                    f"differs from {cfgs[0].name!r}"
                 )
-        ctl = (
-            GateController(self.controller, spec, self.gate.threshold)
-            if (self.controller is not None and self.gate is not None)
-            else None
-        )
-        session = StreamSession(stream_id, names, spec, self.gate, controller=ctl)
+        eff_gate = self.gate if gate is _USE_SERVER else gate
+        eff_ctl = self.controller if controller is _USE_SERVER else controller
+        per_config = isinstance(eff_gate, Mapping) or isinstance(eff_ctl, Mapping)
+
+        def _controller_for(g: DeltaGateConfig, name: str) -> GateController | None:
+            if eff_ctl is None or g is None:
+                return None
+            conf = (
+                eff_ctl[name]
+                if isinstance(eff_ctl, Mapping)
+                else eff_ctl
+            )
+            return GateController(conf, spec, g.threshold) if conf else None
+
+        if per_config:
+            if eff_gate is None:
+                raise ValueError(
+                    "per-config controllers need gating enabled (pass gate=)"
+                )
+            for kind, m in (("gate", eff_gate), ("controller", eff_ctl)):
+                if isinstance(m, Mapping):
+                    missing = [n for n in names if n not in m]
+                    if missing:
+                        raise KeyError(
+                            f"per-config {kind} mapping is missing config "
+                            f"{missing[0]!r} of stream {stream_id!r}"
+                        )
+            gate_map = {
+                n: (eff_gate[n] if isinstance(eff_gate, Mapping) else eff_gate)
+                for n in names
+            }
+            ctl_map = {n: _controller_for(gate_map[n], n) for n in names}
+            session = StreamSession(
+                stream_id, names, spec, gate_map, controller=ctl_map
+            )
+        else:
+            ctl = (
+                _controller_for(eff_gate, names[0])
+                if eff_gate is not None
+                else None
+            )
+            session = StreamSession(
+                stream_id, names, spec, eff_gate, controller=ctl
+            )
         self.sessions[stream_id] = session
         return session
 
@@ -362,23 +583,35 @@ class StreamServer:
             h_o, w_o = mapping.output_dims(spec)
             entries = []
             keeps = []
-            gated = self.gate is not None
+            gated = any(session.gating for session, _ in members)
             for session, frame in members:
                 frame_idx = session.frame_idx
                 block = session.step(frame)
-                window = session.last_window_mask if gated else None
+                window = session.last_window_mask if session.gating else None
                 kept = int(window.sum()) if window is not None else h_o * w_o
-                entries.append(
-                    {
-                        "stream_id": session.stream_id,
-                        "frame_idx": frame_idx,
-                        "block_mask": block,
-                        "kept": kept,
-                        "total": h_o * w_o,
+                entry = {
+                    "stream_id": session.stream_id,
+                    "frame_idx": frame_idx,
+                    "block_mask": block,
+                    "kept": kept,
+                    "total": h_o * w_o,
+                }
+                if session.per_config:
+                    entry["per_config"] = {
+                        st.name: (
+                            st.last_block_mask,
+                            int(st.last_window_mask.sum()),
+                            st.last_window_mask,
+                        )
+                        for st in session._states
                     }
-                )
+                entries.append(entry)
                 if gated:
-                    keeps.append(window)
+                    keeps.append(
+                        window
+                        if window is not None
+                        else np.ones((h_o, w_o), bool)
+                    )
                 self.stats.frames += 1
                 self.stats.windows_total += h_o * w_o
                 self.stats.windows_kept += kept
@@ -400,19 +633,32 @@ class StreamServer:
         return launches
 
     def _finalize(self, launches: list[dict]) -> list[StreamFrameResult]:
-        """Device side of one tick: realise the batch (blocks) and unpack."""
+        """Device side of one tick: realise the batch (blocks) and unpack.
+
+        Per-config-gated streams executed the union mask; here each config's
+        channel slice is masked back to exactly its own keep decision (kept
+        windows are bit-identical to solo serving — row-independent math —
+        and windows the config skipped read as exact zeros)."""
         results: list[StreamFrameResult] = []
         for launch in launches:
             counts = np.asarray(launch["counts"])     # blocks until ready
             for row, e in enumerate(launch["entries"]):
+                per_config = e.get("per_config")
                 for name, lo, hi in launch["slices"]:
+                    sliced = (
+                        counts[row] if lo is None else counts[row, ..., lo:hi]
+                    )
+                    block, kept = e["block_mask"], e["kept"]
+                    if per_config is not None and name in per_config:
+                        block, kept, window = per_config[name]
+                        sliced = sliced * window[..., None].astype(sliced.dtype)
                     results.append(
                         StreamFrameResult(
                             stream_id=e["stream_id"],
                             frame_idx=e["frame_idx"],
-                            counts=counts[row] if lo is None else counts[row, ..., lo:hi],
-                            block_mask=e["block_mask"],
-                            kept_windows=e["kept"],
+                            counts=sliced,
+                            block_mask=block,
+                            kept_windows=kept,
                             total_windows=e["total"],
                             config=name,
                         )

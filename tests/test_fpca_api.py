@@ -1,0 +1,534 @@
+"""The unified ``repro.fpca`` compile/execute API.
+
+Contracts pinned here:
+
+* **API surface** — ``repro.fpca.__all__`` resolves, and importing the new
+  package (plus the serving layers rebased on it) raises no
+  ``DeprecationWarning`` — deprecated paths must not leak back into library
+  internals (enforced again as a CI lane with ``-W error::DeprecationWarning``).
+* **compile → reprogram → run** — zero recompiles across an NVM weight
+  rewrite, asserted via ``cache_info()``: the field-programmability headline
+  as an executable test.
+* **Backend registry** — built-ins registered, unknown names rejected with
+  the available list, third-party backends registrable and servable.
+* **Signature stability** — golden values for ``spec_signature`` and
+  ``FPCAProgram.signature()``: a silent change here silently invalidates
+  every warm executable cache in a fleet, so the exact tuples are pinned.
+* **Deprecated aliases** — ``FrontendConfig`` / ``FPCAFrontendConfig`` and
+  the ``submit`` / fused-``fpca_forward`` shims stay importable/callable and
+  warn.
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro.fpca as fpca
+from repro.core.mapping import FPCASpec, active_window_mask, output_dims
+
+H = W = 24
+
+
+def _spec(kernel: int = 5, stride: int = 5, c_o: int = 4) -> FPCASpec:
+    return FPCASpec(
+        image_h=H, image_w=W, out_channels=c_o, kernel=kernel, stride=stride
+    )
+
+
+def _data(spec: FPCASpec, batch: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    images = rng.uniform(0, 1, (batch, H, W, spec.in_channels)).astype(np.float32)
+    k = spec.kernel
+    kernel = (
+        rng.normal(size=(spec.out_channels, k, k, spec.in_channels)) * 0.2
+    ).astype(np.float32)
+    return images, kernel
+
+
+def _dense_reference(bucket_model, spec, images, kernel):
+    from repro.core.fpca_sim import fpca_forward
+
+    return np.asarray(
+        fpca_forward(
+            images, kernel, spec, model=bucket_model, mode="bucket_sigmoid",
+            hard=True,
+        )["counts"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# API surface
+# ---------------------------------------------------------------------------
+
+
+def test_all_names_resolve():
+    for name in fpca.__all__:
+        assert getattr(fpca, name) is not None, name
+
+
+def test_package_imports_deprecation_clean():
+    """The new package and the serving layers rebased on it import without
+    touching any deprecated path (the CI api-surface lane in one test)."""
+    import os
+
+    src = Path(__file__).resolve().parents[1] / "src"
+    code = (
+        "import repro.fpca as f; "
+        "assert all(hasattr(f, n) for n in f.__all__); "
+        "import repro.core, repro.serving.streaming, "
+        "repro.serving.fpca_pipeline, repro.serving.control"
+    )
+    env = dict(os.environ, PYTHONPATH=str(src))
+    subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c", code],
+        check=True,
+        env=env,
+    )
+
+
+# ---------------------------------------------------------------------------
+# compile / run / reprogram
+# ---------------------------------------------------------------------------
+
+
+def test_compile_run_matches_dense_reference(bucket_model):
+    spec = _spec()
+    images, kernel = _data(spec)
+    fe = fpca.compile(
+        fpca.FPCAProgram(spec=spec), backend="basis", weights=kernel,
+        model=bucket_model,
+    )
+    got = np.asarray(fe.run(images))
+    np.testing.assert_array_equal(got, _dense_reference(bucket_model, spec, images, kernel))
+    # single-frame call mirrors the input's batchedness
+    one = np.asarray(fe.run(images[0]))
+    np.testing.assert_array_equal(one, got[0])
+
+
+def test_reprogram_performs_zero_recompiles(bucket_model):
+    """compile() -> run -> reprogram -> run: the executable-cache miss count
+    must not move across the NVM rewrite (the acceptance contract)."""
+    spec = _spec()
+    images, k1 = _data(spec, seed=1)
+    _, k2 = _data(spec, seed=2)
+    fe = fpca.compile(
+        fpca.FPCAProgram(spec=spec), backend="basis", weights=k1,
+        model=bucket_model,
+    )
+    out1 = np.asarray(fe.run(images))
+    misses_before = fe.cache_info().misses
+    assert misses_before == 1                     # exactly one compile
+    fe.reprogram(k2)
+    out2 = np.asarray(fe.run(images))
+    info = fe.cache_info()
+    assert info.misses == misses_before           # ZERO recompiles
+    assert info.hits >= 1
+    assert fe.stats.reprograms == 2               # compile(weights=) + reprogram
+    assert not np.array_equal(out1, out2)         # new weights really serve
+    np.testing.assert_array_equal(
+        out2, _dense_reference(bucket_model, spec, images, k2)
+    )
+
+
+def test_run_requires_programmed_weights(bucket_model):
+    fe = fpca.compile(
+        fpca.FPCAProgram(spec=_spec()), backend="basis", model=bucket_model
+    )
+    with pytest.raises(RuntimeError, match="reprogram"):
+        fe.run(np.zeros((1, H, W, 3), np.float32))
+
+
+def test_reprogram_validates_kernel_shape(bucket_model):
+    fe = fpca.compile(
+        fpca.FPCAProgram(spec=_spec()), backend="basis", model=bucket_model
+    )
+    with pytest.raises(ValueError, match="kernel shape"):
+        fe.reprogram(np.zeros((4, 3, 3, 3), np.float32))  # spec kernel is 5
+
+
+def test_compiled_block_mask_parity(bucket_model):
+    """Region skipping through the handle: kept windows bit-identical to
+    dense, skipped windows exact zeros, fewer windows executed."""
+    spec = _spec()
+    images, kernel = _data(spec)
+    fe = fpca.compile(
+        fpca.FPCAProgram(spec=spec), backend="basis", weights=kernel,
+        model=bucket_model,
+    )
+    bh = -(-spec.eff_h // spec.skip_block)
+    bw = -(-spec.eff_w // spec.skip_block)
+    mask = np.zeros((bh, bw), bool)
+    mask[0, 0] = True
+    got = np.asarray(fe.run(images, block_mask=mask))
+    dense = _dense_reference(bucket_model, spec, images, kernel)
+    keep = active_window_mask(spec, mask)
+    np.testing.assert_array_equal(got[:, keep], dense[:, keep])
+    assert np.all(got[:, ~keep] == 0)
+    assert fe.stats.windows_executed < fe.stats.windows_total
+
+
+def test_reference_backend_serves_same_counts(bucket_model):
+    """Backends are interchangeable behind the handle: the dense reference
+    executable serves bit-identical counts to the fused basis path."""
+    spec = _spec()
+    images, kernel = _data(spec)
+    outs = {}
+    for backend in ("basis", "reference"):
+        fe = fpca.compile(
+            fpca.FPCAProgram(spec=spec), backend=backend, weights=kernel,
+            model=bucket_model,
+        )
+        outs[backend] = np.asarray(fe.run(images))
+    np.testing.assert_array_equal(outs["basis"], outs["reference"])
+
+
+def test_compiled_stream_dense_and_gated(bucket_model):
+    spec = _spec()
+    _, kernel = _data(spec)
+    fe = fpca.compile(
+        fpca.FPCAProgram(spec=spec), backend="basis", weights=kernel,
+        model=bucket_model,
+    )
+    rng = np.random.default_rng(5)
+    frames = [rng.uniform(0, 1, (H, W, 3)).astype(np.float32) for _ in range(4)]
+    h_o, w_o = output_dims(spec)
+    # dense stream == per-frame run()
+    dense = list(fe.stream(frames))
+    assert [r.frame_idx for r in dense] == list(range(4))
+    for frame, r in zip(frames, dense):
+        np.testing.assert_array_equal(
+            r.counts, np.asarray(fe.run(frame))
+        )
+        assert r.kept_windows == h_o * w_o and r.block_mask is None
+    # gated static stream: everything after the keyframe is skipped
+    static = [frames[0]] * 4
+    gated = list(
+        fe.stream(
+            static,
+            gate=fpca.DeltaGateConfig(threshold=0.05, hysteresis=0,
+                                      keyframe_interval=0),
+        )
+    )
+    assert gated[0].kept_windows == h_o * w_o      # first frame = keyframe
+    assert all(r.kept_windows == 0 for r in gated[1:])
+    assert all(np.all(r.counts == 0) for r in gated[1:])
+
+
+def test_program_gate_controller_drive_stream(bucket_model):
+    """program.gate / program.controller are the stream() defaults."""
+    from repro.data.pipeline import SyntheticMovingObject
+
+    spec = _spec()
+    _, kernel = _data(spec)
+    program = fpca.FPCAProgram(
+        spec=spec,
+        gate=fpca.DeltaGateConfig(threshold=0.02, hysteresis=1,
+                                  keyframe_interval=0),
+        controller=fpca.GateControllerConfig(target=0.3),
+    )
+    fe = fpca.compile(program, backend="basis", weights=kernel,
+                      model=bucket_model)
+    cam = SyntheticMovingObject((H, W), seed=3, radius=4.0)
+    results = list(fe.stream(cam.frame_at(t) for t in range(6)))
+    assert len(results) == 6
+    session = fe._stream_session
+    assert session.controller is not None
+    assert len(session.controller.history) == 6
+    # the servo actually moved the threshold off the initial gate value
+    assert session.gate.threshold != program.gate.threshold
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_backends_registered():
+    names = fpca.available_backends()
+    for name in ("reference", "pallas", "basis"):
+        assert name in names
+    assert fpca.get_backend("basis").fused
+    assert fpca.get_backend("reference").differentiable
+
+
+def test_unknown_backend_rejected_with_available_list():
+    with pytest.raises(ValueError, match="unknown backend"):
+        fpca.get_backend("verilator")
+    from repro.core.fpca_sim import fpca_forward
+
+    spec = _spec()
+    images, kernel = _data(spec)
+    with pytest.raises(ValueError, match="available"):
+        fpca_forward(images, kernel, spec, backend="verilator")
+
+
+def test_third_party_backend_registers_and_serves(bucket_model):
+    """A registered third-party backend is a first-class compile() target."""
+    basis = fpca.get_backend("basis")
+    calls = {"n": 0}
+
+    def make_executable(model, **kw):
+        calls["n"] += 1
+        return basis.make_executable(model, **kw)
+
+    try:
+        fpca.register_backend(
+            "thirdparty-test", description="test double"
+        )(make_executable)
+        assert "thirdparty-test" in fpca.available_backends()
+        with pytest.raises(ValueError, match="already registered"):
+            fpca.register_backend("thirdparty-test")(make_executable)
+        spec = _spec()
+        images, kernel = _data(spec)
+        fe = fpca.compile(
+            fpca.FPCAProgram(spec=spec), backend="thirdparty-test",
+            weights=kernel, model=bucket_model,
+        )
+        got = np.asarray(fe.run(images))
+        np.testing.assert_array_equal(
+            got, _dense_reference(bucket_model, spec, images, kernel)
+        )
+        assert calls["n"] == 1
+    finally:
+        from repro.fpca.backends import _REGISTRY
+
+        _REGISTRY.pop("thirdparty-test", None)
+
+
+def test_registered_programs_with_custom_adc_stay_distinct(bucket_model):
+    """register() accepts a full FPCAProgram; two programs sharing a spec
+    but differing in a compiled-in field (ADC bits) must NOT share an
+    executable — and must serve their own epilogue constants."""
+    from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
+
+    spec = _spec()
+    images, kernel = _data(spec, batch=1)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("a8", fpca.FPCAProgram(spec=spec), kernel)
+    pipe.register(
+        "a3", fpca.FPCAProgram(spec=spec, adc=fpca.ADCConfig(bits=3)), kernel
+    )
+    res8, res3 = pipe.serve(
+        [FrontendRequest("a8", images[0]), FrontendRequest("a3", images[0])]
+    )
+    assert pipe.cache_info().misses == 2          # distinct signatures
+    assert np.asarray(res3).max() <= 7            # 3-bit saturation served
+    assert not np.array_equal(np.asarray(res8), np.asarray(res3))
+
+
+def test_pipeline_fits_model_against_program_circuit(bucket_model):
+    """A registered custom-circuit program must serve counts calibrated for
+    THAT circuit (parity with fpca.compile on the same program), not the
+    pipeline's default calibration."""
+    from repro.core.curvefit import fit_bucket_model
+    from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
+
+    spec = _spec()
+    images, kernel = _data(spec)
+    circuit = fpca.CircuitParams(s0=0.5)
+    custom_model = fit_bucket_model(circuit, n_pixels=spec.n_active_pixels)
+    program = fpca.FPCAProgram(spec=spec, circuit=circuit)
+    # inject both calibrations so the test fits nothing extra itself
+    pipe = FPCAPipeline(
+        {
+            (fpca.CircuitParams(), 75): bucket_model,
+            (circuit, 75): custom_model,
+        },
+        backend="basis",
+    )
+    pipe.register("custom", program, kernel)
+    pipe.register("default", spec, kernel)
+    res_custom, res_default = pipe.serve(
+        [FrontendRequest("custom", images[0]), FrontendRequest("default", images[0])]
+    )
+    want = fpca.compile(
+        program, backend="basis", weights=kernel, model=custom_model
+    ).run(images[0])
+    np.testing.assert_array_equal(np.asarray(res_custom), np.asarray(want))
+    # the two calibrations genuinely differ on this input
+    assert not np.array_equal(np.asarray(res_custom), np.asarray(res_default))
+
+
+def test_fanout_rejects_incompatible_programs(bucket_model):
+    """Channel-stacking configs whose programs differ beyond out_channels
+    (here: ADC bits) must be rejected — one stacked launch serves ONE
+    epilogue, so accepting them would silently mis-serve one config."""
+    from repro.serving.fpca_pipeline import FPCAPipeline
+    from repro.serving.streaming import StreamServer
+
+    spec = _spec()
+    _, kernel = _data(spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("a8", fpca.FPCAProgram(spec=spec), kernel)
+    pipe.register(
+        "a3", fpca.FPCAProgram(spec=spec, adc=fpca.ADCConfig(bits=3)), kernel
+    )
+    images = np.zeros((1, H, W, 3), np.float32)
+    with pytest.raises(ValueError, match="compile signature"):
+        pipe.run_config_batch(["a8", "a3"], images)
+    server = StreamServer(pipe)
+    with pytest.raises(ValueError, match="shared spec"):
+        server.add_stream("s0", ("a8", "a3"))
+
+
+def test_register_rejects_kernel_program_channel_mismatch(bucket_model):
+    from repro.serving.fpca_pipeline import FPCAPipeline
+
+    spec = _spec()
+    _, kernel = _data(spec)                       # 4 output channels
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    with pytest.raises(ValueError, match="output channels"):
+        pipe.register(
+            "x", fpca.FPCAProgram(spec=spec, out_channels=8), kernel
+        )
+
+
+def test_non_fused_backend_not_servable_through_fpca_forward(bucket_model):
+    """fpca_forward must refuse a registered non-fused third-party backend
+    rather than silently serving the built-in reference simulation."""
+    from repro.core.fpca_sim import fpca_forward
+    from repro.fpca.backends import _REGISTRY
+
+    spec = _spec()
+    images, kernel = _data(spec)
+    try:
+        fpca.register_backend("cosim-test", fused=False)(
+            lambda model, **kw: None
+        )
+        with pytest.raises(ValueError, match="not servable"):
+            fpca_forward(images, kernel, spec, backend="cosim-test")
+    finally:
+        _REGISTRY.pop("cosim-test", None)
+
+
+def test_pipeline_shares_one_cache_across_handles(bucket_model):
+    """The pipeline's handles share a single bounded executable cache."""
+    from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
+
+    pipe = FPCAPipeline(bucket_model, backend="basis", cache_capacity=2)
+    rng = np.random.default_rng(0)
+    for i, (k, s) in enumerate([(5, 5), (3, 2), (5, 1)]):
+        spec = _spec(k, s)
+        pipe.register(
+            f"c{i}", spec,
+            (rng.normal(size=(4, k, k, 3)) * 0.2).astype(np.float32),
+        )
+    img = rng.uniform(0, 1, (H, W, 3)).astype(np.float32)
+    pipe.serve([FrontendRequest(f"c{i}", img) for i in range(3)])
+    info = pipe.cache_info()
+    assert info.misses == 3 and info.currsize == 2 and info.evictions == 1
+    assert pipe.cache_size == 2
+
+
+# ---------------------------------------------------------------------------
+# signature stability (golden)
+# ---------------------------------------------------------------------------
+
+GOLDEN_SPEC_SIG = (
+    "repro.fpca/1",
+    ("spec", 24, 24, 4, 3, 2, 5, 3, 0, 1, 8),
+    ("out_channels", 4),
+    ("adc", 8, 1.0),
+    ("enc", 16, 1.0),
+)
+
+GOLDEN_PROGRAM_SIG = GOLDEN_SPEC_SIG + (
+    ("circuit", ("v_sat", 1.0), ("s0", 0.37), ("drive_a", 0.15),
+     ("drive_b", -0.1), ("drive_c", 0.25), ("coupling", 0.15),
+     ("kappa_r", 0.012), ("r_metal_mm", 0.0), ("fp_iters", 8.0)),
+)
+
+
+def test_spec_signature_golden():
+    """Exact pinned value: changing it silently invalidates every warm
+    executable cache (and breaks cross-process cache keys) — bump the
+    signature version string deliberately instead."""
+    spec = FPCASpec(image_h=24, image_w=24, out_channels=4, kernel=3, stride=2)
+    sig = fpca.spec_signature(spec, 4, fpca.ADCConfig(), fpca.WeightEncoding())
+    assert sig == GOLDEN_SPEC_SIG
+
+
+def test_program_signature_golden():
+    spec = FPCASpec(image_h=24, image_w=24, out_channels=4, kernel=3, stride=2)
+    assert fpca.FPCAProgram(spec=spec).signature() == GOLDEN_PROGRAM_SIG
+
+
+def test_signature_excludes_runtime_state():
+    """Gate / controller / weights are runtime state: programs differing only
+    there share one signature (reprogramming never recompiles)."""
+    spec = _spec()
+    base = fpca.FPCAProgram(spec=spec)
+    gated = fpca.FPCAProgram(
+        spec=spec,
+        gate=fpca.DeltaGateConfig(threshold=0.5),
+        controller=fpca.GateControllerConfig(target=0.3),
+    )
+    assert base.signature() == gated.signature()
+    # ...while anything compiled-in changes it
+    assert base.signature() != fpca.FPCAProgram(
+        spec=spec, adc=fpca.ADCConfig(bits=4)
+    ).signature()
+    assert base.signature() != fpca.FPCAProgram(
+        spec=spec, out_channels=7
+    ).signature()
+
+
+def test_spec_signature_importable_from_old_home():
+    """The serving-pipeline re-export stays the same function."""
+    from repro.serving.fpca_pipeline import spec_signature as old
+
+    assert old is fpca.spec_signature
+
+
+# ---------------------------------------------------------------------------
+# deprecated aliases & shims
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_config_alias_importable_and_warns():
+    with pytest.warns(DeprecationWarning, match="ProgrammedConfig"):
+        from repro.serving.fpca_pipeline import FrontendConfig
+    assert FrontendConfig is fpca.ProgrammedConfig
+
+
+def test_fpca_frontend_config_alias_importable_and_warns():
+    with pytest.warns(DeprecationWarning, match="FPCAProgram"):
+        from repro.core.frontend import FPCAFrontendConfig
+    assert FPCAFrontendConfig is fpca.FPCAProgram
+    with pytest.warns(DeprecationWarning):
+        from repro.core import FPCAFrontendConfig as from_core
+    assert from_core is fpca.FPCAProgram
+    # old keyword construction still works through the alias
+    cfg = fpca.FPCAProgram(spec=_spec(), circuit=fpca.CircuitParams())
+    assert cfg.adc == fpca.ADCConfig()
+
+
+def test_submit_shim_warns_and_forwards(bucket_model):
+    from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
+
+    spec = _spec()
+    images, kernel = _data(spec, batch=1)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    req = FrontendRequest("cam", images[0])
+    want = pipe.serve([req])[0]
+    with pytest.warns(DeprecationWarning, match="serve"):
+        got = pipe.submit([req])[0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_fpca_forward_warns(bucket_model):
+    from repro.core.fpca_sim import fpca_forward
+
+    spec = _spec()
+    images, kernel = _data(spec)
+    with pytest.warns(DeprecationWarning, match="repro.fpca.compile"):
+        fpca_forward(
+            images, kernel, spec, model=bucket_model, mode="bucket_sigmoid",
+            hard=True, backend="basis",
+        )

@@ -650,6 +650,110 @@ def test_multi_config_stream_matches_single_config_serving(bucket_model):
         np.testing.assert_array_equal(got.counts, want.counts)
 
 
+def test_per_config_gates_match_solo_serving(bucket_model):
+    """add_stream(sid, ("A", "B"), gate={...}) gives each config its own
+    gate state; every (stream, config) result is bit-identical to serving
+    that config alone with that gate — even though the fused call executes
+    only the union mask."""
+    spec = _spec()
+    rng = np.random.default_rng(41)
+    kA = (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32)
+    kB = (rng.normal(size=(6, 5, 5, 3)) * 0.2).astype(np.float32)
+    gateA = DeltaGateConfig(threshold=0.01, hysteresis=1, keyframe_interval=4)
+    gateB = DeltaGateConfig(threshold=0.08, hysteresis=0, keyframe_interval=0)
+    stream = SyntheticMovingObject((H, W), seed=13, radius=4.0)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("A", spec, kA)
+    pipe.register("B", spec, kB)
+
+    def serve(configs, gate):
+        server = StreamServer(pipe)
+        server.add_stream("s0", configs, gate=gate)
+        return [
+            r
+            for results in server.run({"s0": stream.frame_at(t)} for t in range(6))
+            for r in results
+        ]
+
+    fanned = serve(("A", "B"), {"A": gateA, "B": gateB})
+    soloA = serve("A", gateA)
+    soloB = serve("B", gateB)
+    assert [r.config for r in fanned] == ["A", "B"] * 6
+    for got, want in zip([r for r in fanned if r.config == "A"], soloA):
+        assert got.kept_windows == want.kept_windows
+        np.testing.assert_array_equal(got.block_mask, want.block_mask)
+        np.testing.assert_array_equal(got.counts, want.counts)
+    for got, want in zip([r for r in fanned if r.config == "B"], soloB):
+        assert got.kept_windows == want.kept_windows
+        np.testing.assert_array_equal(got.block_mask, want.block_mask)
+        np.testing.assert_array_equal(got.counts, want.counts)
+    # the tighter gate A and the looser gate B really made different calls
+    keptA = [r.kept_windows for r in fanned if r.config == "A"]
+    keptB = [r.kept_windows for r in fanned if r.config == "B"]
+    assert keptA != keptB
+
+
+def test_per_config_controllers_servo_independently(bucket_model):
+    """One GateController per config of one camera: different budgets lead
+    to different servoed thresholds within a single stream."""
+    from repro.serving.streaming import GateControllerConfig as GCC
+
+    spec = _spec()
+    rng = np.random.default_rng(42)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("A", spec, (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32))
+    pipe.register("B", spec, (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32))
+    gate = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=0)
+    server = StreamServer(pipe)
+    session = server.add_stream(
+        "s0", ("A", "B"),
+        gate={"A": gate, "B": gate},
+        controller={"A": GCC(target=0.1), "B": GCC(target=0.5)},
+    )
+    cam = SyntheticMovingObject((H, W), seed=14, radius=5.0)
+    for _ in server.run({"s0": cam.frame_at(t)} for t in range(8)):
+        pass
+    ctlA = session.state_for("A").controller
+    ctlB = session.state_for("B").controller
+    assert ctlA is not None and ctlB is not None and ctlA is not ctlB
+    assert len(ctlA.history) == 8 and len(ctlB.history) == 8
+    assert session.state_for("A").gate.threshold != session.state_for("B").gate.threshold
+    # per-config energy accounting sees per-config histories
+    repA = session.energy_report(config="A")
+    repB = session.energy_report(config="B")
+    assert repA["frames"] == repB["frames"] == 8
+    assert repA["kept_window_frac"] != repB["kept_window_frac"]
+
+
+def test_per_stream_gate_none_gives_dense_baseline(stream_pipe):
+    """add_stream(gate=None) on a gated server disables gating for that
+    stream only (omitting the argument inherits the server default)."""
+    server = _make_server(stream_pipe, n_streams=1, depth=1)
+    server.add_stream("dense", "cam", gate=None)
+    stream = SyntheticMovingObject((H, W), seed=7, radius=4.0)
+    ticks = [
+        {"s0": stream.frame_at(t), "dense": stream.frame_at(t)}
+        for t in range(4)
+    ]
+    results = [r for rs in server.run(ticks) for r in rs]
+    dense = [r for r in results if r.stream_id == "dense"]
+    gated = [r for r in results if r.stream_id == "s0"]
+    h_o, w_o = output_dims(server.sessions["s0"].spec)
+    assert all(r.block_mask is None and r.kept_windows == h_o * w_o for r in dense)
+    assert any(r.kept_windows < h_o * w_o for r in gated[1:])
+
+
+def test_per_config_gate_mapping_must_cover_all_configs(bucket_model):
+    spec = _spec()
+    rng = np.random.default_rng(43)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("A", spec, (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32))
+    pipe.register("B", spec, (rng.normal(size=(4, 5, 5, 3)) * 0.2).astype(np.float32))
+    server = StreamServer(pipe)
+    with pytest.raises(KeyError, match="missing config"):
+        server.add_stream("s0", ("A", "B"), gate={"A": DeltaGateConfig()})
+
+
 def test_multi_config_stream_requires_shared_spec(bucket_model):
     rng = np.random.default_rng(32)
     pipe = FPCAPipeline(bucket_model, backend="basis")
