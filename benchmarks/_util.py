@@ -1,0 +1,37 @@
+"""Shared benchmark-artifact helpers: strict-JSON record writing.
+
+Every ``BENCH_*.json`` at the repo root goes through :func:`write_json`:
+the executed-window accounting legitimately reports ``fps = inf`` for
+all-skipped histories (and a pathological record could carry NaN), but bare
+``json.dumps`` would emit the non-standard ``Infinity`` / ``NaN`` tokens
+that strict RFC 8259 parsers (and most CI tooling) reject.  ``jsonable``
+maps every non-finite float to ``None`` first, and ``allow_nan=False``
+guarantees nothing non-standard can ever slip into an artifact.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+
+def jsonable(obj):
+    """Recursively map non-finite floats (inf / -inf / NaN) to None."""
+    if isinstance(obj, dict):
+        return {k: jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonable(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer)):
+        obj = obj.item()
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+def write_json(path: Path, record: dict) -> None:
+    """Write one benchmark record as strict RFC 8259 JSON."""
+    path.write_text(
+        json.dumps(jsonable(record), indent=2, allow_nan=False) + "\n"
+    )

@@ -19,13 +19,13 @@ repo root.
 
 from __future__ import annotations
 
-import json
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._util import write_json
 from benchmarks.common import Row, time_fn
 from repro.core.adc import ADCConfig
 from repro.core.curvefit import fit_bucket_model, predict_sigmoid
@@ -123,7 +123,7 @@ def _frontend_rows(model) -> list[Row]:
         "us_dense_reference_batch": us_ref,
         "speedup_vs_dense_reference": us_ref / us_batched,
     }
-    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    write_json(BENCH_JSON, record)
     return [
         ("frontend_e2e_batched", us_batched,
          f"B={B} {H}x{H} -> {frames_per_s:.0f} frames/s "

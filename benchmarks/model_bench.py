@@ -1,0 +1,156 @@
+"""End-to-end classifier benchmark: the whole model program (FPCA analog
+frontend + digital CNN head) served as per-frame class logits.
+
+Three serving modes of the same trained-architecture network
+(`configs/fpca_cnn`-style head on a c_o=32 frontend):
+
+* **batched dense**  — `CompiledModel.run` on a frame batch (ONE fused
+  frontend+head jit per batch: the offline / high-throughput path);
+* **streaming dense** — `StreamServer` with gating off (per-tick logits,
+  every window executed);
+* **streaming delta-gated** — the skip-aware head path: kept windows are
+  patched into each stream's effective activation map, so every tick still
+  yields class logits while skipped windows never execute.
+
+Records classifier frames/sec for each mode, the masked-over-dense
+streaming speedup (the acceptance number: streaming classification must
+beat dense on the synthetic low-change scene), and the head's
+FLOPs/latency/energy accounting (`analysis.model_streaming_report`) to
+``BENCH_model.json`` at the repo root — diff against the batch-frontend
+baseline with ``python -m benchmarks.perf_compare --model``.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks._util import write_json
+from benchmarks.common import Row, time_fn
+from repro.core import analysis
+from repro.core.curvefit import fit_bucket_model
+from repro.core.mapping import FPCASpec, output_dims
+from repro.data.pipeline import SyntheticMovingObject
+from repro.fpca import DeltaGateConfig, DenseSpec, compile as fpca_compile
+from repro.configs.fpca_cnn import make_model_program
+from repro.serving.fpca_pipeline import FPCAPipeline
+from repro.serving.streaming import StreamServer
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_model.json"
+
+# Same operating point as stream_bench: c_o = 32 puts real matmul-bank work
+# behind every window, so the masked win measures compute, not dispatch.
+H = 160
+C_O = 32
+N_FRAMES = 48
+N_STREAMS = 2
+BATCH = 16
+GATE = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=24)
+
+
+def _serve(pipe: FPCAPipeline, cams: dict, gating: bool) -> tuple[float, StreamServer]:
+    server = StreamServer(pipe, GATE, depth=2, gating=gating)
+    for name in cams:
+        server.add_stream(name, "cls")
+    ticks = (
+        {name: cam.frame_at(t) for name, cam in cams.items()}
+        for t in range(N_FRAMES)
+    )
+    t0 = time.perf_counter()
+    for _ in server.run(ticks):
+        pass
+    return time.perf_counter() - t0, server
+
+
+def run() -> list[Row]:
+    bucket_model = fit_bucket_model(n_pixels=75)
+    spec = FPCASpec(image_h=H, image_w=H, out_channels=C_O, kernel=5, stride=5)
+    model = make_model_program(
+        spec, head=(DenseSpec(64, activation="relu"), DenseSpec(2))
+    )
+    rng = np.random.default_rng(0)
+    kernel = (rng.normal(size=model.frontend.kernel_shape) * 0.2).astype(np.float32)
+    head_params = model.init_head(jax.random.PRNGKey(0))
+
+    # batched dense classification through the fused handle
+    m = fpca_compile(model, backend="basis", weights=kernel,
+                     head_params=head_params, model=bucket_model)
+    frames = rng.uniform(0, 1, (BATCH, H, H, 3)).astype(np.float32)
+    us_batched = time_fn(lambda: m.run(frames), iters=5)
+    fps_batched = BATCH / (us_batched * 1e-6)
+
+    # streaming: dense vs delta-gated, per-tick logits either way
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cls", model, kernel, head_params=head_params)
+    cams = {
+        f"cam{i}": SyntheticMovingObject((H, H), seed=i + 1)
+        for i in range(N_STREAMS)
+    }
+    _serve(pipe, cams, gating=True)     # warm-up (compiles)
+    _serve(pipe, cams, gating=False)
+    pipe.reset_bucket_state()
+    t_gated, server = _serve(pipe, cams, gating=True)
+    t_dense, _ = _serve(pipe, cams, gating=False)
+
+    n_served = N_FRAMES * N_STREAMS
+    fps_gated = n_served / t_gated
+    fps_dense = n_served / t_dense
+    s = server.stats
+    kept_frac = s.windows_kept / s.windows_total
+    h_o, w_o = output_dims(spec)
+    rep = analysis.model_streaming_report(
+        model, list(server.sessions["cam0"].block_masks)
+    )
+
+    record = {
+        "workload": {
+            "streams": N_STREAMS, "frames_per_stream": N_FRAMES,
+            "batch": BATCH, "image": [H, H, 3],
+            "spec": {"kernel": spec.kernel, "stride": spec.stride,
+                     "out_channels": spec.out_channels, "binning": spec.binning},
+            "windows_per_frame": h_o * w_o,
+            "head": [str(layer) for layer in model.head],
+            "n_classes": model.n_classes,
+            "gate": {"threshold": GATE.threshold, "hysteresis": GATE.hysteresis,
+                     "keyframe_interval": GATE.keyframe_interval},
+        },
+        "backend": "basis (XLA lowering of the Pallas kernel math)",
+        "batched_dense": {"us_per_batch": us_batched, "frames_per_s": fps_batched},
+        "stream_dense": {"s_total": t_dense, "frames_per_s": fps_dense},
+        "stream_masked": {"s_total": t_gated, "frames_per_s": fps_gated},
+        "speedup_masked_vs_dense": fps_gated / fps_dense,
+        "kept_window_frac": kept_frac,
+        "head": {
+            "macs_per_frame": rep["head_macs_per_frame"],
+            "flops_per_frame": rep["head_flops_per_frame"],
+            "params": rep["head_params"],
+            "t_head_per_frame": rep["t_head_total"] / rep["frames"],
+            "e_head_per_frame": rep["e_head_total"] / rep["frames"],
+        },
+        "sensor_model": {
+            "energy_vs_dense": rep["energy_vs_dense"],
+            "model_energy_vs_dense": rep["model_energy_vs_dense"],
+            "model_latency_vs_dense": rep["model_latency_vs_dense"],
+            "model_fps_effective": rep["model_fps_effective"],
+        },
+    }
+    write_json(BENCH_JSON, record)
+
+    return [
+        ("model_e2e_batched", us_batched,
+         f"B={BATCH} {H}x{H} -> {fps_batched:.0f} frames/s fused "
+         f"frontend+head (json: {BENCH_JSON.name})"),
+        ("model_stream_delta_gated", t_gated / n_served * 1e6,
+         f"{N_STREAMS}x{N_FRAMES} frames -> {fps_gated:.0f} frames/s "
+         f"kept={kept_frac:.1%} "
+         f"speedup_vs_dense={record['speedup_masked_vs_dense']:.2f}x "
+         f"(logits every tick)"),
+        ("model_stream_dense", t_dense / n_served * 1e6,
+         f"{fps_dense:.0f} frames/s"),
+        ("model_head_cost", 0.0,
+         f"{rep['head_macs_per_frame']/1e6:.2f} MMAC/frame "
+         f"({rep['head_params']/1e3:.0f}k params)"),
+    ]

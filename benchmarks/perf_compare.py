@@ -10,6 +10,11 @@ video serving) against the PR-1 batch-frontend baseline
 (``BENCH_frontend.json``):
 
     PYTHONPATH=src python -m benchmarks.perf_compare --stream
+
+Model mode — diff the end-to-end classifier benchmark (``BENCH_model.json``,
+fused frontend + digital head) against the frontend-only baseline:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --model
 """
 
 from __future__ import annotations
@@ -82,6 +87,36 @@ def compare_stream(frontend_path: Path, stream_path: Path) -> None:
               f"ema {ctl_e['final_ema']:.3f})")
 
 
+def compare_model(frontend_path: Path, model_path: Path) -> None:
+    """Whole-model classifier (frontend + head) vs the frontend baseline."""
+    fe = json.loads(frontend_path.read_text())
+    md = json.loads(model_path.read_text())
+    head = md["head"]
+    print(f"baseline  ({frontend_path.name}): "
+          f"{fe['frames_per_s']:8.1f} frames/s (frontend only)  "
+          f"batch={fe['workload']['batch']} image={fe['workload']['image']}")
+    print(f"model     ({model_path.name}): "
+          f"{md['batched_dense']['frames_per_s']:8.1f} frames/s batched  "
+          f"image={md['workload']['image']} "
+          f"head={'+'.join(md['workload']['head'])}")
+    print(f"  streaming classification   : "
+          f"{md['stream_masked']['frames_per_s']:8.1f} frames/s delta-gated vs "
+          f"{md['stream_dense']['frames_per_s']:8.1f} dense -> "
+          f"{md['speedup_masked_vs_dense']:.2f}x "
+          f"(kept {md['kept_window_frac']:.1%} of windows, logits every tick)")
+    print(f"  digital head per frame     : "
+          f"{head['macs_per_frame']/1e6:.2f} MMAC "
+          f"({head['params']/1e3:.0f}k params, "
+          f"{head['t_head_per_frame']*1e6:.1f} us, "
+          f"{head['e_head_per_frame']*1e6:.2f} uJ)")
+    sm = md["sensor_model"]
+    print(f"  sensor-model accounting    : frontend energy "
+          f"{sm['energy_vs_dense']:.2f}x dense, whole model "
+          f"{sm['model_energy_vs_dense']:.2f}x energy / "
+          f"{sm['model_latency_vs_dense']:.2f}x latency, "
+          f"fps_effective {sm['model_fps_effective']:.0f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("base_tag", nargs="?")
@@ -89,15 +124,21 @@ def main() -> None:
     ap.add_argument("--cell")
     ap.add_argument("--stream", action="store_true",
                     help="diff BENCH_stream.json vs BENCH_frontend.json")
+    ap.add_argument("--model", action="store_true",
+                    help="diff BENCH_model.json vs BENCH_frontend.json")
     ap.add_argument("--frontend-json", type=Path, default=REPO / "BENCH_frontend.json")
     ap.add_argument("--stream-json", type=Path, default=REPO / "BENCH_stream.json")
+    ap.add_argument("--model-json", type=Path, default=REPO / "BENCH_model.json")
     args = ap.parse_args()
     if args.stream:
         compare_stream(args.frontend_json, args.stream_json)
+    if args.model:
+        compare_model(args.frontend_json, args.model_json)
+    if args.stream or args.model:
         return
     if not (args.base_tag and args.new_tag and args.cell):
         ap.error("dry-run mode needs base_tag, new_tag and --cell "
-                 "(or pass --stream)")
+                 "(or pass --stream / --model)")
     a = load(args.base_tag, args.cell)
     b = load(args.new_tag, args.cell)
     print(f"cell: {args.cell}")

@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.eq1_cycles",
     "benchmarks.kernel_bench",
     "benchmarks.stream_bench",
+    "benchmarks.model_bench",
     "benchmarks.roofline_report",
 ]
 

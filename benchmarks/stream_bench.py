@@ -15,12 +15,12 @@ baseline with ``python -m benchmarks.perf_compare --stream``.
 
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 
 import numpy as np
 
+from benchmarks._util import write_json
 from benchmarks.common import Row
 from repro.core.curvefit import fit_bucket_model
 from repro.core.mapping import FPCASpec, output_dims
@@ -30,18 +30,6 @@ from repro.serving.fpca_pipeline import FPCAPipeline
 from repro.serving.streaming import StreamServer
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_stream.json"
-
-
-def _jsonable(obj):
-    """Map non-finite floats to None: the accounting reports fps=inf for
-    all-skipped histories, which strict RFC 8259 parsers reject."""
-    if isinstance(obj, dict):
-        return {k: _jsonable(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [_jsonable(v) for v in obj]
-    if isinstance(obj, float) and not np.isfinite(obj):
-        return None
-    return obj
 
 # c_o = 32 puts real matmul-bank work behind every window (the Fig. 9
 # "savings erased at c_o=32" operating point) — small channel counts are
@@ -201,9 +189,7 @@ def run() -> list[Row]:
             "fps_effective": rep["fps_effective"],
         },
     }
-    BENCH_JSON.write_text(
-        json.dumps(_jsonable(record), indent=2, allow_nan=False) + "\n"
-    )
+    write_json(BENCH_JSON, record)
 
     us_gated = t_gated / frames * 1e6
     us_dense = t_dense / frames * 1e6

@@ -17,11 +17,19 @@ Hardware regime: extreme-edge — 4-bit SS-ADC, 8-level (3-bit) NVM weights.
 (With the paper's 8-bit ADC / 16-level NVM the analog path is benign enough
 that naive training survives deployment — we report that finding too; run
 with --adc-bits 8 --nvm-levels 16 to reproduce it.)
+
+Serving the result: ``--export model.npz`` saves the trained hw-aware
+network as an ``repro.fpca.FPCAModelProgram`` parameter bundle (NVM kernel +
+BN offsets + head weights + the counts->units digital gain), which
+``examples/serve_fpca_cnn.py --weights model.npz`` compiles into ONE fused
+frontend+head executable (``fpca.compile``) and serves batched and as a
+delta-gated stream with per-tick class logits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -32,14 +40,17 @@ from repro.core.curvefit import fit_bucket_model
 from repro.core.device_models import CircuitParams
 from repro.core.frontend import FPCAFrontend
 from repro.core.mapping import FPCASpec, output_dims
-from repro.fpca import FPCAProgram
+from repro.fpca import FPCAModelProgram, FPCAProgram
+from repro.configs.fpca_cnn import HEAD, N_CLASSES, N_HIDDEN
 from repro.data.pipeline import SyntheticVWW
 from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
 
 SPEC = FPCASpec(image_h=60, image_w=60, out_channels=8, kernel=5, stride=5)
 
 
-def init_head(key, h, w, c, n_hidden=64, n_classes=2):
+# the trained MLP IS configs.fpca_cnn.HEAD — deriving its dims from there
+# keeps the --export model program and the training head in lockstep
+def init_head(key, h, w, c, n_hidden=N_HIDDEN, n_classes=N_CLASSES):
     k1, k2 = jax.random.split(key)
     return {
         "w1": jax.random.normal(k1, (h * w * c, n_hidden)) * (h * w * c) ** -0.5,
@@ -82,7 +93,7 @@ def train(mode: str, layer: FPCAFrontend, data: SyntheticVWW, steps: int, batch:
         else:
             acts = ideal_frontend(p["frontend"]["kernel"], images)
         logits = head_apply(p["head"], acts)
-        onehot = jax.nn.one_hot(labels, 2)
+        onehot = jax.nn.one_hot(labels, N_CLASSES)
         return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), -1))
 
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))
@@ -110,12 +121,61 @@ def deployed_accuracy(layer: FPCAFrontend, params, data: SyntheticVWW, n=512) ->
     return correct / n
 
 
+def export_model_program(
+    layer: FPCAFrontend, params: dict
+) -> tuple[FPCAModelProgram, list[dict]]:
+    """The trained network as a compileable model program + head pytree.
+
+    The head consumed activations in convolution units
+    (``counts * adc.lsb * gain``), so the export bakes that digital gain in
+    as the model's ``input_scale`` — ``fpca.compile(model)`` then serves the
+    exact trained computation from raw SS-ADC counts.
+    """
+    model = FPCAModelProgram(
+        frontend=layer.config,
+        head=HEAD,
+        input_scale=float(layer.config.adc.lsb * layer.gain),
+    )
+    head_params = [
+        {"w": params["head"]["w1"], "b": params["head"]["b1"]},
+        {"w": params["head"]["w2"], "b": params["head"]["b2"]},
+    ]
+    return model, head_params
+
+
+def save_export(path: str, layer: FPCAFrontend, params: dict) -> None:
+    """Serialize the export for examples/serve_fpca_cnn.py (npz bundle)."""
+    model, head_params = export_model_program(layer, params)
+    spec, adc, enc = layer.config.spec, layer.config.adc, layer.config.enc
+    meta = {
+        "image_h": spec.image_h, "image_w": spec.image_w,
+        "out_channels": spec.out_channels, "kernel": spec.kernel,
+        "stride": spec.stride, "max_kernel": spec.max_kernel,
+        "adc_bits": adc.bits, "nvm_levels": enc.n_levels,
+        "input_scale": model.input_scale,
+    }
+    arrays = {
+        "kernel": np.asarray(params["frontend"]["kernel"], np.float32),
+        "bn_offset": np.asarray(params["frontend"]["bn_offset"], np.float32),
+        "meta": np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8),
+    }
+    for i, p in enumerate(head_params):
+        arrays[f"head{i}_w"] = np.asarray(p["w"], np.float32)
+        arrays[f"head{i}_b"] = np.asarray(p["b"], np.float32)
+    np.savez(path, **arrays)
+    print(f"exported FPCAModelProgram parameters -> {path} "
+          f"(serve with examples/serve_fpca_cnn.py --weights {path})")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--adc-bits", type=int, default=4)
     ap.add_argument("--nvm-levels", type=int, default=8)
+    ap.add_argument("--export", metavar="PATH",
+                    help="save the trained hw-aware network as an "
+                         "FPCAModelProgram bundle for serve_fpca_cnn.py")
     args = ap.parse_args()
 
     from repro.core.adc import ADCConfig
@@ -146,6 +206,8 @@ def main() -> None:
         results[mode] = acc
         print(f"  [{mode}] deployed-on-circuit accuracy: {acc*100:.1f}% "
               f"({time.time()-t0:.0f}s)")
+        if mode == "hw_aware" and args.export:
+            save_export(args.export, layer, params)
 
     gap = results["hw_aware"] - results["naive"]
     print(f"\nco-design gap (hw-aware - naive, both deployed on analog oracle): "

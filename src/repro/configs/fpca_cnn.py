@@ -2,12 +2,42 @@
 (VWW-class visual wake-word classification, paper §1/§5).
 
 Not part of the assigned LM pool — this is the FPCA technique's native
-application, used by examples/train_fpca_cnn.py and the Fig. 9 benchmarks.
+application, used by examples/train_fpca_cnn.py, examples/serve_fpca_cnn.py
+and the Fig. 9 benchmarks.  ``HEAD`` is the canonical digital backend the
+in-pixel layer feeds (the head trained by train_fpca_cnn.py); wrap frontend
+and head together with :func:`make_model_program` and compile the whole
+network with ``repro.fpca.compile``.
 """
 from repro.core.mapping import FPCASpec
+from repro.fpca import DenseSpec, FPCAModelProgram, FPCAProgram
 
 # 5x5x3 kernel, 8 output channels, stride 5 (the paper's energy sweet spot)
 FRONTEND_SPEC = FPCASpec(
     image_h=120, image_w=120, out_channels=8, kernel=5, stride=5, max_kernel=5
 )
 N_CLASSES = 2
+N_HIDDEN = 64
+
+# The digital classifier head behind the analog frontend: the MLP of
+# examples/train_fpca_cnn.py as validated layer specs (last stage = logits).
+HEAD = (DenseSpec(N_HIDDEN, activation="relu"), DenseSpec(N_CLASSES))
+
+
+def make_model_program(
+    spec: FPCASpec = FRONTEND_SPEC,
+    *,
+    head: tuple = HEAD,
+    input_scale: float = 1.0,
+    **frontend_kw,
+) -> FPCAModelProgram:
+    """The whole VWW-class network as one compileable model program.
+
+    ``frontend_kw`` (circuit / adc / enc / gate / controller) configure the
+    analog first layer; ``input_scale`` is the counts -> activation-unit
+    digital gain a trained export bakes in (``adc.lsb * gain``).
+    """
+    return FPCAModelProgram(
+        frontend=FPCAProgram(spec=spec, **frontend_kw),
+        head=head,
+        input_scale=input_scale,
+    )

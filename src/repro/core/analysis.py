@@ -19,8 +19,12 @@ from repro.core import mapping
 
 __all__ = [
     "FrontendConstants",
+    "DigitalConstants",
     "frontend_energy",
     "frontend_latency",
+    "head_flops",
+    "head_report",
+    "model_streaming_report",
     "streaming_frontend_report",
     "bandwidth_reduction",
     "conventional_cis",
@@ -134,6 +138,124 @@ def streaming_frontend_report(
         "fps_effective": n / t_total if t_total > 0 else math.inf,
         "energy_vs_dense": e_total / (n * dense_e["e_total"]),
         "latency_vs_dense": t_total / (n * dense_t["t_total"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Digital CNN head (the backend a model program attaches to the frontend)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DigitalConstants:
+    """Edge digital-backend cost model for the CNN head of a model program.
+
+    Representative 28nm edge-DSP numbers (stated assumptions, same posture
+    as the timing constants above): per-MAC energy and sustained MAC
+    throughput of the digital classifier the FPCA frontend feeds.
+    """
+
+    e_mac: float = 1.0e-12      # J / MAC (8-bit, 28nm edge accelerator)
+    macs_per_s: float = 4e9     # sustained MAC/s
+
+
+def head_flops(model) -> dict:
+    """Per-inference digital-head cost of an
+    :class:`repro.fpca.FPCAModelProgram` (one frame through the head).
+
+    Returns per-layer ``(kind, macs, params)`` rows plus totals; pooling and
+    activation stages count as element ops, not MACs.
+    """
+    from repro.fpca.program import ConvSpec, DenseSpec, PoolSpec
+
+    shapes = model.head_shapes()
+    per_layer: list[dict] = []
+    macs = params = elem_ops = 0
+    for i, layer in enumerate(model.head):
+        cur, nxt = shapes[i], shapes[i + 1]
+        if isinstance(layer, ConvSpec):
+            k2c = layer.kernel * layer.kernel * cur[-1]
+            l_macs = nxt[0] * nxt[1] * nxt[2] * k2c
+            l_params = layer.out_channels * (k2c + 1)
+            # fused activations cost the same element ops as standalone
+            # ActivationSpec stages — two spellings of one head must report
+            # one cost
+            l_elem = int(np.prod(nxt)) if layer.activation else 0
+        elif isinstance(layer, DenseSpec):
+            d_in = 1
+            for d in cur:
+                d_in *= int(d)
+            l_macs = d_in * layer.features
+            l_params = layer.features * (d_in + 1)
+            l_elem = layer.features if layer.activation else 0
+        elif isinstance(layer, PoolSpec):
+            l_macs = l_params = 0
+            l_elem = nxt[0] * nxt[1] * nxt[2] * layer.size * layer.size
+        else:                           # ActivationSpec
+            l_macs = l_params = 0
+            l_elem = int(np.prod(nxt))
+        per_layer.append(
+            {"layer": type(layer).__name__, "macs": l_macs,
+             "params": l_params, "elem_ops": l_elem}
+        )
+        macs += l_macs
+        params += l_params
+        elem_ops += l_elem
+    return {
+        "per_layer": per_layer,
+        "macs": macs,
+        "flops": 2 * macs,
+        "params": params,
+        "elem_ops": elem_ops,
+    }
+
+
+def head_report(model, digital: DigitalConstants = DigitalConstants()) -> dict:
+    """Energy / latency of one frame through the digital head (Eq.-2-style
+    accounting for the backend the frontend feeds)."""
+    fl = head_flops(model)
+    ops = fl["macs"] + fl["elem_ops"]
+    return {
+        **fl,
+        "e_head": ops * digital.e_mac,
+        "t_head": ops / digital.macs_per_s,
+    }
+
+
+def model_streaming_report(
+    model,
+    block_masks: list[np.ndarray | None],
+    const: FrontendConstants = FrontendConstants(),
+    digital: DigitalConstants = DigitalConstants(),
+) -> dict:
+    """Whole-model executed-cost accounting over a gated frame history:
+    the frontend's executed-window stats (:func:`streaming_frontend_report`)
+    with the digital head's FLOPs / energy / latency next to them.
+
+    The skip-aware serving path runs the head on the *patched* effective
+    activation map every tick (class logits per tick), so the head cost is
+    dense per frame even when the frontend skips — which is exactly why the
+    analog frontend carries the savings story.
+    """
+    rep = streaming_frontend_report(model.frontend.spec, block_masks, const)
+    head = head_report(model, digital)
+    n = rep["frames"]
+    e_model = rep["e_total"] + n * head["e_head"]
+    t_model = rep["t_total"] + n * head["t_head"]
+    dense_e = frontend_energy(model.frontend.spec, const)["e_total"] + head["e_head"]
+    dense_t = frontend_latency(model.frontend.spec, const)["t_total"] + head["t_head"]
+    return {
+        **rep,
+        "head_macs_per_frame": head["macs"],
+        "head_flops_per_frame": head["flops"],
+        "head_params": head["params"],
+        "e_head_total": n * head["e_head"],
+        "t_head_total": n * head["t_head"],
+        "e_model_total": e_model,
+        "t_model_total": t_model,
+        "model_fps_effective": n / t_model if t_model > 0 else math.inf,
+        "model_energy_vs_dense": e_model / (n * dense_e),
+        "model_latency_vs_dense": t_model / (n * dense_t),
     }
 
 

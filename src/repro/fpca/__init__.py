@@ -19,7 +19,9 @@ One program spec, explicit executables, pluggable backends::
 Layer map:
 
 * :mod:`repro.fpca.program`    — :class:`FPCAProgram` (the one validated
-  spec) + stable :func:`spec_signature`;
+  spec), :class:`FPCAModelProgram` (frontend + digital CNN head — the
+  paper's whole workload as one compileable model, served as class logits
+  by :class:`CompiledModel`) + stable :func:`spec_signature`;
 * :mod:`repro.fpca.backends`   — the :class:`Backend` registry
   (``reference`` / ``pallas`` / ``basis`` built in, third parties register
   via :func:`register_backend`);
@@ -48,12 +50,23 @@ from repro.fpca.backends import (
     register_backend,
 )
 from repro.fpca.cache import CacheInfo, ExecutableCache
-from repro.fpca.executable import CompiledFrontend, FrontendStats, compile
+from repro.fpca.executable import (
+    CompiledFrontend,
+    CompiledModel,
+    FrontendStats,
+    compile,
+)
 from repro.fpca.program import (
+    ActivationSpec,
+    ConvSpec,
     DeltaGateConfig,
+    DenseSpec,
+    FPCAModelProgram,
     FPCAProgram,
     GateControllerConfig,
+    PoolSpec,
     ProgrammedConfig,
+    ProgrammedModel,
     spec_signature,
 )
 
@@ -64,6 +77,14 @@ __all__ = [
     "DeltaGateConfig",
     "GateControllerConfig",
     "spec_signature",
+    # multi-layer model programs (frontend + digital CNN head)
+    "FPCAModelProgram",
+    "ProgrammedModel",
+    "ConvSpec",
+    "PoolSpec",
+    "DenseSpec",
+    "ActivationSpec",
+    "CompiledModel",
     # re-exported building blocks of a program
     "FPCASpec",
     "CircuitParams",

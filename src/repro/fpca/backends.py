@@ -76,6 +76,54 @@ class Backend:
     bucket_sensitive: bool = True
     description: str = ""
 
+    def make_model_executable(
+        self,
+        model_program,                      # repro.fpca.FPCAModelProgram
+        bucket_model: "BucketCurvefitModel",
+        *,
+        interpret: bool | None = None,
+        m_bucket: int | None = None,
+    ) -> Callable:
+        """A fresh jitted **whole-model** executable: frontend + digital head
+        in ONE jit.
+
+        The frontend stage is this backend's :attr:`make_executable` closure
+        (inlined into the trace — still the registry-dispatched kernel math);
+        the head is :meth:`repro.fpca.FPCAModelProgram.apply_head` lowered as
+        plain jnp ops, so the fused logits are bit-identical to composing a
+        frontend handle with the reference head apply.  Signature:
+        ``(images, kernel, bn_offset, head_params) -> logits``, with a
+        trailing ``window_mask`` argument when ``m_bucket`` is set (the
+        region-skip compacted path; skipped windows enter the head as exact
+        zeros).  Head parameters enter traced, so reprogramming them — like
+        NVM weights — never recompiles.
+        """
+        frontend = self.make_executable(
+            bucket_model,
+            spec=model_program.frontend.spec,
+            adc=model_program.frontend.adc,
+            enc=model_program.frontend.enc,
+            interpret=interpret,
+            m_bucket=m_bucket,
+        )
+        head = model_program.apply_head
+
+        if m_bucket is None:
+
+            @jax.jit
+            def run(images, kernel, bn_offset, head_params):
+                return head(head_params, frontend(images, kernel, bn_offset))
+
+        else:
+
+            @jax.jit
+            def run(images, kernel, bn_offset, head_params, window_mask):
+                return head(
+                    head_params, frontend(images, kernel, bn_offset, window_mask)
+                )
+
+        return run
+
 
 _REGISTRY: dict[str, Backend] = {}
 

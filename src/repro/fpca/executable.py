@@ -41,7 +41,7 @@ from repro.fpca.program import FPCAProgram
 from repro.kernels.fpca_conv.ops import StickyBucket
 from repro.launch.mesh import data_axes, data_extent
 
-__all__ = ["FrontendStats", "CompiledFrontend", "compile"]
+__all__ = ["FrontendStats", "CompiledFrontend", "CompiledModel", "compile"]
 
 _USE_PROGRAM = object()   # stream() sentinel: "inherit from program"
 
@@ -240,6 +240,31 @@ class CompiledFrontend:
         signature-shared handles); :meth:`run` binds the handle's own
         programmed weights.
         """
+        return self._dispatch_weighted(kernel, bn_offset, images, window_keep)
+
+    def _dispatch_weighted(
+        self,
+        kernel: jax.Array,
+        bn_offset: jax.Array,
+        images: jax.Array,
+        window_keep: np.ndarray | None = None,
+        *,
+        executable_for: Callable | None = None,
+        extra: tuple = (),
+        empty: Callable | None = None,
+    ) -> jax.Array:
+        """Shared padding / sharding / bucketing / accounting engine behind
+        every weighted call.
+
+        Hooks let :class:`CompiledModel` reuse the whole machinery with a
+        fused frontend+head executable: ``executable_for(m_bucket)`` builds
+        (or fetches) the jitted closure, ``extra`` is appended as traced call
+        arguments (head parameters) before the window mask, and
+        ``empty(b, h_o, w_o, c_o)`` produces the all-skipped short-circuit
+        result (exact-zero counts for the frontend; head-on-zeros logits for
+        a model).
+        """
+        executable_for = executable_for or self._executable
         spec = self.spec
         images = jnp.asarray(images, jnp.float32)
         want = (spec.image_h, spec.image_w, spec.in_channels)
@@ -272,26 +297,29 @@ class CompiledFrontend:
         if window_keep is None:
             images = self._shard_batch(images)
             self.stats.runs += 1
-            run = self._executable(None)
+            run = executable_for(None)
             self.stats.windows_executed += m_total
-            return run(images, kernel, bn_offset)[:b]
+            return run(images, kernel, bn_offset, *extra)[:b]
         n_keep = int(np.count_nonzero(window_keep))
         if n_keep == 0:
-            # all-skipped tick: the result is exact zeros by contract, so no
-            # kernel launches at all (0 executed windows in the stats); the
-            # sticky bucket still counts the tick as under-full so a stale
-            # large bucket shrinks on the first active tick after the lull
+            # all-skipped tick: the frontend result is exact zeros by
+            # contract, so no kernel launches at all (0 executed windows in
+            # the stats); the sticky bucket still counts the tick as
+            # under-full so a stale large bucket shrinks on the first active
+            # tick after the lull
             self.stats.launches_skipped += 1
             sticky = self._sticky.get(m_total)
             if sticky is not None:
                 sticky.observe_idle()
+            if empty is not None:
+                return empty(b, h_o, w_o, c_o)
             return jnp.zeros((b, h_o, w_o, c_o), jnp.float32)
         images = self._shard_batch(images)
         self.stats.runs += 1
         m_bucket = self._bucket_for(n_keep, m_total)
-        run = self._executable(m_bucket)
+        run = executable_for(m_bucket)
         self.stats.windows_executed += m_bucket
-        return run(images, kernel, bn_offset, jnp.asarray(window_keep))[:b]
+        return run(images, kernel, bn_offset, *extra, jnp.asarray(window_keep))[:b]
 
     def stream(
         self,
@@ -346,27 +374,46 @@ class CompiledFrontend:
                 kept_windows=entry["kept"],
                 total_windows=h_o * w_o,
                 config="__compiled__",
+                **self._stream_extra_results(entry),
             )
 
         inflight: _collections.deque[dict] = _collections.deque()
+        state: dict = {}   # per-ITERATOR stream state (e.g. the model's
+        #                    effective activation map) — two concurrent
+        #                    stream() iterators must never share it
         for frame in frames:
             frame = np.asarray(frame, np.float32)
             frame_idx = session.frame_idx
             block = session.step(frame)
             window = session.last_window_mask if gate is not None else None
             kept = int(window.sum()) if window is not None else h_o * w_o
-            counts = self.run_weighted(
-                self._require_weights(), self._bn, jnp.asarray(frame)[None],
-                None if window is None else window[None],
-            )
-            inflight.append(
-                {"frame_idx": frame_idx, "counts": counts,
-                 "block_mask": block, "kept": kept}
-            )
+            entry = {"frame_idx": frame_idx, "block_mask": block, "kept": kept}
+            entry.update(self._stream_launch(frame, window, state))
+            inflight.append(entry)
             while len(inflight) > depth:
                 yield _finalize(inflight.popleft())
         while inflight:
             yield _finalize(inflight.popleft())
+
+    def _stream_launch(
+        self, frame: np.ndarray, window: np.ndarray | None, state: dict
+    ) -> dict:
+        """Dispatch one stream tick (non-blocking); returns entry fields.
+
+        ``state`` is private to one ``stream()`` iterator.
+        :class:`CompiledModel` overrides this to patch kept-window
+        activations into the iterator's effective activation map and launch
+        the digital head on top.
+        """
+        counts = self.run_weighted(
+            self._require_weights(), self._bn, jnp.asarray(frame)[None],
+            None if window is None else window[None],
+        )
+        return {"counts": counts}
+
+    def _stream_extra_results(self, entry: dict) -> dict:
+        """Extra ``StreamFrameResult`` fields realised from a tick entry."""
+        return {}
 
     # -- internals -----------------------------------------------------------
     def _require_weights(self) -> jax.Array:
@@ -434,6 +481,242 @@ class CompiledFrontend:
         return m_bucket
 
 
+class CompiledModel(CompiledFrontend):
+    """An explicitly-held multi-layer model executable: analog frontend +
+    digital CNN head behind one handle.
+
+    Construct via :func:`compile` on an
+    :class:`repro.fpca.FPCAModelProgram`.  Everything the frontend handle
+    owns is reused — the shared bounded executable LRU, sticky region-skip
+    buckets, batch padding + mesh sharding, executed-window stats — but:
+
+    * :meth:`run` returns class **logits**: the head is fused into the same
+      jit as the frontend (one dispatch per batch), bit-identical to
+      composing a frontend handle with
+      :meth:`~repro.fpca.FPCAModelProgram.apply_head`;
+    * :meth:`reprogram` rewrites NVM planes AND/OR head parameters — both
+      enter every executable traced, so neither ever recompiles;
+    * :meth:`stream` is **skip-aware**: each delta-gated tick patches the
+      kept-window activations into the previous *effective activation map*
+      and runs the head on the patched map, so a stream of mostly-skipped
+      ticks still yields a class decision per tick (an all-skipped tick
+      reproduces the previous logits exactly).
+    """
+
+    def __init__(
+        self,
+        model_program: "FPCAModelProgram",
+        *,
+        head_params: Any | None = None,
+        **kw: Any,
+    ):
+        from repro.fpca.program import FPCAModelProgram
+
+        if not isinstance(model_program, FPCAModelProgram):
+            raise TypeError(
+                f"expected FPCAModelProgram, got {type(model_program)}"
+            )
+        super().__init__(model_program.frontend, **kw)
+        self.model_program = model_program
+        self._model_sig = model_program.signature()
+        self._head_params: Any | None = None
+        if head_params is not None:
+            self.reprogram(head_params=head_params)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n_classes(self) -> int:
+        return self.model_program.n_classes
+
+    @property
+    def head_params(self) -> Any | None:
+        """Currently programmed head parameters (None until programmed)."""
+        return self._head_params
+
+    def signature(self) -> tuple:
+        """The MODEL signature (extends the frontend's; golden-pinned)."""
+        return self._model_sig
+
+    def frontend_signature(self) -> tuple:
+        return self._sig
+
+    # -- programming ---------------------------------------------------------
+    def reprogram(
+        self,
+        kernel: Any | None = None,
+        bn_offset: Any | None = None,
+        *,
+        head_params: Any | None = None,
+    ) -> "CompiledModel":
+        """Rewrite NVM weight planes, BN offsets and/or the head pytree.
+
+        Any side may be updated alone (a ``bn_offset``-only rewrite reuses
+        the currently programmed kernel); everything enters every executable
+        traced, so — like the frontend contract — reprogramming never
+        recompiles (asserted via ``cache_info()`` in the test suite).
+        """
+        if kernel is None and bn_offset is None and head_params is None:
+            raise ValueError(
+                "reprogram needs kernel, bn_offset and/or head_params"
+            )
+        if kernel is not None:
+            super().reprogram(kernel, bn_offset)
+        elif bn_offset is not None:
+            super().reprogram(self._require_weights(), bn_offset)
+        if head_params is not None:
+            self._head_params = self.model_program.bind_head_params(head_params)
+            if kernel is None and bn_offset is None:
+                self.stats.reprograms += 1
+        return self
+
+    def _require_head(self) -> Any:
+        if self._head_params is None:
+            raise RuntimeError(
+                "no head parameters programmed: call "
+                "reprogram(head_params=...) first (or pass head_params= to "
+                "compile())"
+            )
+        return self._head_params
+
+    # -- execution -----------------------------------------------------------
+    def run_weighted(
+        self,
+        kernel: jax.Array,
+        bn_offset: jax.Array,
+        images: jax.Array,
+        window_keep: np.ndarray | None = None,
+        *,
+        head_params: Any | None = None,
+    ) -> jax.Array:
+        """One fused frontend+head call -> ``(b, n_classes)`` logits.
+
+        Routed through the same padding / sharding / sticky-bucket engine as
+        the frontend handle; the executable itself is the backend's
+        :meth:`~repro.fpca.Backend.make_model_executable` closure (ONE jit).
+        An all-skipped batch short-circuits the frontend launch and serves
+        the head on the exact-zero activation map instead.
+        """
+        hp = self._require_head() if head_params is None else head_params
+
+        def empty(b: int, h_o: int, w_o: int, c_o: int) -> jax.Array:
+            zeros = jnp.zeros((b, h_o, w_o, c_o), jnp.float32)
+            return self._head_executable()(hp, zeros)
+
+        return self._dispatch_weighted(
+            kernel, bn_offset, images, window_keep,
+            executable_for=lambda m: self._model_executable(m),
+            extra=(hp,),
+            empty=empty,
+        )
+
+    def run_frontend_weighted(
+        self,
+        kernel: jax.Array,
+        bn_offset: jax.Array,
+        images: jax.Array,
+        window_keep: np.ndarray | None = None,
+    ) -> jax.Array:
+        """The frontend stage alone (SS-ADC counts) — what the streaming
+        paths use before the skip-aware head patch.  Executables are keyed
+        by the FRONTEND signature, so they are shared with plain frontend
+        handles on the same cache."""
+        return self._dispatch_weighted(kernel, bn_offset, images, window_keep)
+
+    def head_logits(self, counts: Any, head_params: Any | None = None) -> jax.Array:
+        """Digital head on an explicit activation map (non-blocking)."""
+        hp = self._require_head() if head_params is None else head_params
+        return self._head_executable()(hp, jnp.asarray(counts, jnp.float32))
+
+    def patched_logits(
+        self,
+        counts: Any,
+        prev_eff: Any,
+        window_keep: Any,
+        head_params: Any | None = None,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Skip-aware head step: patch kept windows of ``counts`` into
+        ``prev_eff`` and run the head on the patched map.
+
+        Returns ``(logits, effective)`` — callers carry ``effective``
+        forward as the next tick's ``prev_eff``.  One jitted closure (shared
+        LRU), dispatched asynchronously.
+        """
+        hp = self._require_head() if head_params is None else head_params
+        return self._patch_executable()(
+            hp,
+            jnp.asarray(counts, jnp.float32),
+            jnp.asarray(prev_eff, jnp.float32),
+            jnp.asarray(window_keep),
+        )
+
+    # -- streaming -----------------------------------------------------------
+    def _stream_launch(
+        self, frame: np.ndarray, window: np.ndarray | None, state: dict
+    ) -> dict:
+        h_o, w_o = output_dims(self.spec)
+        counts = self.run_frontend_weighted(
+            self._require_weights(), self._bn, jnp.asarray(frame)[None],
+            None if window is None else window[None],
+        )
+        # the effective activation map lives in the ITERATOR's state, never
+        # on the handle: concurrent stream() iterators stay independent
+        prev = state.get("eff")
+        if prev is None:
+            prev = jnp.zeros((1, h_o, w_o, self.out_channels), jnp.float32)
+        keep = (
+            np.ones((1, h_o, w_o), bool) if window is None else window[None]
+        )
+        logits, eff = self.patched_logits(counts, prev, keep)
+        state["eff"] = eff
+        return {"counts": counts, "logits": logits}
+
+    def _stream_extra_results(self, entry: dict) -> dict:
+        return {"logits": np.asarray(entry["logits"])[0]}
+
+    # -- internals -----------------------------------------------------------
+    def _model_executable(self, m_bucket: int | None) -> Callable:
+        if m_bucket is not None and not self.backend.bucket_sensitive:
+            m_bucket = -1
+        key = self._model_sig + (self.backend.name, "model", m_bucket)
+
+        def build() -> Callable:
+            return self.backend.make_model_executable(
+                self.model_program,
+                self.model,
+                interpret=self.interpret,
+                m_bucket=m_bucket,
+            )
+
+        return self._cache.get(key, build)
+
+    def _head_executable(self) -> Callable:
+        key = self._model_sig + ("head",)
+        head = self.model_program.apply_head
+
+        def build() -> Callable:
+            @jax.jit
+            def run(head_params, counts):
+                return head(head_params, counts)
+
+            return run
+
+        return self._cache.get(key, build)
+
+    def _patch_executable(self) -> Callable:
+        key = self._model_sig + ("head-patch",)
+        head = self.model_program.apply_head
+
+        def build() -> Callable:
+            @jax.jit
+            def run(head_params, counts, prev_eff, window_keep):
+                eff = jnp.where(window_keep[..., None], counts, prev_eff)
+                return head(head_params, eff), eff
+
+            return run
+
+        return self._cache.get(key, build)
+
+
 def compile(  # noqa: A001  (torch.compile-style public name)
     program: FPCAProgram | FPCASpec,
     *,
@@ -441,6 +724,7 @@ def compile(  # noqa: A001  (torch.compile-style public name)
     mesh: jax.sharding.Mesh | None = None,
     weights: Any | None = None,
     bn_offset: Any | None = None,
+    head_params: Any | None = None,
     model: BucketCurvefitModel | None = None,
     cache: ExecutableCache | None = None,
     cache_capacity: int = 8,
@@ -449,9 +733,15 @@ def compile(  # noqa: A001  (torch.compile-style public name)
 ) -> CompiledFrontend:
     """Compile an :class:`FPCAProgram` into a held executable handle.
 
+    An :class:`repro.fpca.FPCAModelProgram` (frontend + digital CNN head)
+    compiles to a :class:`CompiledModel` whose ``.run()`` serves class
+    logits through ONE fused jit; ``head_params`` then programs the trained
+    head the way ``weights`` programs the NVM planes.
+
     Args:
       program: the validated program spec (a bare :class:`FPCASpec` is
-        wrapped in a default program for convenience).
+        wrapped in a default program for convenience; an
+        :class:`FPCAModelProgram` yields a :class:`CompiledModel`).
       backend: registered backend name (see
         :func:`repro.fpca.available_backends`) or a :class:`Backend`
         instance; ``None`` auto-selects by platform (Pallas on TPU, the XLA
@@ -470,17 +760,25 @@ def compile(  # noqa: A001  (torch.compile-style public name)
         (``1`` = stateless).
       interpret: forwarded to Pallas (default: interpret off-TPU).
     """
+    from repro.fpca.program import FPCAModelProgram
+
     if isinstance(program, FPCASpec):
         program = FPCAProgram(spec=program)
-    if not isinstance(program, FPCAProgram):
-        raise TypeError(f"expected FPCAProgram or FPCASpec, got {type(program)}")
+    is_model = isinstance(program, FPCAModelProgram)
+    if not is_model and not isinstance(program, FPCAProgram):
+        raise TypeError(
+            f"expected FPCAProgram, FPCAModelProgram or FPCASpec, "
+            f"got {type(program)}"
+        )
+    if head_params is not None and not is_model:
+        raise ValueError("head_params= needs an FPCAModelProgram")
+    frontend = program.frontend if is_model else program
     be = get_backend(backend if backend is not None else default_backend_name())
     if model is None:
         model = fit_bucket_model(
-            program.circuit, n_pixels=program.spec.n_active_pixels
+            frontend.circuit, n_pixels=frontend.spec.n_active_pixels
         )
-    handle = CompiledFrontend(
-        program,
+    common = dict(
         backend=be,
         model=model,
         mesh=mesh,
@@ -489,6 +787,12 @@ def compile(  # noqa: A001  (torch.compile-style public name)
         bucket_patience=bucket_patience,
         interpret=interpret,
     )
+    if is_model:
+        handle: CompiledFrontend = CompiledModel(
+            program, head_params=head_params, **common
+        )
+    else:
+        handle = CompiledFrontend(program, **common)
     if weights is not None:
         handle.reprogram(weights, bn_offset)
     return handle

@@ -43,11 +43,19 @@ __all__ = [
     "FPCAProgram",
     "ProgrammedConfig",
     "spec_signature",
+    # multi-layer model programs (frontend + digital CNN head)
+    "ConvSpec",
+    "PoolSpec",
+    "DenseSpec",
+    "ActivationSpec",
+    "FPCAModelProgram",
+    "ProgrammedModel",
 ]
 
 # Bump when the *meaning* of a signature field changes; appending new fields
 # keeps old-version tuples distinct by construction.
 _SIG_VERSION = "repro.fpca/1"
+_MODEL_SIG_VERSION = "repro.fpca.model/1"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,3 +270,369 @@ class ProgrammedConfig:
     @property
     def out_shape(self) -> tuple[int, int, int]:
         return self.program.out_shape
+
+
+# ---------------------------------------------------------------------------
+# Multi-layer model programs: analog frontend + digital CNN head
+# ---------------------------------------------------------------------------
+#
+# The paper's workload is never the frontend alone — it is a CNN whose FIRST
+# layer is the FPCA array (§1/§5, VWW-class classification).  A model program
+# promotes the spec from one layer to that whole network: the FPCAProgram
+# frontend stage plus a validated sequence of digital stages, compiled behind
+# the same `fpca.compile()` with the same split — layer *specs* are static to
+# the executable (they extend the signature), trained *parameters* enter
+# traced (reprogramming them never recompiles).
+
+_ACTIVATIONS = ("relu", "gelu", "silu", "tanh")
+
+
+def _check_activation(act: str | None) -> None:
+    if act is not None and act not in _ACTIVATIONS:
+        raise ValueError(
+            f"unknown activation {act!r}; available: {_ACTIVATIONS}"
+        )
+
+
+def _apply_activation(act: str | None, x):
+    import jax.nn
+    import jax.numpy as jnp
+
+    if act is None:
+        return x
+    return {
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+    }[act](x)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One digital convolution stage of a model head (NHWC, biased)."""
+
+    out_channels: int
+    kernel: int
+    stride: int = 1
+    padding: str = "VALID"          # "VALID" | "SAME"
+    activation: str | None = "relu"
+
+    def __post_init__(self) -> None:
+        if self.out_channels < 1 or self.kernel < 1 or self.stride < 1:
+            raise ValueError("conv out_channels/kernel/stride must be >= 1")
+        if self.padding not in ("VALID", "SAME"):
+            raise ValueError(f"padding must be VALID or SAME, got {self.padding!r}")
+        _check_activation(self.activation)
+
+    def _sig(self) -> tuple:
+        return ("conv", int(self.out_channels), int(self.kernel),
+                int(self.stride), self.padding, self.activation or "")
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Spatial pooling stage (``kind``: "max" | "avg")."""
+
+    size: int
+    stride: int | None = None       # None = size (non-overlapping)
+    kind: str = "max"
+
+    def __post_init__(self) -> None:
+        if self.size < 1 or (self.stride is not None and self.stride < 1):
+            raise ValueError("pool size/stride must be >= 1")
+        if self.kind not in ("max", "avg"):
+            raise ValueError(f"pool kind must be max or avg, got {self.kind!r}")
+
+    def _sig(self) -> tuple:
+        s = self.size if self.stride is None else self.stride
+        return ("pool", self.kind, int(self.size), int(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSpec:
+    """Fully-connected stage (flattens a spatial input); the final stage of
+    every head is a DenseSpec — its ``features`` are the class logits."""
+
+    features: int
+    activation: str | None = None
+
+    def __post_init__(self) -> None:
+        if self.features < 1:
+            raise ValueError("dense features must be >= 1")
+        _check_activation(self.activation)
+
+    def _sig(self) -> tuple:
+        return ("dense", int(self.features), self.activation or "")
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationSpec:
+    """A bare nonlinearity stage (for heads that separate it from conv/dense)."""
+
+    fn: str = "relu"
+
+    def __post_init__(self) -> None:
+        _check_activation(self.fn)
+
+    def _sig(self) -> tuple:
+        return ("act", self.fn)
+
+
+LayerSpec = ConvSpec | PoolSpec | DenseSpec | ActivationSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class FPCAModelProgram:
+    """One validated multi-layer model: FPCA frontend + digital CNN head.
+
+    * ``frontend``     — the analog first layer (:class:`FPCAProgram`);
+    * ``head``         — the digital stages applied to the frontend's SS-ADC
+      counts, in order (conv / pool / dense / activation specs).  The last
+      stage must be a :class:`DenseSpec` — its features are the class logits;
+    * ``input_scale``  — counts -> activation-unit scale applied before the
+      head (a trained network exports its digital gain calibration here,
+      ``adc.lsb * gain``); compiled into the executable, hence in the
+      signature.
+
+    The program/weights split is the frontend's, extended: layer specs are
+    static to the compiled executable (signature), trained parameters (NVM
+    planes AND head weights) enter traced — reprogramming either never
+    recompiles (:meth:`repro.fpca.CompiledModel.reprogram`).
+    """
+
+    frontend: FPCAProgram
+    head: tuple
+    input_scale: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.frontend, FPCAProgram):
+            raise TypeError("frontend must be an FPCAProgram")
+        object.__setattr__(self, "head", tuple(self.head))
+        if not self.head:
+            raise ValueError("model head needs at least one layer spec")
+        for layer in self.head:
+            if not isinstance(layer, (ConvSpec, PoolSpec, DenseSpec, ActivationSpec)):
+                raise TypeError(f"unknown head layer spec {layer!r}")
+        if not isinstance(self.head[-1], DenseSpec):
+            raise ValueError(
+                "the last head stage must be a DenseSpec (the class logits)"
+            )
+        if not float(self.input_scale) > 0.0:
+            raise ValueError("input_scale must be > 0")
+        self.head_shapes()   # validates the layer geometry chains
+
+    # -- derived geometry ----------------------------------------------------
+    def head_shapes(self) -> list[tuple[int, ...]]:
+        """Output shape after each head stage (index 0 = frontend output)."""
+        shapes: list[tuple[int, ...]] = [self.frontend.out_shape]
+        for i, layer in enumerate(self.head):
+            cur = shapes[-1]
+            if isinstance(layer, ConvSpec):
+                if len(cur) != 3:
+                    raise ValueError(
+                        f"head[{i}]: conv needs a spatial (h, w, c) input, "
+                        f"got shape {cur}"
+                    )
+                h, w, _ = cur
+                if layer.padding == "SAME":
+                    h_o = -(-h // layer.stride)
+                    w_o = -(-w // layer.stride)
+                else:
+                    if layer.kernel > h or layer.kernel > w:
+                        raise ValueError(
+                            f"head[{i}]: conv kernel {layer.kernel} exceeds "
+                            f"input {h}x{w}"
+                        )
+                    h_o = (h - layer.kernel) // layer.stride + 1
+                    w_o = (w - layer.kernel) // layer.stride + 1
+                shapes.append((h_o, w_o, layer.out_channels))
+            elif isinstance(layer, PoolSpec):
+                if len(cur) != 3:
+                    raise ValueError(
+                        f"head[{i}]: pool needs a spatial (h, w, c) input, "
+                        f"got shape {cur}"
+                    )
+                h, w, c = cur
+                if layer.size > h or layer.size > w:
+                    raise ValueError(
+                        f"head[{i}]: pool size {layer.size} exceeds input "
+                        f"{h}x{w}"
+                    )
+                s = layer.size if layer.stride is None else layer.stride
+                shapes.append(((h - layer.size) // s + 1,
+                               (w - layer.size) // s + 1, c))
+            elif isinstance(layer, DenseSpec):
+                shapes.append((layer.features,))
+            else:                       # ActivationSpec: shape-preserving
+                shapes.append(cur)
+        return shapes
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.head[-1].features)
+
+    @property
+    def spec(self) -> FPCASpec:
+        return self.frontend.spec
+
+    @property
+    def out_channels(self) -> int:
+        return int(self.frontend.out_channels)
+
+    # -- parameters ----------------------------------------------------------
+    def init_head(self, key: jax.Array) -> list[dict]:
+        """Fresh head parameters: one dict per stage (``{}`` for
+        parameterless pool/activation stages) — the pytree
+        :meth:`apply_head` consumes and :class:`ProgrammedModel` binds."""
+        from repro.models.layers import init_conv2d, init_linear
+
+        params: list[dict] = []
+        shapes = self.head_shapes()
+        keys = jax.random.split(key, len(self.head))
+        for i, layer in enumerate(self.head):
+            cur = shapes[i]
+            if isinstance(layer, ConvSpec):
+                params.append(
+                    init_conv2d(keys[i], cur[-1], layer.out_channels, layer.kernel)
+                )
+            elif isinstance(layer, DenseSpec):
+                d_in = 1
+                for d in cur:
+                    d_in *= int(d)
+                params.append(init_linear(keys[i], d_in, layer.features))
+            else:
+                params.append({})
+        return params
+
+    def bind_head_params(self, params: Any) -> list[dict]:
+        """Validate + coerce a head parameter pytree for serving (one f32
+        dict per stage) — the single binding path used by
+        :meth:`repro.fpca.CompiledModel.reprogram` and
+        :meth:`repro.serving.FPCAPipeline.register`, so a stage-count or
+        weight-shape mismatch fails at the call site, not inside a jitted
+        trace."""
+        import jax.numpy as jnp
+
+        bound = [
+            jax.tree_util.tree_map(lambda a: jnp.asarray(a, jnp.float32), dict(p))
+            for p in params
+        ]
+        if len(bound) != len(self.head):
+            raise ValueError(
+                f"head has {len(self.head)} stages but got {len(bound)} "
+                f"parameter entries"
+            )
+        shapes = self.head_shapes()
+        for i, (layer, p) in enumerate(zip(self.head, bound)):
+            cur = shapes[i]
+            if isinstance(layer, ConvSpec):
+                want = {"w": (layer.out_channels, layer.kernel, layer.kernel,
+                              cur[-1]),
+                        "b": (layer.out_channels,)}
+            elif isinstance(layer, DenseSpec):
+                d_in = 1
+                for d in cur:
+                    d_in *= int(d)
+                want = {"w": (d_in, layer.features), "b": (layer.features,)}
+            else:
+                want = {}
+            got = {k: tuple(v.shape) for k, v in p.items()}
+            if got != want:
+                raise ValueError(
+                    f"head[{i}] ({type(layer).__name__}): parameter shapes "
+                    f"{got} do not match expected {want}"
+                )
+        return bound
+
+    def apply_head(self, params, counts):
+        """The reference head: SS-ADC counts ``(b, h_o, w_o, c_o)`` ->
+        logits ``(b, n_classes)``, pure jnp ops (:mod:`repro.models.layers`).
+
+        This function IS the numerics contract: the fused executable
+        (:meth:`repro.fpca.CompiledModel.run`) traces exactly these ops after
+        the frontend, so its logits are bit-identical to composing a
+        frontend handle with this apply.
+        """
+        import jax.numpy as jnp
+
+        from repro.models.layers import avg_pool2d, conv2d, linear, max_pool2d
+
+        if len(params) != len(self.head):
+            raise ValueError(
+                f"head has {len(self.head)} stages but got {len(params)} "
+                f"parameter entries"
+            )
+        x = jnp.asarray(counts, jnp.float32) * jnp.float32(self.input_scale)
+        for layer, p in zip(self.head, params):
+            if isinstance(layer, ConvSpec):
+                x = _apply_activation(
+                    layer.activation, conv2d(p, x, layer.stride, layer.padding)
+                )
+            elif isinstance(layer, PoolSpec):
+                pool = max_pool2d if layer.kind == "max" else avg_pool2d
+                x = pool(x, layer.size, layer.stride)
+            elif isinstance(layer, DenseSpec):
+                if x.ndim > 2:
+                    x = x.reshape(x.shape[0], -1)
+                x = _apply_activation(layer.activation, linear(p, x))
+            else:
+                x = _apply_activation(layer.fn, x)
+        return x
+
+    # -- identity ------------------------------------------------------------
+    def signature(self) -> tuple:
+        """Stable model compile signature: a versioned primitive tuple
+        extending the frontend's (golden-pinned in
+        ``tests/test_fpca_model.py``).  Head *specs* and ``input_scale`` are
+        compiled in; head *parameters* (like NVM weights) are runtime state
+        and excluded — reprogramming them never recompiles."""
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            sig = (
+                (_MODEL_SIG_VERSION,)
+                + self.frontend.signature()
+                + (
+                    ("head",) + tuple(layer._sig() for layer in self.head),
+                    ("input_scale", float(self.input_scale)),
+                )
+            )
+            object.__setattr__(self, "_signature", sig)
+        return sig
+
+    def replace(self, **kw: Any) -> "FPCAModelProgram":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgrammedModel:
+    """A model program bound to its trained parameters — NVM planes for the
+    analog frontend plus the head weight pytree, the way
+    :class:`ProgrammedConfig` binds a frontend program to NVM weights.
+
+    Registered into :class:`repro.serving.FPCAPipeline` under ``name``;
+    ``program`` exposes the *frontend* program so every spec-bucketing /
+    channel-stacking path treats a model config exactly like a frontend one.
+    """
+
+    name: str
+    model: FPCAModelProgram
+    kernel: jax.Array               # (c_o, k, k, c_i) float NVM weights
+    bn_offset: jax.Array            # (c_o,) counts
+    head_params: Any                # pytree matching model.init_head()
+
+    @property
+    def program(self) -> FPCAProgram:
+        return self.model.frontend
+
+    @property
+    def spec(self) -> FPCASpec:
+        return self.model.frontend.spec
+
+    @property
+    def out_channels(self) -> int:
+        return int(self.model.frontend.out_channels)
+
+    @property
+    def out_shape(self) -> tuple[int, int, int]:
+        return self.model.frontend.out_shape

@@ -30,6 +30,12 @@ __all__ = [
     "unembed",
     "rope",
     "cross_entropy_loss",
+    "init_conv2d",
+    "conv2d",
+    "init_linear",
+    "linear",
+    "max_pool2d",
+    "avg_pool2d",
 ]
 
 
@@ -129,6 +135,67 @@ def unembed(params: dict, x: jax.Array) -> jax.Array:
     """
     table = maybe_shard(params["table"], "model", None)
     return (x @ table.T.astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Small-CNN building blocks (the digital head behind an FPCA frontend).
+#
+# NHWC layout, f32 by default: these serve the extreme-edge classifier heads
+# (repro.fpca.FPCAModelProgram), where numerics-exactness against a reference
+# composition matters more than bf16 throughput.
+# ---------------------------------------------------------------------------
+
+
+def init_conv2d(
+    key: jax.Array, c_in: int, c_out: int, kernel: int, dtype=jnp.float32
+) -> dict:
+    """Biased conv params: ``w`` is ``(c_out, k, k, c_in)`` (FPCA kernel
+    layout, so frontend and head convolutions read the same way)."""
+    fan_in = kernel * kernel * c_in
+    w = jax.random.normal(key, (c_out, kernel, kernel, c_in)) * fan_in ** -0.5
+    return {"w": w.astype(dtype), "b": jnp.zeros((c_out,), dtype)}
+
+
+def conv2d(
+    params: dict, x: jax.Array, stride: int = 1, padding: str = "VALID"
+) -> jax.Array:
+    """NHWC convolution with bias; ``padding`` is ``"VALID"`` or ``"SAME"``."""
+    out = jax.lax.conv_general_dilated(
+        x.transpose(0, 3, 1, 2),
+        params["w"].transpose(0, 3, 1, 2),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ).transpose(0, 2, 3, 1)
+    return out + params["b"]
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32) -> dict:
+    """Biased dense params (``init_dense`` is the bias-free LM variant)."""
+    w = jax.random.normal(key, (d_in, d_out)) * d_in ** -0.5
+    return {"w": w.astype(dtype), "b": jnp.zeros((d_out,), dtype)}
+
+
+def linear(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]
+
+
+def _pool(x: jax.Array, size: int, stride: int | None, init, op) -> jax.Array:
+    s = size if stride is None else stride
+    return jax.lax.reduce_window(
+        x, init, op,
+        window_dimensions=(1, size, size, 1),
+        window_strides=(1, s, s, 1),
+        padding="VALID",
+    )
+
+
+def max_pool2d(x: jax.Array, size: int, stride: int | None = None) -> jax.Array:
+    return _pool(x, size, stride, -jnp.inf, jax.lax.max)
+
+
+def avg_pool2d(x: jax.Array, size: int, stride: int | None = None) -> jax.Array:
+    return _pool(x, size, stride, 0.0, jax.lax.add) / float(size * size)
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:

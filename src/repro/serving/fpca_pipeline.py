@@ -54,8 +54,14 @@ from repro.core.device_models import CircuitParams
 from repro.core.fpca_sim import WeightEncoding
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
 from repro.fpca.cache import ExecutableCache
-from repro.fpca.executable import CompiledFrontend
-from repro.fpca.program import FPCAProgram, ProgrammedConfig, spec_signature
+from repro.fpca.executable import CompiledFrontend, CompiledModel
+from repro.fpca.program import (
+    FPCAModelProgram,
+    FPCAProgram,
+    ProgrammedConfig,
+    ProgrammedModel,
+    spec_signature,
+)
 
 __all__ = [
     "FrontendRequest",
@@ -179,7 +185,7 @@ class FPCAPipeline:
             for k, v in model.items():
                 key = k if isinstance(k, tuple) else (default_circuit, k)
                 self._models[key] = v
-        self._configs: dict[str, ProgrammedConfig] = {}
+        self._configs: dict[str, ProgrammedConfig | ProgrammedModel] = {}
         # one CompiledFrontend per compile signature, all sharing one bounded
         # executable cache — reprogramming weights never recompiles, and the
         # total live-executable count stays bounded across configurations
@@ -196,18 +202,50 @@ class FPCAPipeline:
     def register(
         self,
         name: str,
-        spec: FPCASpec | FPCAProgram,
+        spec: FPCASpec | FPCAProgram | FPCAModelProgram,
         kernel: jax.Array,
         bn_offset: jax.Array | None = None,
-    ) -> ProgrammedConfig:
+        *,
+        head_params: Any | None = None,
+    ) -> ProgrammedConfig | ProgrammedModel:
         """Program one FPCA configuration (idempotent per unique name).
 
         ``spec`` may be a bare :class:`FPCASpec` (wrapped into a program with
-        this pipeline's adc/enc) or a full :class:`repro.fpca.FPCAProgram`.
+        this pipeline's adc/enc), a full :class:`repro.fpca.FPCAProgram`, or
+        an :class:`repro.fpca.FPCAModelProgram` — a whole model (frontend +
+        digital CNN head) whose trained ``head_params`` bind here the way the
+        NVM ``kernel`` does.  Model configurations serve class *logits*
+        through :meth:`serve`, stack channels with frontend configurations
+        that share a compile signature, and get the skip-aware per-tick head
+        in :class:`repro.serving.StreamServer`.
         """
         if name in self._configs:
             raise ValueError(f"config {name!r} already registered")
         c_o = int(kernel.shape[0])
+        if isinstance(spec, FPCAModelProgram):
+            if int(spec.out_channels) != c_o:
+                raise ValueError(
+                    f"kernel has {c_o} output channels; model program for "
+                    f"{name!r} specifies {spec.out_channels}"
+                )
+            if head_params is None:
+                raise ValueError(
+                    f"model program {name!r} needs head_params= (the trained "
+                    f"head pytree; see FPCAModelProgram.init_head)"
+                )
+            if bn_offset is None:
+                bn_offset = jnp.zeros((c_o,), jnp.float32)
+            mcfg = ProgrammedModel(
+                name=name,
+                model=spec,
+                kernel=jnp.asarray(kernel, jnp.float32),
+                bn_offset=jnp.asarray(bn_offset, jnp.float32),
+                head_params=spec.bind_head_params(head_params),
+            )
+            self._configs[name] = mcfg
+            return mcfg
+        if head_params is not None:
+            raise ValueError("head_params= needs an FPCAModelProgram")
         if isinstance(spec, FPCAProgram):
             if int(spec.out_channels) != c_o:
                 raise ValueError(
@@ -280,6 +318,27 @@ class FPCAPipeline:
             self._handles[key] = handle
         return handle
 
+    def model_handle_for(self, model: FPCAModelProgram) -> CompiledModel:
+        """The shared :class:`repro.fpca.CompiledModel` serving one model
+        compile signature (lazily created, same dict as the frontend
+        handles — model signatures extend frontend ones so the key spaces
+        are disjoint by construction).  Handles hold no parameters; every
+        call supplies the programmed NVM planes and head pytree."""
+        key = model.signature()
+        handle = self._handles.get(key)
+        if handle is None:
+            handle = CompiledModel(
+                model,
+                backend=self._backend,
+                model=self._model_for(model.frontend),
+                mesh=self.mesh,
+                cache=self._cache,
+                bucket_patience=self.bucket_patience,
+                interpret=self.interpret,
+            )
+            self._handles[key] = handle
+        return handle  # type: ignore[return-value]
+
     def reset_bucket_state(self) -> None:
         """Forget all sticky row-bucket state (counters in ``stats`` remain).
 
@@ -308,16 +367,30 @@ class FPCAPipeline:
         bn_offset: jax.Array,
         images: jax.Array,
         window_keep: np.ndarray | None = None,
+        *,
+        handle: CompiledFrontend | None = None,
+        head_params: Any | None = None,
     ) -> jax.Array:
-        """One fused handle call, with its counters mirrored into ``stats``."""
-        handle = self.handle_for(program, int(kernel.shape[0]))
+        """One fused handle call, with its counters mirrored into ``stats``.
+
+        With an explicit :class:`CompiledModel` ``handle`` (and its
+        ``head_params``), the call serves class logits through the fused
+        frontend+head executable instead of SS-ADC counts.
+        """
+        if handle is None:
+            handle = self.handle_for(program, int(kernel.shape[0]))
         hs = handle.stats
         before = (
             hs.runs, hs.windows_total, hs.windows_executed,
             hs.launches_skipped, hs.bucket_switches, hs.bucket_shrinks_deferred,
         )
         cbefore = self._cache.counters()
-        counts = handle.run_weighted(kernel, bn_offset, images, window_keep)
+        if head_params is not None:
+            counts = handle.run_weighted(
+                kernel, bn_offset, images, window_keep, head_params=head_params
+            )
+        else:
+            counts = handle.run_weighted(kernel, bn_offset, images, window_keep)
         self.stats.batches += hs.runs - before[0]
         self.stats.windows_total += hs.windows_total - before[1]
         self.stats.windows_executed += hs.windows_executed - before[2]
@@ -463,7 +536,10 @@ class FPCAPipeline:
     def serve(self, requests: Sequence[FrontendRequest]) -> list[jax.Array]:
         """Serve a heterogeneous request mix; results in request order.
 
-        Returns one SS-ADC count map ``(h_o, w_o, c_o)`` per request.
+        Returns one SS-ADC count map ``(h_o, w_o, c_o)`` per request — or,
+        for requests naming a **model** configuration
+        (:class:`repro.fpca.ProgrammedModel`), the ``(n_classes,)`` class
+        logits of the fused frontend+head executable.
         """
         results: list[jax.Array | None] = [None] * len(requests)
         groups = self.group_requests(requests)
@@ -508,9 +584,17 @@ class FPCAPipeline:
             [jnp.asarray(requests[i].image, jnp.float32) for i in idxs]
         )
         window_keep = self._group_window_keep(cfg, [requests[i] for i in idxs])
-        counts = self._run_batch(
-            cfg.program, cfg.kernel, cfg.bn_offset, images, window_keep
-        )
+        if isinstance(cfg, ProgrammedModel):
+            # whole-model config: ONE fused frontend+head jit -> logits
+            counts = self._run_batch(
+                cfg.program, cfg.kernel, cfg.bn_offset, images, window_keep,
+                handle=self.model_handle_for(cfg.model),
+                head_params=cfg.head_params,
+            )
+        else:
+            counts = self._run_batch(
+                cfg.program, cfg.kernel, cfg.bn_offset, images, window_keep
+            )
         for j, i in enumerate(idxs):
             results[i] = counts[j]
 
@@ -523,7 +607,14 @@ class FPCAPipeline:
     ) -> None:
         """Cross-config batching: configs sharing a compile signature run as
         ONE call with their NVM weight planes stacked along the channel axis;
-        each request's counts are sliced from its config's channel range."""
+        each request's counts are sliced from its config's channel range.
+
+        Model configurations stack exactly like frontend ones (the stacked
+        launch serves the shared analog epilogue); their digital heads then
+        run per config on the sliced channel range — each request of a model
+        config resolves to class logits, bit-identical to serving that
+        config alone.
+        """
         cfgs = [self._configs[n] for n in names]
         for name in names:
             self._check_geometry(name, requests, groups[name])
@@ -539,8 +630,19 @@ class FPCAPipeline:
         self.stats.merged_groups += 1
         offsets = np.cumsum([0] + [int(c.kernel.shape[0]) for c in cfgs])
         row = 0
-        for g, name in enumerate(names):
+        for g, (name, cfg) in enumerate(zip(names, cfgs)):
             lo, hi = int(offsets[g]), int(offsets[g + 1])
-            for i in groups[name]:
-                results[i] = counts[row, ..., lo:hi]
-                row += 1
+            rows = groups[name]
+            if isinstance(cfg, ProgrammedModel):
+                handle = self.model_handle_for(cfg.model)
+                logits = handle.head_logits(
+                    counts[row : row + len(rows), ..., lo:hi],
+                    head_params=cfg.head_params,
+                )
+                for j, i in enumerate(rows):
+                    results[i] = logits[j]
+                row += len(rows)
+            else:
+                for i in rows:
+                    results[i] = counts[row, ..., lo:hi]
+                    row += 1

@@ -70,10 +70,15 @@ import dataclasses
 import math
 from typing import Any, Iterable, Iterator, Mapping, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import analysis, mapping
-from repro.fpca.program import DeltaGateConfig, GateControllerConfig
+from repro.fpca.program import (
+    DeltaGateConfig,
+    GateControllerConfig,
+    ProgrammedModel,
+)
 from repro.serving.control import GateController
 from repro.serving.fpca_pipeline import FPCAPipeline
 
@@ -246,6 +251,10 @@ class StreamSession:
         bh = math.ceil(spec.eff_h / spec.skip_block)
         bw = math.ceil(spec.eff_w / spec.skip_block)
         self.last_window_mask: np.ndarray | None = None
+        # per-config effective activation map (model configs only): the
+        # running frontend output with each tick's kept windows patched in —
+        # what the skip-aware digital head classifies
+        self._eff: dict[str, Any] = {}
 
         def _pick(mapping_or_one: Any, name: str, kind: str) -> Any:
             if isinstance(mapping_or_one, Mapping):
@@ -392,6 +401,14 @@ class StreamFrameResult:
     yields one per fanned-out configuration (same ``frame_idx``; per-config
     ``counts``, and per-config ``block_mask`` / ``kept_windows`` when the
     stream uses per-config gates), distinguished by ``config``.
+
+    Streams attached to a **model** configuration
+    (:class:`repro.fpca.ProgrammedModel`) also carry per-tick class
+    ``logits``: the skip-aware head path patches this tick's kept-window
+    activations into the stream's previous effective activation map and runs
+    the digital head on the patched map, so even a mostly-skipped tick
+    yields a class decision (an all-skipped tick reproduces the previous
+    logits exactly).
     """
 
     stream_id: str
@@ -401,10 +418,15 @@ class StreamFrameResult:
     kept_windows: int
     total_windows: int
     config: str = ""                # configuration these counts belong to
+    logits: np.ndarray | None = None  # (n_classes,) — model configs only
 
     @property
     def kept_fraction(self) -> float:
         return self.kept_windows / max(self.total_windows, 1)
+
+    @property
+    def predicted_class(self) -> int | None:
+        return None if self.logits is None else int(np.argmax(self.logits))
 
 
 @dataclasses.dataclass
@@ -626,11 +648,55 @@ class StreamServer:
                 if len(configs) > 1
                 else [(configs[0], None, None)]
             )
-            launches.append({"counts": counts, "entries": entries, "slices": slices})
+            launch = {"counts": counts, "entries": entries, "slices": slices}
+            self._model_head_pass(launch, members, h_o, w_o)
+            launches.append(launch)
         self.stats.bucket_switches += pstats.bucket_switches - before[0]
         self.stats.bucket_shrinks_deferred += pstats.bucket_shrinks_deferred - before[1]
         self.stats.launches_skipped += pstats.launches_skipped - before[2]
         return launches
+
+    def _model_head_pass(
+        self, launch: dict, members: list, h_o: int, w_o: int
+    ) -> None:
+        """Skip-aware digital head for model configurations of one group.
+
+        For every :class:`repro.fpca.ProgrammedModel` slice of the fused
+        launch: patch each member stream's kept windows into its previous
+        effective activation map (per-config masks when the stream gates per
+        config) and dispatch the head on the patched maps — ONE batched,
+        non-blocking call per model config, so the double-buffered overlap
+        is preserved.  An all-skipped tick patches nothing and reproduces
+        the previous logits exactly.
+        """
+        counts = launch["counts"]
+        logits_by_config: dict[str, Any] = {}
+        for name, lo, hi in launch["slices"]:
+            cfg = self.pipeline._configs[name]
+            if not isinstance(cfg, ProgrammedModel):
+                continue
+            handle = self.pipeline.model_handle_for(cfg.model)
+            sliced = counts if lo is None else counts[..., lo:hi]
+            prevs, keeps = [], []
+            for session, _ in members:
+                prev = session._eff.get(name)
+                if prev is None:
+                    prev = jnp.zeros((h_o, w_o, cfg.out_channels), jnp.float32)
+                prevs.append(prev)
+                st = session.state_for(name)
+                if session.gating and st is not None and st.last_window_mask is not None:
+                    keeps.append(st.last_window_mask)
+                else:
+                    keeps.append(np.ones((h_o, w_o), bool))
+            logits, eff = handle.patched_logits(
+                sliced, jnp.stack(prevs), np.stack(keeps),
+                head_params=cfg.head_params,
+            )
+            for row, (session, _) in enumerate(members):
+                session._eff[name] = eff[row]
+            logits_by_config[name] = logits
+        if logits_by_config:
+            launch["logits"] = logits_by_config
 
     def _finalize(self, launches: list[dict]) -> list[StreamFrameResult]:
         """Device side of one tick: realise the batch (blocks) and unpack.
@@ -642,6 +708,10 @@ class StreamServer:
         results: list[StreamFrameResult] = []
         for launch in launches:
             counts = np.asarray(launch["counts"])     # blocks until ready
+            logits_np = {
+                name: np.asarray(lg)
+                for name, lg in launch.get("logits", {}).items()
+            }
             for row, e in enumerate(launch["entries"]):
                 per_config = e.get("per_config")
                 for name, lo, hi in launch["slices"]:
@@ -652,6 +722,7 @@ class StreamServer:
                     if per_config is not None and name in per_config:
                         block, kept, window = per_config[name]
                         sliced = sliced * window[..., None].astype(sliced.dtype)
+                    lg = logits_np.get(name)
                     results.append(
                         StreamFrameResult(
                             stream_id=e["stream_id"],
@@ -661,6 +732,7 @@ class StreamServer:
                             kept_windows=kept,
                             total_windows=e["total"],
                             config=name,
+                            logits=None if lg is None else lg[row],
                         )
                     )
         return results

@@ -1,0 +1,623 @@
+"""Multi-layer model programs: analog frontend + digital CNN head behind
+one ``fpca.compile()``.
+
+Contracts pinned here:
+
+* **Spec validation** — head layer chains are checked at construction
+  (geometry, final-logits stage, activations).
+* **Fused-jit parity** — ``compile(FPCAModelProgram).run()`` logits are
+  bit-identical to composing a frontend handle with the reference
+  ``apply_head``, for every registered backend, dense and masked (including
+  zero-kept and bucket-edge ``n_keep``).
+* **Zero-recompile reprogram** — NVM planes AND head parameters enter
+  traced; rewriting either never recompiles (via ``cache_info()``).
+* **Signature stability** — the model signature is a golden-pinned
+  versioned primitive tuple extending the frontend's; head *specs* and
+  ``input_scale`` are compiled in, head *parameters* are excluded.
+* **Skip-aware streaming** — delta-gated ticks patch kept windows into the
+  previous effective activation map, so every tick yields class logits (an
+  all-skipped tick reproduces the previous logits exactly), on the handle's
+  ``stream()`` and through ``FPCAPipeline`` / ``StreamServer``.
+* **Accounting** — ``analysis.head_flops`` / ``model_streaming_report``
+  report the digital head next to the executed-window stats.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.fpca as fpca
+from repro.core import analysis
+from repro.core.mapping import FPCASpec, output_dims
+
+H = W = 24
+
+
+def _spec(kernel: int = 5, stride: int = 5, c_o: int = 4) -> FPCASpec:
+    return FPCASpec(
+        image_h=H, image_w=W, out_channels=c_o, kernel=kernel, stride=stride
+    )
+
+
+def _head() -> tuple:
+    return (fpca.DenseSpec(8, activation="relu"), fpca.DenseSpec(3))
+
+
+def _model(spec: FPCASpec | None = None, head: tuple | None = None,
+           **kw) -> fpca.FPCAModelProgram:
+    return fpca.FPCAModelProgram(
+        frontend=fpca.FPCAProgram(spec=spec or _spec()),
+        head=head or _head(),
+        **kw,
+    )
+
+
+def _data(spec: FPCASpec, batch: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    images = rng.uniform(0, 1, (batch, H, W, spec.in_channels)).astype(np.float32)
+    k = spec.kernel
+    kernel = (
+        rng.normal(size=(spec.out_channels, k, k, spec.in_channels)) * 0.2
+    ).astype(np.float32)
+    return images, kernel
+
+
+def _mask_with_keep(b: int, h_o: int, w_o: int, n_keep: int) -> np.ndarray:
+    """A (b, h_o, w_o) window mask keeping exactly ``n_keep`` windows."""
+    flat = np.zeros(b * h_o * w_o, bool)
+    flat[:n_keep] = True
+    return flat.reshape(b, h_o, w_o)
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_model_program_validates_head():
+    fe = fpca.FPCAProgram(spec=_spec())
+    with pytest.raises(ValueError, match="at least one layer"):
+        fpca.FPCAModelProgram(frontend=fe, head=())
+    with pytest.raises(ValueError, match="last head stage"):
+        fpca.FPCAModelProgram(frontend=fe, head=(fpca.ActivationSpec("relu"),))
+    # frontend output is (4, 4, c): a 5x5 VALID conv cannot fit
+    with pytest.raises(ValueError, match="conv kernel"):
+        fpca.FPCAModelProgram(
+            frontend=fe, head=(fpca.ConvSpec(4, 5), fpca.DenseSpec(2))
+        )
+    with pytest.raises(ValueError, match="pool size"):
+        fpca.FPCAModelProgram(
+            frontend=fe, head=(fpca.PoolSpec(8), fpca.DenseSpec(2))
+        )
+    with pytest.raises(ValueError, match="unknown activation"):
+        fpca.DenseSpec(4, activation="softmax3")
+    with pytest.raises(ValueError, match="input_scale"):
+        fpca.FPCAModelProgram(frontend=fe, head=_head(), input_scale=0.0)
+    # conv/pool after a dense (flat) input cannot chain
+    with pytest.raises(ValueError, match="spatial"):
+        fpca.FPCAModelProgram(
+            frontend=fe,
+            head=(fpca.DenseSpec(8), fpca.ConvSpec(2, 1), fpca.DenseSpec(2)),
+        )
+
+
+def test_model_head_shapes_chain():
+    model = _model(head=(
+        fpca.ConvSpec(6, 3, activation="relu"),
+        fpca.PoolSpec(2),
+        fpca.DenseSpec(5, activation="relu"),
+        fpca.DenseSpec(2),
+    ))
+    assert model.head_shapes() == [(4, 4, 4), (2, 2, 6), (1, 1, 6), (5,), (2,)]
+    assert model.n_classes == 2
+
+
+def test_init_head_matches_apply(bucket_model):
+    model = _model(head=(
+        fpca.ConvSpec(6, 3, activation="relu"),
+        fpca.PoolSpec(2, kind="avg"),
+        fpca.ActivationSpec("tanh"),
+        fpca.DenseSpec(2),
+    ))
+    params = model.init_head(jax.random.PRNGKey(0))
+    assert len(params) == len(model.head)
+    assert params[1] == {} and params[2] == {}          # parameterless stages
+    counts = np.random.default_rng(0).uniform(
+        0, 255, (3, *model.frontend.out_shape)
+    ).astype(np.float32)
+    logits = np.asarray(model.apply_head(params, counts))
+    assert logits.shape == (3, 2)
+    assert np.all(np.isfinite(logits))
+
+
+# ---------------------------------------------------------------------------
+# signature stability (golden)
+# ---------------------------------------------------------------------------
+
+GOLDEN_FRONTEND_SIG = (
+    "repro.fpca/1",
+    ("spec", 24, 24, 4, 3, 2, 5, 3, 0, 1, 8),
+    ("out_channels", 4),
+    ("adc", 8, 1.0),
+    ("enc", 16, 1.0),
+    ("circuit", ("v_sat", 1.0), ("s0", 0.37), ("drive_a", 0.15),
+     ("drive_b", -0.1), ("drive_c", 0.25), ("coupling", 0.15),
+     ("kappa_r", 0.012), ("r_metal_mm", 0.0), ("fp_iters", 8.0)),
+)
+
+GOLDEN_MODEL_SIG = (
+    ("repro.fpca.model/1",)
+    + GOLDEN_FRONTEND_SIG
+    + (
+        ("head", ("dense", 8, "relu"), ("dense", 3, "")),
+        ("input_scale", 1.0),
+    )
+)
+
+
+def test_model_signature_golden():
+    """Exact pinned value: the model signature is the executable-cache key
+    contract — change it only by bumping the version string deliberately."""
+    spec = FPCASpec(image_h=24, image_w=24, out_channels=4, kernel=3, stride=2)
+    model = fpca.FPCAModelProgram(
+        frontend=fpca.FPCAProgram(spec=spec), head=_head()
+    )
+    assert model.signature() == GOLDEN_MODEL_SIG
+    # and it extends the frontend's signature verbatim
+    assert model.frontend.signature() == GOLDEN_FRONTEND_SIG
+    assert model.signature()[1 : 1 + len(GOLDEN_FRONTEND_SIG)] == GOLDEN_FRONTEND_SIG
+
+
+def test_model_signature_static_vs_runtime():
+    base = _model()
+    # head parameters / gates are runtime state: same signature
+    gated = fpca.FPCAModelProgram(
+        frontend=fpca.FPCAProgram(
+            spec=_spec(), gate=fpca.DeltaGateConfig(threshold=0.5)
+        ),
+        head=_head(),
+    )
+    assert base.signature() == gated.signature()
+    # anything compiled-in changes it: head specs, input_scale, frontend adc
+    assert base.signature() != _model(
+        head=(fpca.DenseSpec(8, activation="relu"), fpca.DenseSpec(4))
+    ).signature()
+    assert base.signature() != _model(input_scale=0.5).signature()
+    assert base.signature() != fpca.FPCAModelProgram(
+        frontend=fpca.FPCAProgram(spec=_spec(), adc=fpca.ADCConfig(bits=4)),
+        head=_head(),
+    ).signature()
+
+
+# ---------------------------------------------------------------------------
+# fused-jit parity (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["reference", "basis", "pallas"])
+def test_model_logits_match_frontend_plus_head(bucket_model, backend):
+    """Fused frontend+head logits are bit-identical to composing the
+    frontend handle with the reference head apply — dense and masked,
+    including zero-kept and bucket-edge ``n_keep`` values."""
+    model = _model(input_scale=0.125)
+    images, kernel = _data(model.spec)
+    head_params = model.init_head(jax.random.PRNGKey(1))
+    interpret = True if backend == "pallas" else None
+    cache = fpca.ExecutableCache(32)
+    m = fpca.compile(model, backend=backend, weights=kernel,
+                     head_params=head_params, model=bucket_model,
+                     cache=cache, interpret=interpret)
+    fe = fpca.compile(model.frontend, backend=backend, weights=kernel,
+                      model=bucket_model, cache=cache, interpret=interpret)
+    h_o, w_o = output_dims(model.spec)
+    b = images.shape[0]
+    m_total = b * h_o * w_o
+
+    got = np.asarray(m.run(images))
+    want = np.asarray(model.apply_head(head_params, fe.run(images)))
+    assert got.shape == (b, model.n_classes)
+    np.testing.assert_array_equal(got, want)
+
+    # masked parity across the bucket edges (n_keep = 0, 1, pow2 +/- 1, M)
+    for n_keep in (0, 1, 7, 8, 9, m_total):
+        keep = _mask_with_keep(b, h_o, w_o, n_keep)
+        got = np.asarray(m.run(images, window_keep=keep))
+        want = np.asarray(
+            model.apply_head(head_params, fe.run(images, window_keep=keep))
+        )
+        np.testing.assert_array_equal(got, want, err_msg=f"n_keep={n_keep}")
+
+
+def test_model_single_frame_mirrors_batchedness(bucket_model):
+    model = _model()
+    images, kernel = _data(model.spec)
+    head_params = model.init_head(jax.random.PRNGKey(0))
+    m = fpca.compile(model, backend="basis", weights=kernel,
+                     head_params=head_params, model=bucket_model)
+    batched = np.asarray(m.run(images))
+    one = np.asarray(m.run(images[0]))
+    assert one.shape == (model.n_classes,)
+    np.testing.assert_array_equal(one, batched[0])
+
+
+def test_model_zero_kept_short_circuits_frontend(bucket_model):
+    """An all-skipped batch launches no frontend kernel but still serves the
+    head on the exact-zero activation map — a class decision, not zeros."""
+    model = _model()
+    images, kernel = _data(model.spec)
+    head_params = model.init_head(jax.random.PRNGKey(0))
+    m = fpca.compile(model, backend="basis", weights=kernel,
+                     head_params=head_params, model=bucket_model)
+    h_o, w_o = output_dims(model.spec)
+    keep = np.zeros((2, h_o, w_o), bool)
+    runs_before = m.stats.runs
+    got = np.asarray(m.run(images, window_keep=keep))
+    assert m.stats.launches_skipped == 1
+    assert m.stats.runs == runs_before            # no frontend launch
+    zeros = np.zeros((2, *model.frontend.out_shape), np.float32)
+    np.testing.assert_array_equal(
+        got, np.asarray(model.apply_head(head_params, zeros))
+    )
+
+
+def test_model_reprogram_zero_recompiles(bucket_model):
+    """Rewriting NVM planes AND/OR head parameters never recompiles."""
+    model = _model()
+    images, k1 = _data(model.spec, seed=1)
+    _, k2 = _data(model.spec, seed=2)
+    hp1 = model.init_head(jax.random.PRNGKey(1))
+    hp2 = model.init_head(jax.random.PRNGKey(2))
+    m = fpca.compile(model, backend="basis", weights=k1, head_params=hp1,
+                     model=bucket_model)
+    out1 = np.asarray(m.run(images))
+    misses = m.cache_info().misses
+    assert misses == 1                            # exactly one fused compile
+    m.reprogram(k2)                               # NVM rewrite
+    out2 = np.asarray(m.run(images))
+    m.reprogram(head_params=hp2)                  # head rewrite
+    out3 = np.asarray(m.run(images))
+    info = m.cache_info()
+    assert info.misses == misses                  # ZERO recompiles
+    assert info.hits >= 2
+    assert not np.array_equal(out1, out2)
+    assert not np.array_equal(out2, out3)
+    # head params really serve: parity against the reference apply
+    fe = fpca.compile(model.frontend, backend="basis", weights=k2,
+                      model=bucket_model)
+    np.testing.assert_array_equal(
+        out3, np.asarray(model.apply_head(hp2, fe.run(images)))
+    )
+
+
+def test_model_requires_programmed_parameters(bucket_model):
+    model = _model()
+    images, kernel = _data(model.spec)
+    m = fpca.compile(model, backend="basis", model=bucket_model)
+    with pytest.raises(RuntimeError, match="reprogram"):
+        m.run(images)
+    m.reprogram(kernel)
+    with pytest.raises(RuntimeError, match="head"):
+        m.run(images)
+    with pytest.raises(ValueError, match="stages"):
+        m.reprogram(head_params=[{}])
+    with pytest.raises(ValueError, match="head_params"):
+        fpca.compile(fpca.FPCAProgram(spec=_spec()), backend="basis",
+                     model=bucket_model, head_params=[{}])
+
+
+# ---------------------------------------------------------------------------
+# skip-aware streaming
+# ---------------------------------------------------------------------------
+
+
+def test_model_stream_skip_aware_logits(bucket_model):
+    """A static gated stream: everything after the keyframe is skipped, yet
+    every tick yields the keyframe's logits (the effective activation map
+    carries forward); counts stay exact zeros for skipped ticks."""
+    model = _model()
+    rng = np.random.default_rng(5)
+    frame = rng.uniform(0, 1, (H, W, 3)).astype(np.float32)
+    _, kernel = _data(model.spec)
+    hp = model.init_head(jax.random.PRNGKey(0))
+    m = fpca.compile(model, backend="basis", weights=kernel, head_params=hp,
+                     model=bucket_model)
+    gate = fpca.DeltaGateConfig(threshold=0.05, hysteresis=0,
+                                keyframe_interval=0)
+    results = list(m.stream([frame] * 4, gate=gate))
+    h_o, w_o = output_dims(model.spec)
+    assert results[0].kept_windows == h_o * w_o
+    dense_logits = np.asarray(m.run(frame))
+    np.testing.assert_array_equal(results[0].logits, dense_logits)
+    for r in results[1:]:
+        assert r.kept_windows == 0
+        assert np.all(r.counts == 0)              # frontend skipped
+        np.testing.assert_array_equal(r.logits, dense_logits)  # head patched
+
+
+def test_model_stream_patches_effective_activations(bucket_model):
+    """Moving scene: per-tick logits equal a manual effective-map
+    simulation (patch kept windows into the previous map, apply the head)."""
+    from repro.data.pipeline import SyntheticMovingObject
+
+    model = _model()
+    _, kernel = _data(model.spec)
+    hp = model.init_head(jax.random.PRNGKey(0))
+    m = fpca.compile(model, backend="basis", weights=kernel, head_params=hp,
+                     model=bucket_model)
+    fe = fpca.compile(model.frontend, backend="basis", weights=kernel,
+                      model=bucket_model)
+    cam = SyntheticMovingObject((H, W), seed=3)
+    frames = [cam.frame_at(t) for t in range(6)]
+    gate = fpca.DeltaGateConfig(threshold=0.02, hysteresis=1,
+                                keyframe_interval=4)
+    results = list(m.stream(frames, gate=gate))
+    assert any(0 < r.kept_windows < r.total_windows for r in results)
+
+    from repro.core.mapping import active_window_mask
+
+    eff = np.zeros(model.frontend.out_shape, np.float32)
+    for frame, r in zip(frames, results):
+        if r.block_mask is None or r.block_mask.all():
+            counts = np.asarray(fe.run(frame))
+            window = np.ones(counts.shape[:2], bool)
+        else:
+            window = active_window_mask(model.spec, r.block_mask)
+            counts = np.asarray(fe.run(frame, block_mask=r.block_mask))
+        eff = np.where(window[..., None], counts, eff)
+        want = np.asarray(model.apply_head(hp, eff[None]))[0]
+        np.testing.assert_array_equal(r.logits, want,
+                                      err_msg=f"tick {r.frame_idx}")
+
+
+def test_model_streams_are_iterator_independent(bucket_model):
+    """Two concurrent stream() iterators from ONE handle must not share the
+    effective activation map: interleaved iteration matches sequential."""
+    from repro.data.pipeline import SyntheticMovingObject
+
+    model = _model()
+    _, kernel = _data(model.spec)
+    hp = model.init_head(jax.random.PRNGKey(0))
+    m = fpca.compile(model, backend="basis", weights=kernel, head_params=hp,
+                     model=bucket_model)
+    gate = fpca.DeltaGateConfig(threshold=0.02, hysteresis=1,
+                                keyframe_interval=4)
+    frames_a = [SyntheticMovingObject((H, W), seed=1).frame_at(t)
+                for t in range(5)]
+    frames_b = [SyntheticMovingObject((H, W), seed=2).frame_at(t)
+                for t in range(5)]
+    want_a = [r.logits for r in m.stream(frames_a, gate=gate)]
+    want_b = [r.logits for r in m.stream(frames_b, gate=gate)]
+    it_a = m.stream(frames_a, gate=gate, depth=1)
+    it_b = m.stream(frames_b, gate=gate, depth=1)
+    got_a, got_b = [], []
+    for a, b in zip(it_a, it_b):          # interleaved ticks
+        got_a.append(a.logits)
+        got_b.append(b.logits)
+    for want, got in ((want_a, got_a), (want_b, got_b)):
+        for w_l, g_l in zip(want, got):
+            np.testing.assert_array_equal(g_l, w_l)
+
+
+def test_model_reprogram_bn_offset_alone(bucket_model):
+    """A bn_offset-only rewrite must serve (and still never recompile)."""
+    model = _model()
+    images, kernel = _data(model.spec)
+    hp = model.init_head(jax.random.PRNGKey(0))
+    m = fpca.compile(model, backend="basis", weights=kernel, head_params=hp,
+                     model=bucket_model)
+    out1 = np.asarray(m.run(images))
+    misses = m.cache_info().misses
+    m.reprogram(bn_offset=np.full((model.out_channels,), 50.0, np.float32))
+    out2 = np.asarray(m.run(images))
+    assert m.cache_info().misses == misses
+    assert not np.array_equal(out1, out2)
+    fe = fpca.compile(model.frontend, backend="basis", weights=kernel,
+                      bn_offset=np.full((model.out_channels,), 50.0, np.float32),
+                      model=bucket_model)
+    np.testing.assert_array_equal(
+        out2, np.asarray(model.apply_head(hp, fe.run(images)))
+    )
+    with pytest.raises(ValueError, match="reprogram needs"):
+        m.reprogram()
+
+
+# ---------------------------------------------------------------------------
+# pipeline + stream server wiring
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_serves_model_config(bucket_model):
+    from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
+
+    model = _model()
+    images, kernel = _data(model.spec)
+    hp = model.init_head(jax.random.PRNGKey(0))
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cls", model, kernel, head_params=hp)
+    pipe.register("fe", model.spec, kernel)
+    res = pipe.serve(
+        [FrontendRequest("cls", images[0]), FrontendRequest("fe", images[0]),
+         FrontendRequest("cls", images[1])]
+    )
+    m = fpca.compile(model, backend="basis", weights=kernel, head_params=hp,
+                     model=bucket_model)
+    want = np.asarray(m.run(images))
+    np.testing.assert_array_equal(np.asarray(res[0]), want[0])
+    np.testing.assert_array_equal(np.asarray(res[2]), want[1])
+    assert np.asarray(res[1]).shape == model.frontend.out_shape
+
+
+def test_pipeline_register_model_validation(bucket_model):
+    from repro.serving.fpca_pipeline import FPCAPipeline
+
+    model = _model()
+    _, kernel = _data(model.spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    with pytest.raises(ValueError, match="head_params"):
+        pipe.register("cls", model, kernel)
+    with pytest.raises(ValueError, match="head_params"):
+        pipe.register("fe", model.spec, kernel,
+                      head_params=model.init_head(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="output channels"):
+        pipe.register("cls", model, kernel[:2],
+                      head_params=model.init_head(jax.random.PRNGKey(0)))
+    # a stage-count mismatch fails AT registration, not on the first serve
+    with pytest.raises(ValueError, match="stages"):
+        pipe.register("cls", model, kernel,
+                      head_params=model.init_head(jax.random.PRNGKey(0))[:1])
+
+
+def test_cross_config_stacking_with_model_config(bucket_model):
+    """A model config and a frontend config sharing a compile signature
+    merge into ONE channel-stacked launch; the model's head then runs on its
+    slice — logits bit-identical to serving it alone."""
+    from repro.serving.fpca_pipeline import FPCAPipeline, FrontendRequest
+
+    model = _model()
+    images, kernel = _data(model.spec)
+    hp = model.init_head(jax.random.PRNGKey(0))
+    pipe = FPCAPipeline(bucket_model, backend="basis",
+                        cross_config_batching=True)
+    pipe.register("cls", model, kernel, head_params=hp)
+    pipe.register("fe", model.spec, kernel * 0.5)
+    res = pipe.serve(
+        [FrontendRequest("cls", images[0]), FrontendRequest("fe", images[0])]
+    )
+    assert pipe.stats.merged_groups == 1
+    m = fpca.compile(model, backend="basis", weights=kernel, head_params=hp,
+                     model=bucket_model)
+    np.testing.assert_array_equal(
+        np.asarray(res[0]), np.asarray(m.run(images[0]))
+    )
+
+
+def test_stream_server_yields_model_logits(bucket_model):
+    """StreamServer ticks on a model config carry per-tick class logits,
+    tick-for-tick bit-identical to the handle's solo stream()."""
+    from repro.data.pipeline import SyntheticMovingObject
+    from repro.serving.fpca_pipeline import FPCAPipeline
+    from repro.serving.streaming import StreamServer
+
+    model = _model()
+    _, kernel = _data(model.spec)
+    hp = model.init_head(jax.random.PRNGKey(0))
+    gate = fpca.DeltaGateConfig(threshold=0.02, hysteresis=1,
+                                keyframe_interval=4)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cls", model, kernel, head_params=hp)
+    pipe.register("fe", model.spec, kernel)
+    server = StreamServer(pipe, gate)
+    server.add_stream("cam", "cls")
+    server.add_stream("plain", "fe")
+    cam = SyntheticMovingObject((H, W), seed=3)
+    frames = [cam.frame_at(t) for t in range(6)]
+    got = [
+        r
+        for results in server.run(
+            {"cam": f, "plain": f} for f in frames
+        )
+        for r in results
+    ]
+    model_results = [r for r in got if r.config == "cls"]
+    plain_results = [r for r in got if r.config == "fe"]
+    assert all(r.logits is not None for r in model_results)
+    assert all(r.logits is None for r in plain_results)
+
+    m = fpca.compile(model, backend="basis", weights=kernel, head_params=hp,
+                     model=bucket_model)
+    solo = list(m.stream(frames, gate=gate))
+    for a, b in zip(model_results, solo):
+        assert a.frame_idx == b.frame_idx
+        assert a.kept_windows == b.kept_windows
+        np.testing.assert_array_equal(a.counts, b.counts)
+        np.testing.assert_array_equal(a.logits, b.logits)
+        assert a.predicted_class == b.predicted_class
+
+
+def test_stream_server_dense_model_logits(bucket_model):
+    """Gating off: every tick's logits equal the fused dense run."""
+    from repro.serving.fpca_pipeline import FPCAPipeline
+    from repro.serving.streaming import StreamServer
+
+    model = _model()
+    images, kernel = _data(model.spec)
+    hp = model.init_head(jax.random.PRNGKey(0))
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cls", model, kernel, head_params=hp)
+    server = StreamServer(pipe, gating=False)
+    server.add_stream("cam", "cls")
+    m = fpca.compile(model, backend="basis", weights=kernel, head_params=hp,
+                     model=bucket_model)
+    for r in server.serve("cam", list(images)):
+        np.testing.assert_array_equal(
+            r.logits, np.asarray(m.run(images[r.frame_idx]))
+        )
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def test_head_flops_exact_counts():
+    model = _model(head=(
+        fpca.ConvSpec(6, 3, activation="relu"),   # (4,4,4) -> (2,2,6)
+        fpca.DenseSpec(5, activation="relu"),     # 24 -> 5
+        fpca.DenseSpec(2),                        # 5 -> 2
+    ))
+    fl = analysis.head_flops(model)
+    conv_macs = 2 * 2 * 6 * (3 * 3 * 4)
+    assert fl["per_layer"][0]["macs"] == conv_macs
+    assert fl["per_layer"][1]["macs"] == 24 * 5
+    assert fl["per_layer"][2]["macs"] == 5 * 2
+    assert fl["macs"] == conv_macs + 24 * 5 + 5 * 2
+    assert fl["flops"] == 2 * fl["macs"]
+    assert fl["params"] == 6 * (3 * 3 * 4 + 1) + 5 * (24 + 1) + 2 * (5 + 1)
+
+
+def test_head_flops_invariant_to_activation_spelling():
+    """A fused activation and a standalone ActivationSpec stage are the same
+    computation — they must report the same energy/latency."""
+    fused = _model(head=(fpca.DenseSpec(8, activation="relu"),
+                         fpca.DenseSpec(2)))
+    spelled = _model(head=(fpca.DenseSpec(8), fpca.ActivationSpec("relu"),
+                           fpca.DenseSpec(2)))
+    a, b = analysis.head_report(fused), analysis.head_report(spelled)
+    assert a["macs"] == b["macs"] and a["params"] == b["params"]
+    assert a["elem_ops"] == b["elem_ops"] == 8
+    assert a["e_head"] == b["e_head"] and a["t_head"] == b["t_head"]
+
+
+def test_bind_head_params_validates_shapes():
+    """Wrong-shaped head weights fail at the bind call site with a clear
+    error, never inside a jitted trace."""
+    model = _model()
+    good = model.init_head(jax.random.PRNGKey(0))
+    bad = [dict(good[0]), dict(good[1])]
+    bad[0]["w"] = np.asarray(bad[0]["w"]).T          # transposed dense weight
+    with pytest.raises(ValueError, match="parameter shapes"):
+        model.bind_head_params(bad)
+    missing = [{"w": good[0]["w"]}, good[1]]         # bias dropped
+    with pytest.raises(ValueError, match="parameter shapes"):
+        model.bind_head_params(missing)
+    assert len(model.bind_head_params(good)) == 2
+
+
+def test_model_streaming_report_extends_frontend_stats():
+    model = _model()
+    bh = -(-model.spec.eff_h // model.spec.skip_block)
+    bw = -(-model.spec.eff_w // model.spec.skip_block)
+    masks = [None, np.zeros((bh, bw), bool), np.ones((bh, bw), bool)]
+    rep = analysis.model_streaming_report(model, masks)
+    base = analysis.streaming_frontend_report(model.spec, masks)
+    for key, val in base.items():
+        assert rep[key] == val                    # frontend stats unchanged
+    assert rep["head_macs_per_frame"] == analysis.head_flops(model)["macs"]
+    assert rep["t_head_total"] > 0 and rep["e_head_total"] > 0
+    assert rep["e_model_total"] > rep["e_total"]
+    # the head runs dense every frame, so the whole-model ratio is closer to
+    # dense than the frontend-only ratio
+    assert rep["model_energy_vs_dense"] >= rep["energy_vs_dense"]

@@ -762,3 +762,71 @@ def test_multi_config_stream_requires_shared_spec(bucket_model):
     server = StreamServer(pipe)
     with pytest.raises(ValueError, match="shared spec"):
         server.add_stream("s0", ("A", "B"))
+
+
+# ---------------------------------------------------------------------------
+# CompiledFrontend.stream() vs StreamServer: the single-camera loop serves
+# the exact same ticks as solo server serving
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_stream_matches_server_solo(bucket_model):
+    """Tick-for-tick bit-identical parity between the handle's single-camera
+    ``stream()`` loop and ``StreamServer`` solo serving of the same frames
+    through the same gate (counts, masks, kept counts, frame order)."""
+    import repro.fpca as fpca
+
+    spec = _spec()
+    _, kernel = _data(spec)
+    gate = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=4)
+    cam = SyntheticMovingObject((H, W), seed=9)
+    frames = [cam.frame_at(t) for t in range(8)]
+
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    server = StreamServer(pipe, gate, depth=2)
+    server.add_stream("s0", "cam")
+    via_server = list(server.serve("s0", frames))
+
+    fe = fpca.compile(
+        fpca.FPCAProgram(spec=spec), backend="basis", weights=kernel,
+        model=bucket_model,
+    )
+    via_handle = list(fe.stream(frames, gate=gate, depth=2))
+
+    assert len(via_server) == len(via_handle) == len(frames)
+    kept_some = False
+    for s, h in zip(via_server, via_handle):
+        assert s.frame_idx == h.frame_idx
+        assert s.kept_windows == h.kept_windows
+        assert s.total_windows == h.total_windows
+        np.testing.assert_array_equal(s.block_mask, h.block_mask)
+        np.testing.assert_array_equal(s.counts, h.counts)
+        kept_some |= 0 < s.kept_windows < s.total_windows
+    assert kept_some                        # the gate actually gated
+
+
+def test_compiled_stream_matches_server_solo_dense(bucket_model):
+    """Same parity with gating disabled (dense baseline both ways)."""
+    import repro.fpca as fpca
+
+    spec = _spec()
+    _, kernel = _data(spec)
+    rng = np.random.default_rng(11)
+    frames = [rng.uniform(0, 1, (H, W, 3)).astype(np.float32) for _ in range(4)]
+
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    server = StreamServer(pipe, gating=False)
+    server.add_stream("s0", "cam")
+    via_server = list(server.serve("s0", frames))
+
+    fe = fpca.compile(
+        fpca.FPCAProgram(spec=spec), backend="basis", weights=kernel,
+        model=bucket_model,
+    )
+    via_handle = list(fe.stream(frames, gate=None))
+    for s, h in zip(via_server, via_handle):
+        assert s.block_mask is None and h.block_mask is None
+        assert s.kept_windows == h.kept_windows == s.total_windows
+        np.testing.assert_array_equal(s.counts, h.counts)
