@@ -95,6 +95,33 @@ def run() -> list[Row]:
     t_gated, server = _serve(pipe, cams, gating=True)
     t_dense, _ = _serve(pipe, cams, gating=False)
 
+    # scan-segment lane: per-tick logits with the gate AND the skip-aware
+    # head inside ONE lax.scan launch per stream (K = N_FRAMES); the probe
+    # pass compiles the masked-dense scan and sizes the row bucket for the
+    # timed pass (servo-at-segment-boundary semantics)
+    frame_stacks = {
+        name: np.stack([cam.frame_at(t) for t in range(N_FRAMES)])
+        for name, cam in cams.items()
+    }
+
+    def _serve_scan(m_bucket=None):
+        srv = StreamServer(pipe, GATE, depth=2, gating=True)
+        for name in frame_stacks:
+            srv.add_stream(name, "cls")
+        t0 = time.perf_counter()
+        for name, stack in frame_stacks.items():
+            srv.run_segment(name, stack, m_bucket=m_bucket)
+        return time.perf_counter() - t0, srv
+
+    _, probe = _serve_scan()
+    scan_bucket = max(
+        probe.sessions[n]._segment_state.suggested_bucket or 1
+        for n in frame_stacks
+    )
+    _serve_scan(m_bucket=scan_bucket)    # warm-up
+    t_scan, _ = _serve_scan(m_bucket=scan_bucket)
+    fps_scan = N_FRAMES * N_STREAMS / t_scan
+
     n_served = N_FRAMES * N_STREAMS
     fps_gated = n_served / t_gated
     fps_dense = n_served / t_dense
@@ -121,6 +148,13 @@ def run() -> list[Row]:
         "batched_dense": {"us_per_batch": us_batched, "frames_per_s": fps_batched},
         "stream_dense": {"s_total": t_dense, "frames_per_s": fps_dense},
         "stream_masked": {"s_total": t_gated, "frames_per_s": fps_gated},
+        "scan_segment": {
+            "s_total": t_scan,
+            "frames_per_s": fps_scan,
+            "segment_length": N_FRAMES,
+            "m_bucket": scan_bucket,
+            "speedup_vs_per_tick_masked": fps_scan / fps_gated,
+        },
         "speedup_masked_vs_dense": fps_gated / fps_dense,
         "kept_window_frac": kept_frac,
         "head": {
@@ -150,6 +184,10 @@ def run() -> list[Row]:
          f"(logits every tick)"),
         ("model_stream_dense", t_dense / n_served * 1e6,
          f"{fps_dense:.0f} frames/s"),
+        ("model_scan_segment", t_scan / n_served * 1e6,
+         f"K={N_FRAMES} lax.scan segments -> {fps_scan:.0f} frames/s "
+         f"(bucket {scan_bucket}, "
+         f"{fps_scan / fps_gated:.2f}x per-tick masked, logits every tick)"),
         ("model_head_cost", 0.0,
          f"{rep['head_macs_per_frame']/1e6:.2f} MMAC/frame "
          f"({rep['head_params']/1e3:.0f}k params)"),

@@ -77,6 +77,13 @@ def compare_stream(frontend_path: Path, stream_path: Path) -> None:
               f"converged at {conv_s} / {ctl['ticks']} ticks "
               f"(final thr {ctl['final_threshold']:.4f}, "
               f"ema {ctl['final_ema']:.3f})")
+    scan = st.get("scan_segment")
+    if scan:
+        print(f"  scan-segment lane         : "
+              f"{scan['frames_per_s']:.1f} frames/s "
+              f"(K={scan['segment_length']} lax.scan, bucket "
+              f"{scan['m_bucket']}, "
+              f"{scan['speedup_vs_per_tick_masked']:.2f}x per-tick masked)")
     ctl_e = st.get("controller_energy")
     if ctl_e:
         conv = ctl_e["converged_tick"]
@@ -104,6 +111,13 @@ def compare_model(frontend_path: Path, model_path: Path) -> None:
           f"{md['stream_dense']['frames_per_s']:8.1f} dense -> "
           f"{md['speedup_masked_vs_dense']:.2f}x "
           f"(kept {md['kept_window_frac']:.1%} of windows, logits every tick)")
+    scan = md.get("scan_segment")
+    if scan:
+        print(f"  scan-segment lane          : "
+              f"{scan['frames_per_s']:.1f} frames/s "
+              f"(K={scan['segment_length']} lax.scan, bucket "
+              f"{scan['m_bucket']}, "
+              f"{scan['speedup_vs_per_tick_masked']:.2f}x per-tick masked)")
     print(f"  digital head per frame     : "
           f"{head['macs_per_frame']/1e6:.2f} MMAC "
           f"({head['params']/1e3:.0f}k params, "

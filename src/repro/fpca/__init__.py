@@ -54,6 +54,8 @@ from repro.fpca.executable import (
     CompiledFrontend,
     CompiledModel,
     FrontendStats,
+    SegmentResult,
+    SegmentState,
     compile,
 )
 from repro.fpca.program import (
@@ -96,6 +98,9 @@ __all__ = [
     "FrontendStats",
     "ExecutableCache",
     "CacheInfo",
+    # device-compiled streaming segments
+    "SegmentState",
+    "SegmentResult",
     # backend registry
     "Backend",
     "register_backend",

@@ -40,10 +40,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import gating
 from repro.core.adc import ADCConfig, updown_readout
 from repro.core.curvefit import BucketCurvefitModel
 from repro.core.fpca_sim import WeightEncoding, _analog_read, encode_weights, extract_windows
-from repro.core.mapping import FPCASpec
+from repro.core.mapping import FPCASpec, output_dims
 
 __all__ = [
     "Backend",
@@ -123,6 +124,239 @@ class Backend:
                 )
 
         return run
+
+    def make_segment_executable(
+        self,
+        bucket_model: "BucketCurvefitModel",
+        *,
+        spec: FPCASpec,
+        adc: ADCConfig | None = None,
+        enc: WeightEncoding | None = None,
+        interpret: bool | None = None,
+        length: int,
+        gated: bool = True,
+        m_bucket: int | None = None,
+        model_program=None,                 # repro.fpca.FPCAModelProgram
+        early_exit: int | None = None,
+        donate: bool = False,
+    ) -> Callable:
+        """A fresh jitted **segment** executable: ``length`` streaming ticks
+        rolled into ONE device program (``jax.lax.scan``), the delta gate /
+        hysteresis / keyframe state machine living in the carry.
+
+        Per tick the body steps the gate (:mod:`repro.core.gating` — the
+        same jnp numerics the host loop evaluates, so keep/skip decisions
+        compare identical bits), derives the per-window keep grid and routes
+        the frame through this backend's :attr:`make_executable` closures:
+
+        * zero kept windows  -> exact zeros, no kernel math at all;
+        * ``n_keep > m_bucket`` (keyframes, busy scenes) -> the masked dense
+          variant (post-hoc zero mask — the existing dense-fallback path);
+        * otherwise          -> the ``m_bucket``-compacted variant (static
+          ``jnp.nonzero`` gather; the servo picks the bucket *between*
+          segments so it stays trace-friendly inside the scan).
+
+        With ``model_program`` the digital head is fused in: each tick
+        patches kept windows into the carried effective activation map and
+        runs the head on the patched map (an all-skipped tick reproduces
+        the carried previous logits bit-exactly).  With ``early_exit=p`` the
+        scan becomes a ``lax.while_loop`` that stops after ``p`` consecutive
+        all-skipped ticks (quiescent scene) and reports ``ticks`` executed.
+
+        Signature of the returned closure (gate knobs and all parameters
+        enter traced — reprogramming and boundary servo steps never
+        recompile)::
+
+            run(frames, kernel, bn_offset[, head_params][, gate_args], carry)
+              -> (outs, new_carry)
+
+        where ``gate_args = (threshold f32, hysteresis i32, interval i32)``
+        is present iff ``gated``; ``carry`` is the flat gate-state tuple
+        (plus ``(eff, logits)`` for models) and ``outs`` maps ``counts``,
+        ``block_keep``, ``kept``, ``keyframe``, ``ticks`` (and ``logits``).
+        ``donate=True`` donates the carry buffers (previous frame / ages /
+        previous logits) to the next segment — skip on CPU, where jax does
+        not implement donation.
+        """
+        adc = adc or ADCConfig()
+        enc = enc or WeightEncoding()
+        K = int(length)
+        if K < 1:
+            raise ValueError("segment length must be >= 1")
+        h_o, w_o = output_dims(spec)
+        M = h_o * w_o
+        bh, bw = gating.block_grid(spec)
+        head = model_program.apply_head if model_program is not None else None
+        if early_exit is not None and not gated:
+            raise ValueError("early_exit requires a gated segment")
+
+        common = dict(
+            spec=spec, adc=adc, enc=enc, interpret=interpret
+        )
+        if not gated:
+            mb = None
+            fe_dense = self.make_executable(bucket_model, m_bucket=None, **common)
+            fe_masked = fe_compact = None
+        else:
+            mb = M if m_bucket is None else max(1, min(int(m_bucket), M))
+            fe_dense = None
+            fe_masked = self.make_executable(bucket_model, m_bucket=M, **common)
+            fe_compact = (
+                self.make_executable(bucket_model, m_bucket=mb, **common)
+                if mb < M and self.bucket_sensitive
+                else None
+            )
+
+        def tick(kernel, bn_offset, head_params, gate_args, carry, frame):
+            gate_carry = gating.GateCarry(*carry[:4])
+            if gated:
+                thr, hyst, ki = gate_args
+                cur = gating.effective_frame(frame, spec)
+                gate_carry, keep, keyframe = gating.gate_tick(
+                    spec, gate_carry, cur, thr, hyst, ki
+                )
+                window = gating.window_mask_from_blocks(keep, spec)
+                n_keep = jnp.sum(window).astype(jnp.int32)
+            else:
+                keep = jnp.ones((bh, bw), bool)
+                keyframe = jnp.zeros((), bool)
+                n_keep = jnp.asarray(M, jnp.int32)
+                window = None
+                gate_carry = gating.GateCarry(
+                    gate_carry.has_prev,
+                    gate_carry.prev_eff,
+                    gate_carry.age,
+                    gate_carry.frame_idx + 1,
+                )
+            c_o = kernel.shape[0]
+
+            def compute(_):
+                if not gated:
+                    return fe_dense(frame[None], kernel, bn_offset)
+                if fe_compact is None:
+                    return fe_masked(frame[None], kernel, bn_offset, window[None])
+                return jax.lax.cond(
+                    n_keep > mb,
+                    lambda __: fe_masked(
+                        frame[None], kernel, bn_offset, window[None]
+                    ),
+                    lambda __: fe_compact(
+                        frame[None], kernel, bn_offset, window[None]
+                    ),
+                    None,
+                )
+
+            if gated:
+                # the zero-kept branch reproduces the host loop's
+                # launch short-circuit: exact zeros, no kernel math
+                counts = jax.lax.cond(
+                    n_keep == 0,
+                    lambda _: jnp.zeros((1, h_o, w_o, c_o), jnp.float32),
+                    compute,
+                    None,
+                )[0]
+            else:
+                counts = compute(None)[0]
+            outs = {
+                "counts": counts,
+                "block_keep": keep,
+                "kept": n_keep,
+                "keyframe": keyframe,
+            }
+            if head is None:
+                return tuple(gate_carry), outs
+            eff_prev, logits_prev = carry[4], carry[5]
+            if gated:
+
+                def quiet_head(_):
+                    return eff_prev, logits_prev
+
+                def live_head(_):
+                    eff = jnp.where(window[..., None], counts, eff_prev)
+                    return eff, head(head_params, eff[None])[0]
+
+                eff, logits = jax.lax.cond(
+                    n_keep == 0, quiet_head, live_head, None
+                )
+            else:
+                eff = counts
+                logits = head(head_params, eff[None])[0]
+            outs["logits"] = logits
+            return tuple(gate_carry) + (eff, logits), outs
+
+        def scan_run(frames, kernel, bn_offset, head_params, gate_args, carry):
+            def body(c, frame):
+                return tick(kernel, bn_offset, head_params, gate_args, c, frame)
+
+            carry, outs = jax.lax.scan(body, carry, frames)
+            outs["ticks"] = jnp.asarray(K, jnp.int32)
+            return outs, carry
+
+        def while_run(frames, kernel, bn_offset, head_params, gate_args, carry):
+            patience = int(early_exit)
+            c_o = kernel.shape[0]
+            outs0 = {
+                "counts": jnp.zeros((K, h_o, w_o, c_o), jnp.float32),
+                "block_keep": jnp.zeros((K, bh, bw), bool),
+                "kept": jnp.zeros((K,), jnp.int32),
+                "keyframe": jnp.zeros((K,), bool),
+            }
+            if head is not None:
+                outs0["logits"] = jnp.zeros(
+                    (K,) + tuple(carry[5].shape), jnp.float32
+                )
+
+            def cond_fn(state):
+                t, quiet, _, __ = state
+                return jnp.logical_and(t < K, quiet < patience)
+
+            def body_fn(state):
+                t, quiet, c, outs = state
+                frame = jax.lax.dynamic_index_in_dim(
+                    frames, t, axis=0, keepdims=False
+                )
+                c, o = tick(kernel, bn_offset, head_params, gate_args, c, frame)
+                outs = {k: outs[k].at[t].set(o[k]) for k in outs}
+                quiet = jnp.where(o["kept"] == 0, quiet + 1, 0)
+                return t + 1, quiet, c, outs
+
+            t, _, carry, outs = jax.lax.while_loop(
+                cond_fn,
+                body_fn,
+                (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), carry, outs0),
+            )
+            outs["ticks"] = t
+            return outs, carry
+
+        inner = while_run if early_exit is not None else scan_run
+
+        if gated and head is not None:
+
+            def run(frames, kernel, bn_offset, head_params, gate_args, carry):
+                return inner(frames, kernel, bn_offset, head_params, gate_args, carry)
+
+            donate_idx = 5
+        elif gated:
+
+            def run(frames, kernel, bn_offset, gate_args, carry):
+                return inner(frames, kernel, bn_offset, None, gate_args, carry)
+
+            donate_idx = 4
+        elif head is not None:
+
+            def run(frames, kernel, bn_offset, head_params, carry):
+                return inner(frames, kernel, bn_offset, head_params, None, carry)
+
+            donate_idx = 4
+        else:
+
+            def run(frames, kernel, bn_offset, carry):
+                return inner(frames, kernel, bn_offset, None, None, carry)
+
+            donate_idx = 3
+        if donate:
+            return jax.jit(run, donate_argnums=(donate_idx,))
+        return jax.jit(run)
 
 
 _REGISTRY: dict[str, Backend] = {}

@@ -33,15 +33,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import gating
 from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
 from repro.fpca.backends import Backend, default_backend_name, get_backend
 from repro.fpca.cache import CacheInfo, ExecutableCache
 from repro.fpca.program import FPCAProgram
-from repro.kernels.fpca_conv.ops import StickyBucket
+from repro.kernels.fpca_conv.ops import StickyBucket, segment_bucket
 from repro.launch.mesh import data_axes, data_extent
 
-__all__ = ["FrontendStats", "CompiledFrontend", "CompiledModel", "compile"]
+__all__ = [
+    "FrontendStats",
+    "SegmentState",
+    "SegmentResult",
+    "CompiledFrontend",
+    "CompiledModel",
+    "compile",
+]
 
 _USE_PROGRAM = object()   # stream() sentinel: "inherit from program"
 
@@ -54,12 +62,84 @@ class FrontendStats:
     reprograms: int = 0             # NVM weight rewrites
     windows_total: int = 0          # windows submitted (incl. batch padding)
     windows_executed: int = 0       # windows that actually reached the kernel
-    launches_skipped: int = 0       # all-skipped batches short-circuited
+    launches_skipped: int = 0       # all-skipped ticks that launched no kernel
+    #                                 (per-tick short-circuits AND in-scan
+    #                                 zero-kept ticks of compiled segments)
     bucket_switches: int = 0        # served bucket-size transitions
     bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
+    segments: int = 0               # device-compiled segment launches
+    segment_ticks: int = 0          # ticks served from inside those launches
 
     def snapshot(self) -> tuple[int, ...]:
         return dataclasses.astuple(self)
+
+
+@dataclasses.dataclass
+class SegmentState:
+    """Carry threaded between :meth:`CompiledFrontend.run_segment` calls.
+
+    The first four fields are the device-resident delta-gate state
+    (:class:`repro.core.gating.GateCarry`); model segments add the effective
+    activation map and previous logits.  ``suggested_bucket`` is a host-side
+    hint — the compacted-row bucket the finished segment's kept counts size
+    for the next one (:func:`repro.kernels.fpca_conv.ops.segment_bucket`).
+    Treat instances as opaque: thread the ``state`` of one
+    :class:`SegmentResult` into the next call.  When the segment ran with
+    buffer donation, the *previous* state's arrays are dead after the call.
+    """
+
+    has_prev: Any
+    prev_eff: Any
+    age: Any
+    frame_idx: Any
+    eff: Any | None = None           # model segments: effective activation map
+    logits: Any | None = None        # model segments: previous logits
+    suggested_bucket: int | None = None
+
+    def carry(self, model: bool) -> tuple:
+        c = (
+            jnp.asarray(self.has_prev, bool),
+            jnp.asarray(self.prev_eff, jnp.float32),
+            jnp.asarray(self.age, jnp.int32),
+            jnp.asarray(self.frame_idx, jnp.int32),
+        )
+        if model:
+            if self.eff is None or self.logits is None:
+                raise ValueError(
+                    "model segment needs a state carrying (eff, logits) — "
+                    "thread the state a CompiledModel.run_segment returned"
+                )
+            c += (
+                jnp.asarray(self.eff, jnp.float32),
+                jnp.asarray(self.logits, jnp.float32),
+            )
+        return c
+
+
+@dataclasses.dataclass
+class SegmentResult:
+    """Outputs of one device-compiled streaming segment.
+
+    Per-tick arrays span the full compiled ``length`` K; with early exit
+    only the first ``ticks`` entries are meaningful (``counts`` rows past
+    ``ticks`` are zeros, ``kept_windows`` zeros, masks False).  ``counts``
+    (and ``logits``) stay unrealised device arrays so callers can overlap
+    the next segment's host work; the small per-tick bookkeeping arrays are
+    realised eagerly for stats and the boundary servo.
+    """
+
+    counts: Any                      # (K, h_o, w_o, c_o) device array
+    block_masks: np.ndarray          # (K, bh, bw) bool
+    kept_windows: np.ndarray         # (K,) int
+    keyframes: np.ndarray            # (K,) bool
+    rows_executed: np.ndarray        # (K,) int — compacted rows per tick
+    ticks: int                       # ticks actually executed (== K, or fewer
+    #                                  when early_exit stopped on a quiet scene)
+    length: int                      # compiled segment length K
+    first_frame_idx: int             # stream frame index of tick 0
+    gated: bool
+    state: SegmentState
+    logits: Any | None = None        # model segments: (K, n_classes)
 
 
 def _round_up_pow2(n: int) -> int:
@@ -415,6 +495,241 @@ class CompiledFrontend:
         """Extra ``StreamFrameResult`` fields realised from a tick entry."""
         return {}
 
+    # -- device-compiled segments --------------------------------------------
+    def run_segment(
+        self,
+        frames: Any,
+        *,
+        length: int | None = None,
+        state: SegmentState | None = None,
+        gate: Any = _USE_PROGRAM,
+        m_bucket: int | None = None,
+        early_exit: int | None = None,
+        donate: bool | None = None,
+    ) -> SegmentResult:
+        """Serve ``K`` streaming ticks as ONE device-compiled program.
+
+        The whole per-tick loop of :meth:`stream` — delta gate, hysteresis
+        ages, keyframe cadence, kept-window compaction, zero-kept
+        short-circuit — runs inside a single ``jax.lax.scan`` launch, so
+        tick latency is kernel-bound instead of dispatch-bound.  Outputs are
+        bit-identical, tick for tick, to the per-tick Python loop (the
+        differential harness in ``tests/test_segment_parity.py`` pins this
+        across backends).
+
+        Args:
+          frames: ``(K, H, W, c_i)`` stack; ``K`` is static per compiled
+            executable, so serve a stream in fixed-length chunks.
+          length: optional assertion that ``K`` matches the planned segment
+            length (chunking bugs fail loudly instead of recompiling).
+          state: the previous segment's :attr:`SegmentResult.state`; ``None``
+            starts a fresh stream (first tick keyframes, like the host loop).
+          gate: ``DeltaGateConfig`` for this segment (default: the
+            program's; explicit ``None`` = dense readout).  The threshold
+            enters traced — a boundary servo retunes it for the next segment
+            without recompiling.
+          m_bucket: static compacted-row bucket for non-keyframe ticks
+            (keyframes and busier ticks take the masked-dense branch).
+            Default: the state's ``suggested_bucket`` from the previous
+            segment, dense for the first.
+          early_exit: stop after this many consecutive all-skipped ticks
+            (``lax.while_loop`` variant); ``result.ticks`` reports how far
+            the segment got — feed the remaining frames to the next call.
+          donate: donate the carry buffers (previous frame / ages / previous
+            logits) to the device call; default on for non-CPU backends.
+        """
+        return self.run_segment_weighted(
+            self._require_weights(), self._bn, frames,
+            length=length, state=state, gate=gate, m_bucket=m_bucket,
+            early_exit=early_exit, donate=donate,
+        )
+
+    def run_segment_weighted(
+        self,
+        kernel: jax.Array,
+        bn_offset: jax.Array,
+        frames: Any,
+        *,
+        length: int | None = None,
+        state: SegmentState | None = None,
+        gate: Any = _USE_PROGRAM,
+        m_bucket: int | None = None,
+        early_exit: int | None = None,
+        donate: bool | None = None,
+    ) -> SegmentResult:
+        """:meth:`run_segment` with explicit weights (the serving-layer
+        entry point — weights enter traced, so reprogramming between
+        segments never recompiles)."""
+        return self._dispatch_segment(
+            kernel, bn_offset, frames, length=length, state=state, gate=gate,
+            m_bucket=m_bucket, early_exit=early_exit, donate=donate,
+            head_params=None,
+        )
+
+    def _dispatch_segment(
+        self,
+        kernel: jax.Array,
+        bn_offset: jax.Array,
+        frames: Any,
+        *,
+        length: int | None,
+        state: SegmentState | None,
+        gate: Any,
+        m_bucket: int | None,
+        early_exit: int | None,
+        donate: bool | None,
+        head_params: Any | None,
+    ) -> SegmentResult:
+        spec = self.spec
+        frames = jnp.asarray(frames, jnp.float32)
+        want = (spec.image_h, spec.image_w, spec.in_channels)
+        if frames.ndim != 4 or frames.shape[1:] != want:
+            raise ValueError(
+                f"expected (K, {want[0]}, {want[1]}, {want[2]}) frame stack, "
+                f"got {frames.shape}"
+            )
+        K = int(frames.shape[0])
+        if K < 1:
+            raise ValueError("need at least one frame")
+        if length is not None and int(length) != K:
+            raise ValueError(
+                f"length={length} does not match the {K}-frame stack"
+            )
+        c_o = int(kernel.shape[0])
+        if c_o != self.out_channels:
+            raise ValueError(
+                f"kernel has {c_o} output channels; this handle is compiled "
+                f"for {self.out_channels}"
+            )
+        gate = self.program.gate if gate is _USE_PROGRAM else gate
+        gated = gate is not None
+        h_o, w_o = output_dims(spec)
+        M = h_o * w_o
+        bh, bw = gating.block_grid(spec)
+        is_model = head_params is not None
+        if gated:
+            if m_bucket is None:
+                m_bucket = (
+                    state.suggested_bucket
+                    if state is not None and state.suggested_bucket
+                    else M
+                )
+            m_bucket = max(1, min(int(m_bucket), M))
+        else:
+            m_bucket = None
+        if early_exit is not None:
+            early_exit = int(early_exit)
+            if early_exit < 1:
+                raise ValueError("early_exit patience must be >= 1")
+            if not gated:
+                raise ValueError("early_exit requires a gated segment")
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        run = self._segment_executable(
+            K, m_bucket, gated, early_exit, bool(donate), model=is_model
+        )
+        if state is None:
+            state = self._fresh_segment_state(
+                gate.hysteresis if gated else 0, is_model
+            )
+        first_idx = int(state.frame_idx)
+        args: list = [frames, kernel, bn_offset]
+        if is_model:
+            args.append(head_params)
+        if gated:
+            args.append((
+                jnp.asarray(gate.threshold, jnp.float32),
+                jnp.asarray(gate.hysteresis, jnp.int32),
+                jnp.asarray(gate.keyframe_interval, jnp.int32),
+            ))
+        args.append(state.carry(is_model))
+        outs, new_carry = run(*args)
+        # the per-tick bookkeeping is realised eagerly (it feeds stats and
+        # the boundary servo); counts/logits stay lazy for overlap
+        ticks = int(outs["ticks"])
+        if gated:
+            kept = np.asarray(outs["kept"], np.int64)
+            keyframes = np.asarray(outs["keyframe"], bool)
+            block_masks = np.asarray(outs["block_keep"], bool)
+            rows = np.where(kept == 0, 0, np.where(kept > m_bucket, M, m_bucket))
+            rows[ticks:] = 0
+            suggested = segment_bucket(kept[:ticks], M, keyframes[:ticks])
+        else:
+            kept = np.full(K, M, np.int64)
+            keyframes = np.zeros(K, bool)
+            block_masks = np.ones((K, bh, bw), bool)
+            rows = np.full(K, M, np.int64)
+            suggested = None
+        new_state = SegmentState(*new_carry[:4])
+        if is_model:
+            new_state.eff, new_state.logits = new_carry[4], new_carry[5]
+        new_state.suggested_bucket = suggested
+        self.stats.runs += 1
+        self.stats.segments += 1
+        self.stats.segment_ticks += ticks
+        self.stats.windows_total += ticks * M
+        self.stats.windows_executed += int(rows[:ticks].sum())
+        if gated:
+            self.stats.launches_skipped += int((kept[:ticks] == 0).sum())
+        return SegmentResult(
+            counts=outs["counts"],
+            block_masks=block_masks,
+            kept_windows=kept,
+            keyframes=keyframes,
+            rows_executed=rows,
+            ticks=ticks,
+            length=K,
+            first_frame_idx=first_idx,
+            gated=gated,
+            state=new_state,
+            logits=outs.get("logits"),
+        )
+
+    def _fresh_segment_state(
+        self, hysteresis: int, is_model: bool
+    ) -> SegmentState:
+        st = SegmentState(*gating.init_gate_carry(self.spec, hysteresis))
+        if is_model:
+            h_o, w_o = output_dims(self.spec)
+            st.eff = jnp.zeros((h_o, w_o, self.out_channels), jnp.float32)
+            st.logits = jnp.zeros((self.n_classes,), jnp.float32)
+        return st
+
+    def _segment_executable(
+        self,
+        K: int,
+        m_bucket: int | None,
+        gated: bool,
+        early_exit: int | None,
+        donate: bool,
+        *,
+        model: bool = False,
+    ) -> Callable:
+        mb_key = m_bucket
+        if mb_key is not None and not self.backend.bucket_sensitive:
+            mb_key = -1
+        key = self.signature() + (
+            self.backend.name, "segment", K, mb_key, gated, early_exit,
+            donate, model,
+        )
+
+        def build() -> Callable:
+            return self.backend.make_segment_executable(
+                self.model,
+                spec=self.spec,
+                adc=self.program.adc,
+                enc=self.program.enc,
+                interpret=self.interpret,
+                length=K,
+                gated=gated,
+                m_bucket=m_bucket,
+                model_program=self.model_program if model else None,
+                early_exit=early_exit,
+                donate=donate,
+            )
+
+        return self._cache.get(key, build)
+
     # -- internals -----------------------------------------------------------
     def _require_weights(self) -> jax.Array:
         if self._kernel is None:
@@ -647,6 +962,32 @@ class CompiledModel(CompiledFrontend):
             jnp.asarray(counts, jnp.float32),
             jnp.asarray(prev_eff, jnp.float32),
             jnp.asarray(window_keep),
+        )
+
+    # -- device-compiled segments --------------------------------------------
+    def run_segment_weighted(
+        self,
+        kernel: jax.Array,
+        bn_offset: jax.Array,
+        frames: Any,
+        *,
+        head_params: Any | None = None,
+        length: int | None = None,
+        state: "SegmentState | None" = None,
+        gate: Any = _USE_PROGRAM,
+        m_bucket: int | None = None,
+        early_exit: int | None = None,
+        donate: bool | None = None,
+    ) -> "SegmentResult":
+        """Model variant of :meth:`CompiledFrontend.run_segment_weighted`:
+        the per-tick head pass (skip-aware effective-map patch + logits) runs
+        inside the scan, carrying the previous effective map and logits on
+        the device.  ``result.logits`` is ``(K, n_classes)``."""
+        hp = self._require_head() if head_params is None else head_params
+        return self._dispatch_segment(
+            kernel, bn_offset, frames, length=length, state=state, gate=gate,
+            m_bucket=m_bucket, early_exit=early_exit, donate=donate,
+            head_params=hp,
         )
 
     # -- streaming -----------------------------------------------------------

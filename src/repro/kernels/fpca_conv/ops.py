@@ -53,6 +53,7 @@ __all__ = [
     "freeze_model",
     "thaw_model",
     "window_bucket",
+    "segment_bucket",
     "StickyBucket",
 ]
 
@@ -67,6 +68,33 @@ def window_bucket(n_keep: int, m_total: int) -> int:
     the masked impl serves the dense fallback (same outputs, no gather).
     """
     return min(1 << (max(n_keep, 1) - 1).bit_length(), m_total)
+
+
+def segment_bucket(
+    kept_counts,
+    m_total: int,
+    keyframes=None,
+) -> int:
+    """Compacted-row bucket for the NEXT segment, from the per-tick kept
+    counts of the last one (the between-segment half of the region-skip
+    servo: inside a compiled segment the bucket is static, so the host picks
+    it here at the boundary).
+
+    Keyframe ticks are held out — they keep everything by construction and
+    route through the segment's masked-dense branch anyway, so sizing the
+    compact branch off them would permanently pin the bucket at ``m_total``.
+    All-skipped ticks are ignored too (they launch nothing); a segment with
+    no informative tick at all yields the minimal bucket of 1, which the
+    overflow branch of the next segment absorbs if the scene wakes up.
+    """
+    kept = np.asarray(kept_counts, np.int64).reshape(-1)
+    if keyframes is not None:
+        kf = np.asarray(keyframes, bool).reshape(-1)
+        kept = kept[~kf]
+    kept = kept[kept > 0]
+    if kept.size == 0:
+        return 1
+    return window_bucket(int(kept.max()), int(m_total))
 
 
 class StickyBucket:

@@ -148,25 +148,7 @@ class GateController:
                 )
             )
             if abs(err) > cfg.deadband:
-                u = cfg.kp * err + cfg.ki * self._integral
-                step = float(np.clip(u, -cfg.max_step, cfg.max_step))
-                new_log = float(
-                    np.clip(
-                        self._log_thr + step,
-                        math.log(cfg.min_threshold),
-                        math.log(cfg.max_threshold),
-                    )
-                )
-                saturated = (step != u) or (new_log != self._log_thr + step)
-                self._integral = float(
-                    np.clip(
-                        cfg.leak * self._integral + (0.0 if saturated else err),
-                        -cfg.windup,
-                        cfg.windup,
-                    )
-                )
-                self._log_thr = new_log
-                self.threshold = math.exp(new_log)
+                self._actuate(err)
         self.history.append(
             {
                 "tick": self._tick,
@@ -177,4 +159,87 @@ class GateController:
             }
         )
         self._tick += 1
+        return self.threshold
+
+    def _actuate(self, err: float) -> None:
+        """One bounded PI step on the log-threshold (anti-windup as in
+        :meth:`observe` — the integrator freezes while saturated)."""
+        cfg = self.config
+        u = cfg.kp * err + cfg.ki * self._integral
+        step = float(np.clip(u, -cfg.max_step, cfg.max_step))
+        new_log = float(
+            np.clip(
+                self._log_thr + step,
+                math.log(cfg.min_threshold),
+                math.log(cfg.max_threshold),
+            )
+        )
+        saturated = (step != u) or (new_log != self._log_thr + step)
+        self._integral = float(
+            np.clip(
+                cfg.leak * self._integral + (0.0 if saturated else err),
+                -cfg.windup,
+                cfg.windup,
+            )
+        )
+        self._log_thr = new_log
+        self.threshold = math.exp(new_log)
+
+    def observe_segment(
+        self,
+        block_masks: "np.ndarray | list",
+        *,
+        keyframes: "np.ndarray | list | None" = None,
+        observations: "list[float | None] | None" = None,
+    ) -> float:
+        """Fold one device-compiled segment's per-tick gate masks into the
+        servo; returns the threshold the *next segment* should gate with.
+
+        A compiled segment serves K ticks from one launch, so the per-tick
+        actuation of :meth:`observe` cannot run — the threshold is traced
+        into the scan and constant for the whole segment.  This boundary
+        variant keeps the EMA per-tick honest (each non-keyframe tick folds
+        its own observation, keyframes held out exactly as in per-tick
+        serving, all ticks recorded in :attr:`history` at the segment's
+        constant threshold) and applies ONE bounded PI step at the end — so
+        a K-tick segment moves the threshold at most ``max_step`` nats, the
+        same actuation bound a single per-tick observation gets.
+        """
+        cfg = self.config
+        n = len(block_masks)
+        for i in range(n):
+            kf = bool(keyframes[i]) if keyframes is not None else False
+            observed: float | None = None
+            if not kf:
+                obs = observations[i] if observations is not None else None
+                observed = (
+                    obs if obs is not None
+                    else self._observation(np.asarray(block_masks[i]))
+                )
+                self._ema = (
+                    observed
+                    if self._ema is None
+                    else cfg.ema_alpha * observed
+                    + (1.0 - cfg.ema_alpha) * self._ema
+                )
+            self.history.append(
+                {
+                    "tick": self._tick,
+                    "threshold": self.threshold,
+                    "observed": observed,
+                    "ema": self._ema,
+                    "keyframe": kf,
+                }
+            )
+            self._tick += 1
+        if self._ema is not None:
+            err = float(
+                np.clip(
+                    (self._ema - cfg.target) / cfg.target,
+                    cfg.err_low,
+                    cfg.err_high,
+                )
+            )
+            if abs(err) > cfg.deadband:
+                self._actuate(err)
         return self.threshold

@@ -54,7 +54,12 @@ from repro.core.device_models import CircuitParams
 from repro.core.fpca_sim import WeightEncoding
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
 from repro.fpca.cache import ExecutableCache
-from repro.fpca.executable import CompiledFrontend, CompiledModel
+from repro.fpca.executable import (
+    _USE_PROGRAM,
+    CompiledFrontend,
+    CompiledModel,
+    SegmentResult,
+)
 from repro.fpca.program import (
     FPCAModelProgram,
     FPCAProgram,
@@ -105,8 +110,11 @@ class PipelineStats:
     windows_total: int = 0          # windows submitted (incl. batch padding)
     windows_executed: int = 0       # windows that actually reached the kernel
     launches_skipped: int = 0       # all-skipped batches short-circuited
+    #                                 (and in-scan zero-kept segment ticks)
     bucket_switches: int = 0        # served bucket-size transitions
     bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
+    segments: int = 0               # device-compiled segment launches
+    segment_ticks: int = 0          # ticks served from inside those launches
 
 
 class FPCAPipeline:
@@ -461,6 +469,64 @@ class FPCAPipeline:
         # fan-outs that actually launched a stacked call
         self.stats.fanout_batches += self.stats.batches - batches_before
         return counts
+
+    def run_config_segment(
+        self,
+        name: str,
+        frames: Any,
+        *,
+        state: Any | None = None,
+        gate: Any = _USE_PROGRAM,
+        m_bucket: int | None = None,
+        early_exit: int | None = None,
+    ) -> SegmentResult:
+        """Serve K streaming ticks of one registered configuration as ONE
+        device-compiled segment (``jax.lax.scan`` — see
+        :meth:`repro.fpca.CompiledFrontend.run_segment`).
+
+        ``frames`` is ``(K, H, W, c_i)``; ``state`` threads the previous
+        segment's :attr:`SegmentResult.state`.  Model configurations serve
+        per-tick logits through the in-scan skip-aware head.  Handle
+        counters (including the in-scan zero-kept launch skips and the
+        ``segments`` / ``segment_ticks`` pair) are mirrored into ``stats``
+        exactly like per-tick batches.
+        """
+        cfg = self._configs.get(name)
+        if cfg is None:
+            raise KeyError(f"unknown config {name!r}")
+        if isinstance(cfg, ProgrammedModel):
+            handle: CompiledFrontend = self.model_handle_for(cfg.model)
+        else:
+            handle = self.handle_for(cfg.program, int(cfg.kernel.shape[0]))
+        hs = handle.stats
+        before = (
+            hs.runs, hs.windows_total, hs.windows_executed,
+            hs.launches_skipped, hs.segments, hs.segment_ticks,
+        )
+        cbefore = self._cache.counters()
+        kwargs: dict[str, Any] = dict(
+            state=state, gate=gate, m_bucket=m_bucket, early_exit=early_exit
+        )
+        if isinstance(cfg, ProgrammedModel):
+            seg = handle.run_segment_weighted(
+                cfg.kernel, cfg.bn_offset, frames,
+                head_params=cfg.head_params, **kwargs,
+            )
+        else:
+            seg = handle.run_segment_weighted(
+                cfg.kernel, cfg.bn_offset, frames, **kwargs
+            )
+        self.stats.batches += hs.runs - before[0]
+        self.stats.windows_total += hs.windows_total - before[1]
+        self.stats.windows_executed += hs.windows_executed - before[2]
+        self.stats.launches_skipped += hs.launches_skipped - before[3]
+        self.stats.segments += hs.segments - before[4]
+        self.stats.segment_ticks += hs.segment_ticks - before[5]
+        hits, misses, evictions = self._cache.counters()
+        self.stats.cache_hits += hits - cbefore[0]
+        self.stats.cache_misses += misses - cbefore[1]
+        self.stats.evictions += evictions - cbefore[2]
+        return seg
 
     def _stacked_planes(
         self, names: Sequence[str], cfgs: Sequence[ProgrammedConfig]

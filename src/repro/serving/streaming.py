@@ -73,7 +73,7 @@ from typing import Any, Iterable, Iterator, Mapping, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import analysis, mapping
+from repro.core import analysis, gating, mapping
 from repro.fpca.program import (
     DeltaGateConfig,
     GateControllerConfig,
@@ -97,13 +97,14 @@ _USE_SERVER = object()   # add_stream sentinel: "inherit the server default"
 
 
 def _effective_frame(frame: np.ndarray, spec: mapping.FPCASpec) -> np.ndarray:
-    """Frame as the pixel array sees it: binned (average pool) grayscale."""
-    img = np.asarray(frame, np.float32).mean(axis=-1)
-    b = spec.binning
-    if b > 1:
-        h, w = img.shape
-        img = img[: h // b * b, : w // b * b].reshape(h // b, b, w // b, b).mean((1, 3))
-    return img
+    """Frame as the pixel array sees it: binned (average pool) grayscale.
+
+    Evaluated through the jitted :mod:`repro.core.gating` kernel — the SAME
+    jnp numerics the device-compiled segment executor inlines into its scan —
+    so host and device gate decisions compare identical float32 bits (the
+    segment parity contract)."""
+    kernels = gating.host_gate_kernels(spec)
+    return np.asarray(kernels.eff(np.asarray(frame, np.float32)))
 
 
 def _block_reduce_mean(x: np.ndarray, block: int) -> np.ndarray:
@@ -124,8 +125,15 @@ def block_delta(
     prev_eff: np.ndarray, cur_eff: np.ndarray, spec: mapping.FPCASpec
 ) -> np.ndarray:
     """Mean absolute per-block change between two *effective* (binned)
-    frames — the statistic every per-config threshold compares against."""
-    return _block_reduce_mean(np.abs(cur_eff - prev_eff), spec.skip_block)
+    frames — the statistic every per-config threshold compares against.
+    Jitted :mod:`repro.core.gating` numerics, bit-shared with the in-scan
+    gate (see :func:`_effective_frame`)."""
+    kernels = gating.host_gate_kernels(spec)
+    return np.asarray(
+        kernels.delta(
+            np.asarray(prev_eff, np.float32), np.asarray(cur_eff, np.float32)
+        )
+    )
 
 
 def block_delta_mask(
@@ -178,7 +186,10 @@ class _GateState:
         """Advance this config's gate by one frame (``delta_blocks`` is the
         shared per-block |Δ| grid, ``None`` on the first frame)."""
         if delta_blocks is not None:
-            changed = delta_blocks > self.gate.threshold
+            # float32 threshold on BOTH sides (numpy promotes the comparison
+            # otherwise) — the same comparison the in-scan gate traces, so a
+            # delta within 1 ulp of the threshold decides identically
+            changed = delta_blocks > np.float32(self.gate.threshold)
             self.age = np.where(changed, 0, self.age + 1)
         keyframe = delta_blocks is None or (
             self.gate.keyframe_interval > 0
@@ -255,6 +266,9 @@ class StreamSession:
         # running frontend output with each tick's kept windows patched in —
         # what the skip-aware digital head classifies
         self._eff: dict[str, Any] = {}
+        # device-resident carry threaded between compiled segment launches
+        # (None until the stream first serves a segment)
+        self._segment_state: Any | None = None
 
         def _pick(mapping_or_one: Any, name: str, kind: str) -> Any:
             if isinstance(mapping_or_one, Mapping):
@@ -354,10 +368,20 @@ class StreamSession:
         if not self.gating:
             self.frame_idx += 1
             return None
-        cur = _effective_frame(frame, self.spec)
+        kernels = gating.host_gate_kernels(self.spec)
         delta_blocks = None
-        if self._prev is not None:
-            delta_blocks = block_delta(self._prev, cur, self.spec)
+        if self._prev is None:
+            cur = np.asarray(kernels.eff(np.asarray(frame, np.float32)))
+        else:
+            # ONE fused dispatch per tick (effective frame + block delta):
+            # the gate result is needed synchronously to build this tick's
+            # window mask, so per-call overhead sits on the serving hot loop
+            cur_d, delta_d = kernels.step(
+                np.asarray(self._prev, np.float32),
+                np.asarray(frame, np.float32),
+            )
+            cur = np.asarray(cur_d)
+            delta_blocks = np.asarray(delta_d)
         union_keep: np.ndarray | None = None
         union_window: np.ndarray | None = None
         for st in self._states:
@@ -371,6 +395,63 @@ class StreamSession:
         self.frame_idx += 1
         self.last_window_mask = union_window
         return union_keep
+
+    def absorb_segment(self, seg) -> None:
+        """Fold one finished device-compiled segment into this session.
+
+        A segment serves K ticks from one launch; the host session never saw
+        those frames, so its mirror of the gate state (previous frame, block
+        ages, frame index, mask history, servo) is rebuilt here from the
+        segment's realised bookkeeping — after this call, per-tick
+        :meth:`step` serving continues bit-identically from where the
+        segment stopped, and :meth:`energy_report` /
+        :meth:`GateController.converged_tick` audits cover the in-segment
+        ticks as if they had been served one by one.  The servo applies ONE
+        bounded actuation at the boundary
+        (:meth:`GateController.observe_segment`).
+        """
+        if self.per_config:
+            raise NotImplementedError(
+                "compiled segments serve one gate per stream; per-config "
+                "fan-out streams must use per-tick serving"
+            )
+        ticks = seg.ticks
+        if not seg.gated or not self.gating:
+            if seg.gated != self.gating:
+                raise ValueError(
+                    "segment gating does not match this session "
+                    f"(segment gated={seg.gated}, session gating={self.gating})"
+                )
+            self.frame_idx += ticks
+            return
+        st = self._primary
+        masks = [np.asarray(m) for m in seg.block_masks[:ticks]]
+        for m in masks:
+            st.block_masks.append(m)
+        if ticks:
+            st.last_keyframe = bool(seg.keyframes[ticks - 1])
+            st.last_block_mask = masks[-1]
+            window = mapping.active_window_mask(self.spec, masks[-1])
+            st.last_window_mask = window
+            self.last_window_mask = window
+        st.age = np.asarray(seg.state.age, np.int64)
+        self._prev = np.asarray(seg.state.prev_eff, np.float32)
+        self.frame_idx = int(seg.state.frame_idx)
+        if st.controller is not None and ticks:
+            obs = None
+            if st.controller.config.metric == "keep":
+                h_o, w_o = mapping.output_dims(self.spec)
+                obs = [
+                    float(k) / float(h_o * w_o)
+                    for k in seg.kept_windows[:ticks]
+                ]
+            new_thr = st.controller.observe_segment(
+                masks,
+                keyframes=seg.keyframes[:ticks],
+                observations=obs,
+            )
+            if new_thr != st.gate.threshold:
+                st.gate = dataclasses.replace(st.gate, threshold=new_thr)
 
     def energy_report(
         self,
@@ -435,9 +516,13 @@ class StreamStats:
     frames: int = 0
     windows_total: int = 0
     windows_kept: int = 0           # logical kept windows (pre-bucket-pad)
-    launches_skipped: int = 0       # all-skipped ticks (no kernel launch)
+    launches_skipped: int = 0       # all-skipped ticks — per-tick serving
+    #                                 short-circuits AND zero-kept ticks
+    #                                 inside device-compiled segments
     bucket_switches: int = 0        # served bucket-size transitions
     bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
+    segments: int = 0               # device-compiled segment launches
+    segment_ticks: int = 0          # ticks served from inside those launches
 
 
 class StreamServer:
@@ -765,3 +850,173 @@ class StreamServer:
         """
         for results in self.run({stream_id: f} for f in frames):
             yield from results
+
+    # -- device-compiled segment mode ----------------------------------------
+    def run_segment(
+        self,
+        stream_id: str,
+        frames: Any,
+        *,
+        m_bucket: int | None = None,
+        early_exit: int | None = None,
+    ) -> list[StreamFrameResult]:
+        """Serve a ``(K, H, W, c_i)`` frame stack of one stream as ONE
+        device-compiled segment (``jax.lax.scan`` tick loop — see
+        :meth:`repro.fpca.CompiledFrontend.run_segment`).
+
+        The session's gate runs *inside* the scan (bit-identical decisions —
+        the host mirror is rebuilt from the segment's realised bookkeeping by
+        :meth:`StreamSession.absorb_segment`, so per-tick :meth:`run` serving
+        and segment serving interleave freely on one stream).  The threshold
+        servo applies one bounded step at the segment boundary; with a
+        ``"keep"``-metric controller the next segment's compacted row bucket
+        defaults to the finished segment's realised kept counts.  Returns the
+        per-tick results in frame order (fewer than K with ``early_exit`` —
+        feed the unserved tail to the next call).  Single-config streams
+        only; per-config fan-out must use per-tick :meth:`run`.
+        """
+        session = self.sessions.get(stream_id)
+        if session is None:
+            raise KeyError(f"unknown stream {stream_id!r}")
+        if session.per_config or len(session.configs) > 1:
+            raise NotImplementedError(
+                "segment mode serves single-config streams; multi-config "
+                "fan-out must use per-tick run()"
+            )
+        name = session.config
+        state = session._segment_state
+        if state is not None and int(state.frame_idx) != session.frame_idx:
+            # per-tick serving advanced the stream since the last segment;
+            # the device carry is stale — rebuild it from the host mirror
+            state = None
+        if state is None and session.frame_idx > 0:
+            state = self._state_from_session(session, name)
+        start_idx = session.frame_idx
+        pstats = self.pipeline.stats
+        before = (pstats.launches_skipped, pstats.segments, pstats.segment_ticks)
+        seg = self.pipeline.run_config_segment(
+            name,
+            frames,
+            state=state,
+            gate=session.gate if session.gating else None,
+            m_bucket=m_bucket,
+            early_exit=early_exit,
+        )
+        session._segment_state = seg.state
+        cfg = self.pipeline._configs[name]
+        is_model = isinstance(cfg, ProgrammedModel)
+        if is_model:
+            session._eff[name] = seg.state.eff
+        session.absorb_segment(seg)
+        # a boundary servo step retunes the threshold for the NEXT segment —
+        # the traced gate args pick it up without recompiling
+        self.stats.launches_skipped += pstats.launches_skipped - before[0]
+        self.stats.segments += pstats.segments - before[1]
+        self.stats.segment_ticks += pstats.segment_ticks - before[2]
+        ticks = seg.ticks
+        h_o, w_o = mapping.output_dims(session.spec)
+        total = h_o * w_o
+        self.stats.ticks += ticks
+        self.stats.frames += ticks
+        self.stats.windows_total += ticks * total
+        self.stats.windows_kept += int(seg.kept_windows[:ticks].sum())
+        counts = np.asarray(seg.counts)        # blocks until the scan is done
+        logits = None if seg.logits is None else np.asarray(seg.logits)
+        results = []
+        for t in range(ticks):
+            results.append(
+                StreamFrameResult(
+                    stream_id=stream_id,
+                    frame_idx=start_idx + t,
+                    counts=counts[t],
+                    block_mask=(
+                        np.asarray(seg.block_masks[t]) if seg.gated else None
+                    ),
+                    kept_windows=int(seg.kept_windows[t]),
+                    total_windows=total,
+                    config=name,
+                    logits=None if logits is None else logits[t],
+                )
+            )
+        return results
+
+    def _state_from_session(self, session: StreamSession, name: str):
+        """Segment carry seeded from per-tick host state, so a stream that
+        served ticks through :meth:`run` can continue in segment mode."""
+        from repro.fpca.executable import SegmentState
+
+        spec = session.spec
+        prev = session._prev
+        st = session._primary
+        bh = math.ceil(spec.eff_h / spec.skip_block)
+        bw = math.ceil(spec.eff_w / spec.skip_block)
+        hyst = session.gate.hysteresis if session.gate is not None else 0
+        state = SegmentState(
+            has_prev=prev is not None,
+            prev_eff=(
+                prev
+                if prev is not None
+                else np.zeros((spec.eff_h, spec.eff_w), np.float32)
+            ),
+            age=(
+                st.age if st is not None
+                else np.full((bh, bw), hyst + 1, np.int64)
+            ),
+            frame_idx=session.frame_idx,
+        )
+        cfg = self.pipeline._configs[name]
+        if isinstance(cfg, ProgrammedModel):
+            h_o, w_o = mapping.output_dims(spec)
+            eff = session._eff.get(name)
+            if eff is None:
+                eff = jnp.zeros((h_o, w_o, cfg.out_channels), jnp.float32)
+            state.eff = eff
+            # the scan's quiet-tick branch replays the carried logits; the
+            # host path recomputes head(eff) each tick, which is the same bits
+            handle = self.pipeline.model_handle_for(cfg.model)
+            state.logits = handle.head_logits(
+                eff, head_params=cfg.head_params
+            )
+        return state
+
+    def serve_segments(
+        self,
+        stream_id: str,
+        frames: Iterable[Any],
+        *,
+        segment_length: int = 16,
+        m_bucket: int | None = None,
+        early_exit: int | None = None,
+    ) -> Iterator[StreamFrameResult]:
+        """Segment-mode twin of :meth:`serve`: buffers the frame iterable
+        into ``segment_length`` chunks and serves each as one compiled
+        segment, yielding per-tick results in frame order.
+
+        With ``early_exit`` a segment may serve fewer than ``segment_length``
+        ticks; the unserved tail is carried into the next chunk.  The final
+        partial chunk compiles one executable for its own length — steady
+        streams see exactly one compile per distinct chunk length.
+        """
+        if segment_length < 1:
+            raise ValueError("segment_length must be >= 1")
+        buf: list[np.ndarray] = []
+        for f in frames:
+            buf.append(np.asarray(f, np.float32))
+            if len(buf) >= segment_length:
+                results = self.run_segment(
+                    stream_id,
+                    np.stack(buf[:segment_length]),
+                    m_bucket=m_bucket,
+                    early_exit=early_exit,
+                )
+                yield from results
+                buf = buf[len(results):]
+        while buf:
+            results = self.run_segment(
+                stream_id,
+                np.stack(buf),
+                m_bucket=m_bucket,
+                early_exit=early_exit,
+            )
+            yield from results
+            buf = buf[len(results):]
