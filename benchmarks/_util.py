@@ -14,20 +14,11 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import numpy as np
+# single source for the non-finite-float sanitiser: the telemetry JSONL
+# writer and the benchmark artifacts must agree on what strict JSON means
+from repro.fpca.telemetry import jsonable
 
-
-def jsonable(obj):
-    """Recursively map non-finite floats (inf / -inf / NaN) to None."""
-    if isinstance(obj, dict):
-        return {k: jsonable(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [jsonable(v) for v in obj]
-    if isinstance(obj, (np.floating, np.integer)):
-        obj = obj.item()
-    if isinstance(obj, float) and not np.isfinite(obj):
-        return None
-    return obj
+__all__ = ["jsonable", "write_json"]
 
 
 def write_json(path: Path, record: dict) -> None:

@@ -34,12 +34,15 @@ from repro.core import analysis
 from repro.core.curvefit import fit_bucket_model
 from repro.core.mapping import FPCASpec, output_dims
 from repro.data.pipeline import SyntheticMovingObject
-from repro.fpca import DeltaGateConfig, DenseSpec, compile as fpca_compile
+from repro.fpca import DeltaGateConfig, DenseSpec, telemetry
+from repro.fpca import compile as fpca_compile
 from repro.configs.fpca_cnn import make_model_program
 from repro.serving.fpca_pipeline import FPCAPipeline
+from repro.serving.observe import fleet_report
 from repro.serving.streaming import StreamServer
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_model.json"
+TELEMETRY_JSONL = Path(__file__).resolve().parents[1] / "telemetry_model.jsonl"
 
 # Same operating point as stream_bench: c_o = 32 puts real matmul-bank work
 # behind every window, so the masked win measures compute, not dispatch.
@@ -122,6 +125,17 @@ def run() -> list[Row]:
     t_scan, _ = _serve_scan(m_bucket=scan_bucket)
     fps_scan = N_FRAMES * N_STREAMS / t_scan
 
+    # telemetry lane: same scan workload with a live session (uploaded by
+    # the CI bench-smoke job next to the stream bench's JSONL)
+    telemetry.enable(
+        TELEMETRY_JSONL, device_time_rate=4,
+        run_labels={"bench": "model_scan_segment"},
+    )
+    t_scan_tel, tel_server = _serve_scan(m_bucket=scan_bucket)
+    fleet = fleet_report(tel_server)
+    n_events = telemetry.session().events_written
+    telemetry.disable()
+
     n_served = N_FRAMES * N_STREAMS
     fps_gated = n_served / t_gated
     fps_dense = n_served / t_dense
@@ -169,6 +183,13 @@ def run() -> list[Row]:
             "model_energy_vs_dense": rep["model_energy_vs_dense"],
             "model_latency_vs_dense": rep["model_latency_vs_dense"],
             "model_fps_effective": rep["model_fps_effective"],
+        },
+        "telemetry": {
+            "jsonl": TELEMETRY_JSONL.name,
+            "events": n_events,
+            "s_total_enabled": t_scan_tel,
+            "enabled_overhead_frac": t_scan_tel / t_scan - 1.0,
+            "fleet_report": fleet,
         },
     }
     write_json(BENCH_JSON, record)

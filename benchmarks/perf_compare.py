@@ -15,6 +15,11 @@ Model mode — diff the end-to-end classifier benchmark (``BENCH_model.json``,
 fused frontend + digital head) against the frontend-only baseline:
 
     PYTHONPATH=src python -m benchmarks.perf_compare --model
+
+Telemetry mode — render the fleet report and overhead-guard numbers the
+benches recorded under their ``telemetry`` sections:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --telemetry
 """
 
 from __future__ import annotations
@@ -131,6 +136,27 @@ def compare_model(frontend_path: Path, model_path: Path) -> None:
           f"fps_effective {sm['model_fps_effective']:.0f}")
 
 
+def show_telemetry(path: Path) -> None:
+    """Render the ``telemetry`` section a bench recorded (fleet table,
+    overhead guard, JSONL pointer) — ``--telemetry`` mode."""
+    rec = json.loads(path.read_text())
+    tel = rec.get("telemetry")
+    if not tel:
+        print(f"telemetry ({path.name}): no telemetry section — "
+              f"re-run the bench to record one")
+        return
+    print(f"telemetry ({path.name}): {tel['events']} JSONL events "
+          f"-> {tel['jsonl']}")
+    if "disabled_overhead_frac" in tel:
+        print(f"  disabled-hook overhead    : "
+              f"{tel['disabled_overhead_frac']:.2e} of the scan lane "
+              f"(guard: <= 0.02)")
+    print(f"  enabled-session overhead  : "
+          f"{tel['enabled_overhead_frac']:+.1%} scan wall time")
+    from repro.serving.observe import render_fleet_report
+    print(render_fleet_report(tel["fleet_report"]))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("base_tag", nargs="?")
@@ -140,6 +166,9 @@ def main() -> None:
                     help="diff BENCH_stream.json vs BENCH_frontend.json")
     ap.add_argument("--model", action="store_true",
                     help="diff BENCH_model.json vs BENCH_frontend.json")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="render the telemetry sections (fleet report, "
+                         "overhead guard) of BENCH_stream/BENCH_model")
     ap.add_argument("--frontend-json", type=Path, default=REPO / "BENCH_frontend.json")
     ap.add_argument("--stream-json", type=Path, default=REPO / "BENCH_stream.json")
     ap.add_argument("--model-json", type=Path, default=REPO / "BENCH_model.json")
@@ -148,7 +177,11 @@ def main() -> None:
         compare_stream(args.frontend_json, args.stream_json)
     if args.model:
         compare_model(args.frontend_json, args.model_json)
-    if args.stream or args.model:
+    if args.telemetry:
+        for p in (args.stream_json, args.model_json):
+            if p.exists():
+                show_telemetry(p)
+    if args.stream or args.model or args.telemetry:
         return
     if not (args.base_tag and args.new_tag and args.cell):
         ap.error("dry-run mode needs base_tag, new_tag and --cell "

@@ -13,15 +13,25 @@ energy envelope.  The pipeline's sticky row buckets
 ticks would otherwise cause, and the camera is fanned out to TWO programmed
 configurations (an "edges" and a "blobs" kernel bank) served by ONE
 channel-stacked fused call per tick.
+
+The whole run serves under a live telemetry session
+(``telemetry.enable``): every serve tick is a traced span, every servo
+actuation is a JSONL event, and the closing fleet report / Prometheus
+snapshot come straight off the same registry cells the stats objects
+read — nothing is recorded twice.
 """
+
+import tempfile
+from pathlib import Path
 
 import numpy as np
 
 from repro.core.curvefit import fit_bucket_model
 from repro.core.mapping import FPCASpec
 from repro.data.pipeline import SyntheticMovingObject
-from repro.fpca import DeltaGateConfig, GateControllerConfig
+from repro.fpca import DeltaGateConfig, GateControllerConfig, telemetry
 from repro.serving.fpca_pipeline import FPCAPipeline
+from repro.serving.observe import fleet_report, render_fleet_report
 from repro.serving.streaming import StreamServer
 
 H = W = 96
@@ -63,6 +73,10 @@ def main() -> None:
     )
     cam = SyntheticMovingObject((H, W), seed=1, radius=12.0)
 
+    jsonl = Path(tempfile.gettempdir()) / "adaptive_stream_telemetry.jsonl"
+    telemetry.enable(jsonl, device_time_rate=8,
+                     run_labels={"example": "adaptive_stream"})
+
     print(f"\nservoing gate threshold to a {TARGET:.0%} kept-window budget:")
     print(f"{'tick':>4} {'threshold':>10} {'kept EMA':>9}  configs served")
     n_results = 0
@@ -96,6 +110,21 @@ def main() -> None:
     print(f"\nsensor accounting over {rep['frames']} frames: "
           f"kept {rep['kept_window_frac']:.1%} of windows, "
           f"energy {rep['energy_vs_dense']:.2f}x dense")
+
+    # -- telemetry export surfaces --------------------------------------
+    print("\nfleet report (per stream x config):")
+    print(render_fleet_report(fleet_report(server)))
+    n_events = telemetry.session().events_written
+    telemetry.disable()
+    events = telemetry.read_jsonl(jsonl)
+    spans = sum(1 for e in events if e["event"] == "span")
+    servo = sum(1 for e in events if e["event"] == "servo_actuate")
+    print(f"\ntelemetry: {n_events} JSONL events -> {jsonl} "
+          f"({spans} spans, {servo} servo actuations)")
+    snap = telemetry.registry().render()
+    line = next(l for l in snap.splitlines()
+                if l.startswith("fpca_gate_threshold"))
+    print(f"prometheus snapshot: {len(snap.splitlines())} lines, e.g. {line}")
 
 
 if __name__ == "__main__":

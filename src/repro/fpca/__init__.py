@@ -29,7 +29,10 @@ Layer map:
   :class:`CompiledFrontend` (bounded executable LRU, sticky region-skip
   buckets, mesh sharding, stats);
 * :mod:`repro.fpca.cache`      — the introspectable
-  :class:`ExecutableCache` / :class:`CacheInfo`.
+  :class:`ExecutableCache` / :class:`CacheInfo`;
+* :mod:`repro.fpca.telemetry`  — the process-wide metrics registry every
+  stats object reports into, span traces
+  (``telemetry.enable(jsonl_path=...)``) and opt-in device-profile hooks.
 
 The batch scheduler (:class:`repro.serving.fpca_pipeline.FPCAPipeline`) and
 the streaming fleet server (:class:`repro.serving.streaming.StreamServer`)
@@ -49,7 +52,8 @@ from repro.fpca.backends import (
     get_backend,
     register_backend,
 )
-from repro.fpca.cache import CacheInfo, ExecutableCache
+from repro.fpca import telemetry
+from repro.fpca.cache import CacheInfo, CacheInfoVerbose, ExecutableCache
 from repro.fpca.executable import (
     CompiledFrontend,
     CompiledModel,
@@ -98,6 +102,9 @@ __all__ = [
     "FrontendStats",
     "ExecutableCache",
     "CacheInfo",
+    "CacheInfoVerbose",
+    # observability (metrics registry, span traces, device hooks)
+    "telemetry",
     # device-compiled streaming segments
     "SegmentState",
     "SegmentResult",

@@ -77,6 +77,19 @@ class Backend:
     bucket_sensitive: bool = True
     description: str = ""
 
+    def instrumented(self, fn: Callable, *, site: str) -> Callable:
+        """Wrap a jitted closure with the opt-in device-profile hooks
+        (:func:`repro.fpca.telemetry.instrument_launch`): launch counting,
+        ``jax.profiler.TraceAnnotation`` tagging and rate-limited
+        ``block_until_ready`` device-time sampling, all labeled
+        ``{site, backend}``.  :class:`repro.fpca.CompiledFrontend` routes
+        every cache-built executable through this, so third-party backends
+        registered via :func:`register_backend` are covered uniformly.
+        Disabled-mode cost is one ``is None`` check per call."""
+        from repro.fpca.telemetry import instrument_launch
+
+        return instrument_launch(fn, site=site, backend=self.name)
+
     def make_model_executable(
         self,
         model_program,                      # repro.fpca.FPCAModelProgram

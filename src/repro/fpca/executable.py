@@ -36,8 +36,9 @@ import numpy as np
 from repro.core import gating
 from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
+from repro.fpca import telemetry
 from repro.fpca.backends import Backend, default_backend_name, get_backend
-from repro.fpca.cache import CacheInfo, ExecutableCache
+from repro.fpca.cache import CacheInfo, CacheInfoVerbose, ExecutableCache
 from repro.fpca.program import FPCAProgram
 from repro.kernels.fpca_conv.ops import StickyBucket, segment_bucket
 from repro.launch.mesh import data_axes, data_extent
@@ -54,24 +55,45 @@ __all__ = [
 _USE_PROGRAM = object()   # stream() sentinel: "inherit from program"
 
 
-@dataclasses.dataclass
-class FrontendStats:
-    """Per-handle serving counters (all monotonic)."""
+class FrontendStats(telemetry.StatsView):
+    """Per-handle serving counters (all monotonic) — thin views over
+    :mod:`repro.fpca.telemetry` registry cells.
 
-    runs: int = 0                   # fused executable invocations
-    reprograms: int = 0             # NVM weight rewrites
-    windows_total: int = 0          # windows submitted (incl. batch padding)
-    windows_executed: int = 0       # windows that actually reached the kernel
-    launches_skipped: int = 0       # all-skipped ticks that launched no kernel
-    #                                 (per-tick short-circuits AND in-scan
-    #                                 zero-kept ticks of compiled segments)
-    bucket_switches: int = 0        # served bucket-size transitions
-    bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
-    segments: int = 0               # device-compiled segment launches
-    segment_ticks: int = 0          # ticks served from inside those launches
+    Fields (in ``snapshot()`` order):
 
-    def snapshot(self) -> tuple[int, ...]:
-        return dataclasses.astuple(self)
+    * ``runs``              — fused executable invocations
+    * ``reprograms``        — NVM weight rewrites
+    * ``windows_total``     — windows submitted (incl. batch padding)
+    * ``windows_executed``  — windows that actually reached the kernel
+    * ``launches_skipped``  — all-skipped ticks that launched no kernel
+      (per-tick short-circuits AND in-scan zero-kept ticks of compiled
+      segments)
+    * ``bucket_switches``   — served bucket-size transitions
+    * ``bucket_shrinks_deferred`` — flap events sticky hysteresis absorbed
+    * ``segments``          — device-compiled segment launches
+    * ``segment_ticks``     — ticks served from inside those launches
+
+    When the handle is owned by a :class:`repro.serving.FPCAPipeline` the
+    cells are parent-chained into the pipeline's ``PipelineStats`` (same
+    field names), so every increment lands in exactly one place and the
+    fleet totals can never drift from the per-handle counters.
+    """
+
+    _PREFIX = "fpca_frontend"
+    # fleet wiring: a handle run is one pipeline batch; reprograms stay
+    # per-handle (no pipeline-level counterpart)
+    _PARENT_MAP = {"runs": "batches", "reprograms": None}
+    _FIELDS = (
+        "runs",
+        "reprograms",
+        "windows_total",
+        "windows_executed",
+        "launches_skipped",
+        "bucket_switches",
+        "bucket_shrinks_deferred",
+        "segments",
+        "segment_ticks",
+    )
 
 
 @dataclasses.dataclass
@@ -168,6 +190,7 @@ class CompiledFrontend:
         cache_capacity: int = 8,
         bucket_patience: int = 1,
         interpret: bool | None = None,
+        stats_parent: telemetry.StatsView | None = None,
     ):
         if bucket_patience < 1:
             raise ValueError("bucket_patience must be >= 1")
@@ -182,7 +205,10 @@ class CompiledFrontend:
         self._sticky: dict[int, StickyBucket] = {}   # keyed by padded window count
         self._kernel: jax.Array | None = None
         self._bn: jax.Array | None = None
-        self.stats = FrontendStats()
+        # parent-chained when a pipeline owns the handle: shared-name fields
+        # (windows_executed, launches_skipped, ...) single-source into the
+        # pipeline's PipelineStats cells
+        self.stats = FrontendStats(parent=stats_parent)
 
     # -- introspection -------------------------------------------------------
     @property
@@ -209,12 +235,14 @@ class CompiledFrontend:
     def signature(self) -> tuple:
         return self._sig
 
-    def cache_info(self) -> CacheInfo:
+    def cache_info(self, verbose: bool = False) -> CacheInfo | CacheInfoVerbose:
         """LRU executable-cache counters (``hits/misses/evictions/currsize``).
 
         ``misses`` counts compiles: it must not move across
-        :meth:`reprogram` — the field-programmability contract."""
-        return self._cache.info()
+        :meth:`reprogram` — the field-programmability contract.
+        ``verbose=True`` adds the per-signature hit/miss breakdown, the
+        resident keys in LRU order, and the bounded eviction history."""
+        return self._cache.info(verbose=verbose)
 
     def reset_bucket_state(self) -> None:
         """Forget sticky row-bucket state (counters in ``stats`` remain)."""
@@ -250,9 +278,10 @@ class CompiledFrontend:
                 f"bn_offset shape {tuple(bn_offset.shape)} != "
                 f"({self.out_channels},)"
             )
-        self._kernel = kernel
-        self._bn = bn_offset
-        self.stats.reprograms += 1
+        with telemetry.span("reprogram"):
+            self._kernel = kernel
+            self._bn = bn_offset
+            self.stats.reprograms += 1
         return self
 
     # -- execution -----------------------------------------------------------
@@ -294,7 +323,10 @@ class CompiledFrontend:
                 window_keep = np.stack(
                     [active_window_mask(self.spec, m) for m in block_mask]
                 )
-        counts = self.run_weighted(self._kernel, self._bn, images, window_keep)
+        with telemetry.span("run"):
+            counts = self.run_weighted(
+                self._kernel, self._bn, images, window_keep
+            )
         return counts[0] if squeeze else counts
 
     def run_weighted(
@@ -436,7 +468,7 @@ class CompiledFrontend:
             else controller
         )
         ctl = (
-            GateController(cconf, self.spec, gate.threshold)
+            GateController(cconf, self.spec, gate.threshold, name=stream_id)
             if (cconf is not None and gate is not None)
             else None
         )
@@ -461,14 +493,20 @@ class CompiledFrontend:
         state: dict = {}   # per-ITERATOR stream state (e.g. the model's
         #                    effective activation map) — two concurrent
         #                    stream() iterators must never share it
+        span_fields = {"stream": stream_id}  # prebuilt: no per-tick churn
         for frame in frames:
-            frame = np.asarray(frame, np.float32)
-            frame_idx = session.frame_idx
-            block = session.step(frame)
-            window = session.last_window_mask if gate is not None else None
-            kept = int(window.sum()) if window is not None else h_o * w_o
-            entry = {"frame_idx": frame_idx, "block_mask": block, "kept": kept}
-            entry.update(self._stream_launch(frame, window, state))
+            with telemetry.span("serve_tick", span_fields):
+                frame = np.asarray(frame, np.float32)
+                frame_idx = session.frame_idx
+                block = session.step(frame)
+                window = (
+                    session.last_window_mask if gate is not None else None
+                )
+                kept = int(window.sum()) if window is not None else h_o * w_o
+                entry = {
+                    "frame_idx": frame_idx, "block_mask": block, "kept": kept
+                }
+                entry.update(self._stream_launch(frame, window, state))
             inflight.append(entry)
             while len(inflight) > depth:
                 yield _finalize(inflight.popleft())
@@ -566,7 +604,14 @@ class CompiledFrontend:
             head_params=None,
         )
 
-    def _dispatch_segment(
+    def _dispatch_segment(self, *args: Any, **kwargs: Any) -> SegmentResult:
+        if not telemetry.enabled():
+            return self._dispatch_segment_inner(*args, **kwargs)
+        with telemetry.span("run_segment",
+                            {"model": kwargs.get("head_params") is not None}):
+            return self._dispatch_segment_inner(*args, **kwargs)
+
+    def _dispatch_segment_inner(
         self,
         kernel: jax.Array,
         bn_offset: jax.Array,
@@ -714,18 +759,21 @@ class CompiledFrontend:
         )
 
         def build() -> Callable:
-            return self.backend.make_segment_executable(
-                self.model,
-                spec=self.spec,
-                adc=self.program.adc,
-                enc=self.program.enc,
-                interpret=self.interpret,
-                length=K,
-                gated=gated,
-                m_bucket=m_bucket,
-                model_program=self.model_program if model else None,
-                early_exit=early_exit,
-                donate=donate,
+            return self.backend.instrumented(
+                self.backend.make_segment_executable(
+                    self.model,
+                    spec=self.spec,
+                    adc=self.program.adc,
+                    enc=self.program.enc,
+                    interpret=self.interpret,
+                    length=K,
+                    gated=gated,
+                    m_bucket=m_bucket,
+                    model_program=self.model_program if model else None,
+                    early_exit=early_exit,
+                    donate=donate,
+                ),
+                site="segment",
             )
 
         return self._cache.get(key, build)
@@ -767,13 +815,16 @@ class CompiledFrontend:
             # owned by the closure, so LRU eviction genuinely frees the
             # executable (a shared module-level jit cache would keep them
             # alive).
-            return self.backend.make_executable(
-                self.model,
-                spec=self.spec,
-                adc=self.program.adc,
-                enc=self.program.enc,
-                interpret=self.interpret,
-                m_bucket=m_bucket,
+            return self.backend.instrumented(
+                self.backend.make_executable(
+                    self.model,
+                    spec=self.spec,
+                    adc=self.program.adc,
+                    enc=self.program.enc,
+                    interpret=self.interpret,
+                    m_bucket=m_bucket,
+                ),
+                site="frontend",
             )
 
         return self._cache.get(key, build)
@@ -879,9 +930,18 @@ class CompiledModel(CompiledFrontend):
         elif bn_offset is not None:
             super().reprogram(self._require_weights(), bn_offset)
         if head_params is not None:
-            self._head_params = self.model_program.bind_head_params(head_params)
             if kernel is None and bn_offset is None:
-                self.stats.reprograms += 1
+                # head-only rewrite: the base reprogram (and its span) did
+                # not run, so count and trace it here
+                with telemetry.span("reprogram"):
+                    self._head_params = self.model_program.bind_head_params(
+                        head_params
+                    )
+                    self.stats.reprograms += 1
+            else:
+                self._head_params = self.model_program.bind_head_params(
+                    head_params
+                )
         return self
 
     def _require_head(self) -> Any:
@@ -1021,11 +1081,14 @@ class CompiledModel(CompiledFrontend):
         key = self._model_sig + (self.backend.name, "model", m_bucket)
 
         def build() -> Callable:
-            return self.backend.make_model_executable(
-                self.model_program,
-                self.model,
-                interpret=self.interpret,
-                m_bucket=m_bucket,
+            return self.backend.instrumented(
+                self.backend.make_model_executable(
+                    self.model_program,
+                    self.model,
+                    interpret=self.interpret,
+                    m_bucket=m_bucket,
+                ),
+                site="model",
             )
 
         return self._cache.get(key, build)
@@ -1039,7 +1102,7 @@ class CompiledModel(CompiledFrontend):
             def run(head_params, counts):
                 return head(head_params, counts)
 
-            return run
+            return self.backend.instrumented(run, site="head")
 
         return self._cache.get(key, build)
 
@@ -1053,7 +1116,7 @@ class CompiledModel(CompiledFrontend):
                 eff = jnp.where(window_keep[..., None], counts, prev_eff)
                 return head(head_params, eff), eff
 
-            return run
+            return self.backend.instrumented(run, site="head_patch")
 
         return self._cache.get(key, build)
 
@@ -1071,6 +1134,7 @@ def compile(  # noqa: A001  (torch.compile-style public name)
     cache_capacity: int = 8,
     bucket_patience: int = 1,
     interpret: bool | None = None,
+    stats_parent: Any | None = None,
 ) -> CompiledFrontend:
     """Compile an :class:`FPCAProgram` into a held executable handle.
 
@@ -1100,6 +1164,9 @@ def compile(  # noqa: A001  (torch.compile-style public name)
       bucket_patience: sticky-bucket hysteresis for region-skip row buckets
         (``1`` = stateless).
       interpret: forwarded to Pallas (default: interpret off-TPU).
+      stats_parent: optional :class:`repro.fpca.telemetry.StatsView` whose
+        same-named cells receive every increment of the handle's stats
+        (how ``FPCAPipeline`` single-sources its fleet totals).
     """
     from repro.fpca.program import FPCAModelProgram
 
@@ -1115,25 +1182,27 @@ def compile(  # noqa: A001  (torch.compile-style public name)
         raise ValueError("head_params= needs an FPCAModelProgram")
     frontend = program.frontend if is_model else program
     be = get_backend(backend if backend is not None else default_backend_name())
-    if model is None:
-        model = fit_bucket_model(
-            frontend.circuit, n_pixels=frontend.spec.n_active_pixels
+    with telemetry.span("compile", {"backend": be.name, "model": is_model}):
+        if model is None:
+            model = fit_bucket_model(
+                frontend.circuit, n_pixels=frontend.spec.n_active_pixels
+            )
+        common = dict(
+            backend=be,
+            model=model,
+            mesh=mesh,
+            cache=cache,
+            cache_capacity=cache_capacity,
+            bucket_patience=bucket_patience,
+            interpret=interpret,
+            stats_parent=stats_parent,
         )
-    common = dict(
-        backend=be,
-        model=model,
-        mesh=mesh,
-        cache=cache,
-        cache_capacity=cache_capacity,
-        bucket_patience=bucket_patience,
-        interpret=interpret,
-    )
-    if is_model:
-        handle: CompiledFrontend = CompiledModel(
-            program, head_params=head_params, **common
-        )
-    else:
-        handle = CompiledFrontend(program, **common)
-    if weights is not None:
-        handle.reprogram(weights, bn_offset)
+        if is_model:
+            handle: CompiledFrontend = CompiledModel(
+                program, head_params=head_params, **common
+            )
+        else:
+            handle = CompiledFrontend(program, **common)
+        if weights is not None:
+            handle.reprogram(weights, bn_offset)
     return handle

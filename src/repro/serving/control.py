@@ -46,9 +46,26 @@ import math
 import numpy as np
 
 from repro.core import analysis, mapping
+from repro.fpca import telemetry
 from repro.fpca.program import GateControllerConfig
 
 __all__ = ["GateControllerConfig", "GateController"]
+
+# Servo observability: one labeled cell per controller, interned once at
+# construction so the per-tick updates are plain attribute writes (no dict
+# churn on the serving hot loop).
+_G_THRESHOLD = telemetry.registry().gauge(
+    "fpca_gate_threshold", "current delta-gate threshold per servo",
+    ("controller",), max_label_sets=128)
+_G_EMA = telemetry.registry().gauge(
+    "fpca_gate_ema", "budget-metric EMA per servo", ("controller",),
+    max_label_sets=128)
+_G_ERR = telemetry.registry().gauge(
+    "fpca_gate_servo_error", "last relative budget error per servo",
+    ("controller",), max_label_sets=128)
+_C_ACTUATIONS = telemetry.registry().counter(
+    "fpca_gate_actuations_total", "bounded PI steps applied per servo",
+    ("controller",), max_label_sets=128)
 
 
 class GateController:
@@ -67,13 +84,20 @@ class GateController:
         spec: mapping.FPCASpec,
         threshold: float,
         const: analysis.FrontendConstants | None = None,
+        name: str = "",
     ):
         self.config = config
         self.spec = spec
         self.const = const or analysis.FrontendConstants()
+        self.name = name or telemetry.registry().next_instance("gate")
+        self._g_thr = _G_THRESHOLD.labels(controller=self.name)
+        self._g_ema = _G_EMA.labels(controller=self.name)
+        self._g_err = _G_ERR.labels(controller=self.name)
+        self._c_act = _C_ACTUATIONS.labels(controller=self.name)
         self.threshold = float(
             np.clip(threshold, config.min_threshold, config.max_threshold)
         )
+        self._g_thr.set(self.threshold)
         self._log_thr = math.log(self.threshold)
         # dense baseline depends only on (spec, const): pay it once, not
         # per tick on the serving hot loop
@@ -147,6 +171,8 @@ class GateController:
                     (self._ema - cfg.target) / cfg.target, cfg.err_low, cfg.err_high
                 )
             )
+            self._g_ema.set(self._ema)
+            self._g_err.set(err)
             if abs(err) > cfg.deadband:
                 self._actuate(err)
         self.history.append(
@@ -184,6 +210,14 @@ class GateController:
         )
         self._log_thr = new_log
         self.threshold = math.exp(new_log)
+        self._c_act.add(1)
+        self._g_thr.set(self.threshold)
+        if telemetry.enabled():
+            telemetry.event(
+                "servo_actuate", controller=self.name, tick=self._tick,
+                err=err, step=step, saturated=saturated,
+                threshold=self.threshold, ema=self._ema,
+            )
 
     def observe_segment(
         self,
@@ -240,6 +274,8 @@ class GateController:
                     cfg.err_high,
                 )
             )
+            self._g_ema.set(self._ema)
+            self._g_err.set(err)
             if abs(err) > cfg.deadband:
                 self._actuate(err)
         return self.threshold

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
+import weakref
 from typing import Any, Sequence
 
 import jax
@@ -48,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import fpca as _fpca
+from repro.fpca import telemetry
 from repro.core.adc import ADCConfig
 from repro.core.curvefit import BucketCurvefitModel, fit_bucket_model
 from repro.core.device_models import CircuitParams
@@ -98,23 +100,73 @@ class FrontendRequest:
     block_mask: np.ndarray | None = None   # region skipping (§3.4.5)
 
 
-@dataclasses.dataclass
-class PipelineStats:
-    requests: int = 0
-    batches: int = 0                # fused kernel invocations
-    cache_hits: int = 0
-    cache_misses: int = 0
-    evictions: int = 0
-    merged_groups: int = 0          # cross-config channel-stacked batches
-    fanout_batches: int = 0         # multi-config stream fan-out calls
-    windows_total: int = 0          # windows submitted (incl. batch padding)
-    windows_executed: int = 0       # windows that actually reached the kernel
-    launches_skipped: int = 0       # all-skipped batches short-circuited
-    #                                 (and in-scan zero-kept segment ticks)
-    bucket_switches: int = 0        # served bucket-size transitions
-    bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
-    segments: int = 0               # device-compiled segment launches
-    segment_ticks: int = 0          # ticks served from inside those launches
+class PipelineStats(telemetry.StatsView):
+    """Fleet-level serving counters — registry cells, single-sourced.
+
+    Fields:
+
+    * ``requests``       — frames accepted by :meth:`FPCAPipeline.serve`
+    * ``batches``        — fused kernel invocations (fed by the handles'
+      ``runs`` cells through the parent chain)
+    * ``merged_groups``  — cross-config channel-stacked batches
+    * ``fanout_batches`` — multi-config stream fan-out calls
+    * ``windows_total`` / ``windows_executed`` / ``launches_skipped`` /
+      ``bucket_switches`` / ``bucket_shrinks_deferred`` / ``segments`` /
+      ``segment_ticks`` — parent-chained from every owned handle's
+      :class:`repro.fpca.executable.FrontendStats`: the handle increments
+      ONE cell and the delta lands here too, replacing the old before/after
+      delta-mirroring (which double-counted by construction if a call path
+      mirrored twice, and missed direct handle use entirely).
+
+    ``cache_hits`` / ``cache_misses`` / ``evictions`` are **derived** reads
+    of the shared :class:`repro.fpca.ExecutableCache` — the same counters
+    ``cache_info()`` reports, never a copy that can drift.
+    """
+
+    _PREFIX = "fpca_pipeline"
+    _FIELDS = (
+        "requests",
+        "batches",
+        "merged_groups",
+        "fanout_batches",
+        "windows_total",
+        "windows_executed",
+        "launches_skipped",
+        "bucket_switches",
+        "bucket_shrinks_deferred",
+        "segments",
+        "segment_ticks",
+    )
+    _DERIVED = ("cache_hits", "cache_misses", "evictions")
+
+    __slots__ = ("_cache_ref",)
+
+    def __init__(self, cache: ExecutableCache | None = None,
+                 labels: dict | None = None):
+        super().__init__(labels=labels)
+        object.__setattr__(
+            self, "_cache_ref",
+            weakref.ref(cache) if cache is not None else None,
+        )
+
+    def _cache(self) -> ExecutableCache | None:
+        ref = object.__getattribute__(self, "_cache_ref")
+        return ref() if ref is not None else None
+
+    @property
+    def cache_hits(self) -> int:
+        c = self._cache()
+        return c.hits if c is not None else 0
+
+    @property
+    def cache_misses(self) -> int:
+        c = self._cache()
+        return c.misses if c is not None else 0
+
+    @property
+    def evictions(self) -> int:
+        c = self._cache()
+        return c.evictions if c is not None else 0
 
 
 class FPCAPipeline:
@@ -204,7 +256,9 @@ class FPCAPipeline:
         self._stacked: dict[
             tuple[str, ...], tuple[jax.Array, jax.Array, FPCAProgram]
         ] = {}
-        self.stats = PipelineStats()
+        # handle stats parent-chain into these cells; cache counters are
+        # derived reads of self._cache — nothing is mirrored by hand
+        self.stats = PipelineStats(cache=self._cache)
 
     # -- configuration registry ----------------------------------------------
     def register(
@@ -280,9 +334,11 @@ class FPCAPipeline:
     def cache_size(self) -> int:
         return len(self._cache)
 
-    def cache_info(self) -> _fpca.CacheInfo:
-        """Counters of the shared executable cache (all handles)."""
-        return self._cache.info()
+    def cache_info(self, verbose: bool = False):
+        """Counters of the shared executable cache (all handles);
+        ``verbose=True`` adds per-key hit/miss splits, LRU-ordered resident
+        keys and the bounded eviction log."""
+        return self._cache.info(verbose)
 
     def _model_for(self, program: FPCAProgram) -> BucketCurvefitModel:
         key = (program.circuit, program.spec.n_active_pixels)
@@ -322,6 +378,7 @@ class FPCAPipeline:
                 cache=self._cache,
                 bucket_patience=self.bucket_patience,
                 interpret=self.interpret,
+                stats_parent=self.stats,
             )
             self._handles[key] = handle
         return handle
@@ -343,6 +400,7 @@ class FPCAPipeline:
                 cache=self._cache,
                 bucket_patience=self.bucket_patience,
                 interpret=self.interpret,
+                stats_parent=self.stats,
             )
             self._handles[key] = handle
         return handle  # type: ignore[return-value]
@@ -379,7 +437,11 @@ class FPCAPipeline:
         handle: CompiledFrontend | None = None,
         head_params: Any | None = None,
     ) -> jax.Array:
-        """One fused handle call, with its counters mirrored into ``stats``.
+        """One fused handle call.  No counter mirroring happens here: the
+        handle's stats cells are parent-chained into ``self.stats`` (handle
+        ``runs`` land in ``batches``; window/launch/bucket/segment counters
+        share names), and the cache counters are derived reads of the shared
+        cache — the single-source fix for the old double-mirroring risk.
 
         With an explicit :class:`CompiledModel` ``handle`` (and its
         ``head_params``), the call serves class logits through the fused
@@ -387,30 +449,12 @@ class FPCAPipeline:
         """
         if handle is None:
             handle = self.handle_for(program, int(kernel.shape[0]))
-        hs = handle.stats
-        before = (
-            hs.runs, hs.windows_total, hs.windows_executed,
-            hs.launches_skipped, hs.bucket_switches, hs.bucket_shrinks_deferred,
-        )
-        cbefore = self._cache.counters()
         if head_params is not None:
             counts = handle.run_weighted(
                 kernel, bn_offset, images, window_keep, head_params=head_params
             )
         else:
             counts = handle.run_weighted(kernel, bn_offset, images, window_keep)
-        self.stats.batches += hs.runs - before[0]
-        self.stats.windows_total += hs.windows_total - before[1]
-        self.stats.windows_executed += hs.windows_executed - before[2]
-        self.stats.launches_skipped += hs.launches_skipped - before[3]
-        self.stats.bucket_switches += hs.bucket_switches - before[4]
-        self.stats.bucket_shrinks_deferred += (
-            hs.bucket_shrinks_deferred - before[5]
-        )
-        hits, misses, evictions = self._cache.counters()
-        self.stats.cache_hits += hits - cbefore[0]
-        self.stats.cache_misses += misses - cbefore[1]
-        self.stats.evictions += evictions - cbefore[2]
         return counts
 
     def run_config_batch(
@@ -488,8 +532,8 @@ class FPCAPipeline:
         segment's :attr:`SegmentResult.state`.  Model configurations serve
         per-tick logits through the in-scan skip-aware head.  Handle
         counters (including the in-scan zero-kept launch skips and the
-        ``segments`` / ``segment_ticks`` pair) are mirrored into ``stats``
-        exactly like per-tick batches.
+        ``segments`` / ``segment_ticks`` pair) land in ``stats`` through the
+        parent chain — single-sourced, never mirrored.
         """
         cfg = self._configs.get(name)
         if cfg is None:
@@ -498,12 +542,6 @@ class FPCAPipeline:
             handle: CompiledFrontend = self.model_handle_for(cfg.model)
         else:
             handle = self.handle_for(cfg.program, int(cfg.kernel.shape[0]))
-        hs = handle.stats
-        before = (
-            hs.runs, hs.windows_total, hs.windows_executed,
-            hs.launches_skipped, hs.segments, hs.segment_ticks,
-        )
-        cbefore = self._cache.counters()
         kwargs: dict[str, Any] = dict(
             state=state, gate=gate, m_bucket=m_bucket, early_exit=early_exit
         )
@@ -516,16 +554,6 @@ class FPCAPipeline:
             seg = handle.run_segment_weighted(
                 cfg.kernel, cfg.bn_offset, frames, **kwargs
             )
-        self.stats.batches += hs.runs - before[0]
-        self.stats.windows_total += hs.windows_total - before[1]
-        self.stats.windows_executed += hs.windows_executed - before[2]
-        self.stats.launches_skipped += hs.launches_skipped - before[3]
-        self.stats.segments += hs.segments - before[4]
-        self.stats.segment_ticks += hs.segment_ticks - before[5]
-        hits, misses, evictions = self._cache.counters()
-        self.stats.cache_hits += hits - cbefore[0]
-        self.stats.cache_misses += misses - cbefore[1]
-        self.stats.evictions += evictions - cbefore[2]
         return seg
 
     def _stacked_planes(
@@ -607,24 +635,27 @@ class FPCAPipeline:
         (:class:`repro.fpca.ProgrammedModel`), the ``(n_classes,)`` class
         logits of the fused frontend+head executable.
         """
-        results: list[jax.Array | None] = [None] * len(requests)
-        groups = self.group_requests(requests)
-        self.stats.requests += len(requests)
-        merged: dict[tuple, list[str]] = {}
-        for name in groups:
-            cfg = self._configs[name]
-            key = (
-                cfg.program.signature()
-                if self.cross_config_batching
-                else (name,)
-            )
-            merged.setdefault(key, []).append(name)
-        for names in merged.values():
-            if len(names) == 1:
-                self._submit_group(names[0], groups[names[0]], requests, results)
-            else:
-                self._submit_merged(names, groups, requests, results)
-        return results  # type: ignore[return-value]
+        with telemetry.span("serve"):
+            results: list[jax.Array | None] = [None] * len(requests)
+            groups = self.group_requests(requests)
+            self.stats.requests += len(requests)
+            merged: dict[tuple, list[str]] = {}
+            for name in groups:
+                cfg = self._configs[name]
+                key = (
+                    cfg.program.signature()
+                    if self.cross_config_batching
+                    else (name,)
+                )
+                merged.setdefault(key, []).append(name)
+            for names in merged.values():
+                if len(names) == 1:
+                    self._submit_group(
+                        names[0], groups[names[0]], requests, results
+                    )
+                else:
+                    self._submit_merged(names, groups, requests, results)
+            return results  # type: ignore[return-value]
 
     def submit(self, requests: Sequence[FrontendRequest]) -> list[jax.Array]:
         """Deprecation shim for :meth:`serve` (the pre-``repro.fpca`` name)."""

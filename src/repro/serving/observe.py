@@ -1,0 +1,215 @@
+"""Fleet observability: per-(stream, config) serving report + reconciliation.
+
+The third telemetry export surface (next to ``registry().render()`` and the
+JSONL event log): :func:`fleet_report` folds a :class:`StreamServer`'s live
+sessions, servo controllers, executable cache and registry-backed counters
+into one strict-JSON-able table — what a deployment dashboard (or
+``benchmarks/perf_compare.py --telemetry``) reads per scrape.
+
+Because every stats surface is a :class:`repro.fpca.telemetry.StatsView`
+over shared registry cells, the report needs no delta bookkeeping of its
+own; :func:`assert_reconciled` makes that contract executable — the legacy
+counter objects, the registry export and the parent-chained handle cells
+must agree *exactly*, every time, or telemetry is lying.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core import analysis
+from repro.fpca import telemetry
+
+__all__ = ["fleet_report", "render_fleet_report", "assert_reconciled"]
+
+
+def _stream_rows(server, const) -> list[dict]:
+    rows: list[dict] = []
+    for stream_id, session in server.sessions.items():
+        for cfg_name in session.configs:
+            row: dict[str, Any] = {
+                "stream": stream_id,
+                "config": cfg_name,
+                "frames": session.frame_idx,
+                "gated": session.gating,
+            }
+            st = session.state_for(cfg_name)
+            if st is not None and st.block_masks:
+                rep = session.energy_report(const, config=cfg_name)
+                row.update(
+                    kept_window_frac=rep["kept_window_frac"],
+                    executed_windows=rep["executed_windows"],
+                    executed_cycles=rep["executed_cycles"],
+                    e_total=rep["e_total"],
+                    energy_vs_dense=rep["energy_vs_dense"],
+                    latency_vs_dense=rep["latency_vs_dense"],
+                    fps_effective=rep["fps_effective"],
+                )
+            ctl = st.controller if st is not None else None
+            if ctl is not None:
+                row.update(
+                    servo={
+                        "controller": ctl.name,
+                        "metric": ctl.config.metric,
+                        "target": ctl.config.target,
+                        "threshold": ctl.threshold,
+                        "ema": ctl.ema,
+                        "converged_tick": ctl.converged_tick(),
+                        "ticks": len(ctl.history),
+                    }
+                )
+            rows.append(row)
+    return rows
+
+
+def fleet_report(
+    server, const: analysis.FrontendConstants | None = None
+) -> dict:
+    """Per-(stream, config) serving table plus fleet-level totals.
+
+    Every number is either a live registry cell read (:class:`StreamStats`
+    / :class:`PipelineStats` fields, cache counters) or derived from the
+    per-session gate history through
+    :func:`repro.core.analysis.streaming_frontend_report` — nothing is
+    sampled or mirrored, so the report reconciles exactly with the legacy
+    stats objects (see :func:`assert_reconciled`).  Strict-JSON-able
+    (non-finite floats map to ``None`` via
+    :func:`repro.fpca.telemetry.jsonable`).
+    """
+    s = server.stats
+    pipe = server.pipeline
+    info = pipe.cache_info()
+    gets = info.hits + info.misses
+    fleet = {
+        "ticks": s.ticks,
+        "frames": s.frames,
+        "windows_total": s.windows_total,
+        "windows_kept": s.windows_kept,
+        "kept_fraction": s.windows_kept / max(s.windows_total, 1),
+        "launches_skipped": s.launches_skipped,
+        "bucket_switches": s.bucket_switches,
+        "bucket_shrinks_deferred": s.bucket_shrinks_deferred,
+        "segments": s.segments,
+        "segment_ticks": s.segment_ticks,
+        "serve_seconds": s.serve_seconds,
+        "fps_wall": (
+            s.frames / s.serve_seconds if s.serve_seconds > 0 else None
+        ),
+        "cache": {
+            "hits": info.hits,
+            "misses": info.misses,
+            "hit_rate": info.hits / gets if gets else None,
+            "evictions": info.evictions,
+            "currsize": info.currsize,
+            "maxsize": info.maxsize,
+        },
+    }
+    return telemetry.jsonable(
+        {"streams": _stream_rows(server, const), "fleet": fleet}
+    )
+
+
+_COLS = (
+    ("stream", "stream"),
+    ("config", "config"),
+    ("frames", "frames"),
+    ("kept_window_frac", "kept"),
+    ("energy_vs_dense", "e/dense"),
+    ("fps_effective", "fps_eff"),
+)
+
+
+def render_fleet_report(report: dict) -> str:
+    """Plain-text table of a :func:`fleet_report` result (for CLI output)."""
+
+    def _fmt(v) -> str:
+        if v is None:
+            return "-"
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+
+    rows = []
+    for r in report["streams"]:
+        servo = r.get("servo")
+        rows.append(
+            [_fmt(r.get(key)) for key, _ in _COLS]
+            + [
+                _fmt(servo["threshold"]) if servo else "-",
+                _fmt(servo["converged_tick"]) if servo else "-",
+            ]
+        )
+    headers = [h for _, h in _COLS] + ["thr", "conv@"]
+    widths = [
+        max(len(h), *(len(row[i]) for row in rows)) if rows else len(h)
+        for i, h in enumerate(headers)
+    ]
+    lines = [
+        "  ".join(h.ljust(w) for h, w in zip(headers, widths)),
+        "  ".join("-" * w for w in widths),
+    ]
+    for row in rows:
+        lines.append("  ".join(c.ljust(w) for c, w in zip(row, widths)))
+    f = report["fleet"]
+    lines.append(
+        f"fleet: {f['frames']} frames in {f['ticks']} ticks, "
+        f"kept {f['kept_fraction']:.3f}, "
+        f"cache hit-rate {_fmt(f['cache']['hit_rate'])}, "
+        f"wall fps {_fmt(f['fps_wall'])}"
+    )
+    return "\n".join(lines)
+
+
+def _registry_rows_for(view: telemetry.StatsView) -> dict[str, Any]:
+    """The registry's exported rows for one stats view, keyed by field."""
+    prefix = view._PREFIX
+    inst = view._labels.get("instance")
+    out: dict[str, Any] = {}
+    for name, _kind, labels, value in telemetry.registry().collect():
+        if labels.get("instance") == inst and name.startswith(prefix + "_"):
+            out[name[len(prefix) + 1:]] = value
+    return out
+
+
+def assert_reconciled(pipeline, server=None) -> None:
+    """Assert the three stats surfaces agree *exactly* — no tolerance.
+
+    1. Registry export rows == legacy attribute reads, for
+       :class:`PipelineStats` (and :class:`StreamStats` when a server is
+       given) — they are the same cells, so any drift is a wiring bug.
+    2. The pipeline's ``windows_executed`` / ``launches_skipped`` /
+       ``windows_total`` equal the sum over its compiled handles' cells —
+       the parent-chain single-sourcing contract (no double counting, no
+       missed increments).
+    3. Derived cache counters == :meth:`ExecutableCache.info`.
+    """
+    views = [pipeline.stats] + ([server.stats] if server is not None else [])
+    for view in views:
+        exported = _registry_rows_for(view)
+        legacy = view.as_dict()
+        for field, value in legacy.items():
+            assert field in exported, (
+                f"{type(view).__name__}.{field} missing from registry export"
+            )
+            assert exported[field] == value, (
+                f"{type(view).__name__}.{field}: registry export "
+                f"{exported[field]} != legacy counter {value}"
+            )
+    chained = ("windows_total", "windows_executed", "launches_skipped",
+               "bucket_switches", "bucket_shrinks_deferred",
+               "segments", "segment_ticks")
+    handles = [
+        h for h in pipeline._handles.values()
+        if isinstance(getattr(h, "stats", None), telemetry.StatsView)
+    ]
+    for field in chained:
+        total = sum(getattr(h.stats, field) for h in handles)
+        have = getattr(pipeline.stats, field)
+        assert total == have, (
+            f"parent-chain mismatch on {field}: handles sum to {total}, "
+            f"pipeline cell holds {have}"
+        )
+    info = pipeline.cache_info()
+    assert pipeline.stats.cache_hits == info.hits
+    assert pipeline.stats.cache_misses == info.misses
+    assert pipeline.stats.evictions == info.evictions

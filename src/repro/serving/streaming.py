@@ -68,12 +68,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import time
 from typing import Any, Iterable, Iterator, Mapping, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import analysis, gating, mapping
+from repro.fpca import telemetry
 from repro.fpca.program import (
     DeltaGateConfig,
     GateControllerConfig,
@@ -510,19 +512,38 @@ class StreamFrameResult:
         return None if self.logits is None else int(np.argmax(self.logits))
 
 
-@dataclasses.dataclass
-class StreamStats:
-    ticks: int = 0
-    frames: int = 0
-    windows_total: int = 0
-    windows_kept: int = 0           # logical kept windows (pre-bucket-pad)
-    launches_skipped: int = 0       # all-skipped ticks — per-tick serving
-    #                                 short-circuits AND zero-kept ticks
-    #                                 inside device-compiled segments
-    bucket_switches: int = 0        # served bucket-size transitions
-    bucket_shrinks_deferred: int = 0  # flap events sticky hysteresis absorbed
-    segments: int = 0               # device-compiled segment launches
-    segment_ticks: int = 0          # ticks served from inside those launches
+class StreamStats(telemetry.StatsView):
+    """Fleet-level serving counters, registry-backed (see
+    :class:`repro.fpca.telemetry.StatsView`).
+
+    ``windows_kept`` counts logical kept windows (pre-bucket-pad);
+    ``launches_skipped`` counts all-skipped ticks (per-tick serving
+    short-circuits AND zero-kept ticks inside device-compiled segments);
+    ``bucket_switches`` / ``bucket_shrinks_deferred`` mirror the sticky
+    bucket hysteresis; ``segments`` / ``segment_ticks`` cover compiled
+    segment launches; ``serve_seconds`` accumulates wall-clock time spent
+    in the serving loop (dispatch + realisation) — the denominator
+    :func:`repro.serving.observe.fleet_report` derives fps from.
+
+    The server deliberately does NOT parent-chain into the pipeline's
+    stats: it is a scoped observer of a *shared* pipeline (other callers
+    may drive the same pipeline), so the bucket/skip counters are
+    delta-mirrored around each launch instead.
+    """
+
+    _PREFIX = "fpca_stream"
+    _FIELDS = (
+        "ticks",
+        "frames",
+        "windows_total",
+        "windows_kept",
+        "launches_skipped",
+        "bucket_switches",
+        "bucket_shrinks_deferred",
+        "segments",
+        "segment_ticks",
+        "serve_seconds",
+    )
 
 
 class StreamServer:
@@ -569,6 +590,10 @@ class StreamServer:
         self.depth = depth
         self.sessions: dict[str, StreamSession] = {}
         self.stats = StreamStats()
+        # prebuilt span label dicts (one per server / per stream) so an
+        # enabled-telemetry tick allocates no dicts on the hot loop
+        self._span_fields = {"server": self.stats._labels["instance"]}
+        self._seg_fields: dict[str, dict] = {}
 
     def add_stream(
         self,
@@ -631,7 +656,11 @@ class StreamServer:
                 if isinstance(eff_ctl, Mapping)
                 else eff_ctl
             )
-            return GateController(conf, spec, g.threshold) if conf else None
+            if not conf:
+                return None
+            return GateController(
+                conf, spec, g.threshold, name=f"{stream_id}/{name}"
+            )
 
         if per_config:
             if eff_gate is None:
@@ -664,6 +693,7 @@ class StreamServer:
                 stream_id, names, spec, eff_gate, controller=ctl
             )
         self.sessions[stream_id] = session
+        self._seg_fields[stream_id] = {"stream": stream_id}
         return session
 
     # -- serving loop --------------------------------------------------------
@@ -834,12 +864,21 @@ class StreamServer:
         """
         inflight: collections.deque[list[dict]] = collections.deque()
         for frames in ticks:
-            inflight.append(self._dispatch(frames))
+            t0 = time.perf_counter()
+            with telemetry.span("serve_tick", self._span_fields):
+                inflight.append(self._dispatch(frames))
             self.stats.ticks += 1
+            self.stats.serve_seconds += time.perf_counter() - t0
             while len(inflight) > self.depth:
-                yield self._finalize(inflight.popleft())
+                t0 = time.perf_counter()
+                out = self._finalize(inflight.popleft())
+                self.stats.serve_seconds += time.perf_counter() - t0
+                yield out
         while inflight:
-            yield self._finalize(inflight.popleft())
+            t0 = time.perf_counter()
+            out = self._finalize(inflight.popleft())
+            self.stats.serve_seconds += time.perf_counter() - t0
+            yield out
 
     def serve(self, stream_id: str, frames: Iterable[Any]) -> Iterator[StreamFrameResult]:
         """Single-stream convenience wrapper around :meth:`run`.
@@ -875,6 +914,22 @@ class StreamServer:
         feed the unserved tail to the next call).  Single-config streams
         only; per-config fan-out must use per-tick :meth:`run`.
         """
+        t0 = time.perf_counter()
+        with telemetry.span("serve_segment", self._seg_fields.get(stream_id)):
+            results = self._run_segment_inner(
+                stream_id, frames, m_bucket=m_bucket, early_exit=early_exit
+            )
+        self.stats.serve_seconds += time.perf_counter() - t0
+        return results
+
+    def _run_segment_inner(
+        self,
+        stream_id: str,
+        frames: Any,
+        *,
+        m_bucket: int | None = None,
+        early_exit: int | None = None,
+    ) -> list[StreamFrameResult]:
         session = self.sessions.get(stream_id)
         if session is None:
             raise KeyError(f"unknown stream {stream_id!r}")

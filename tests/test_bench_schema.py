@@ -1,0 +1,94 @@
+"""Committed benchmark artifacts stay strict JSON with the keys the
+tooling (``perf_compare``, CI artifact consumers) depends on — and the
+telemetry overhead guard holds on the committed numbers."""
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.telemetry
+
+REPO = Path(__file__).resolve().parents[1]
+
+REQUIRED_KEYS = {
+    "BENCH_frontend.json": ("workload", "frames_per_s"),
+    "BENCH_stream.json": (
+        "workload", "masked", "dense", "scan_segment", "sticky_buckets",
+        "controller", "controller_energy", "sensor_model", "telemetry",
+        "speedup_masked_vs_dense", "kept_window_frac",
+    ),
+    "BENCH_model.json": (
+        "workload", "batched_dense", "stream_dense", "stream_masked",
+        "scan_segment", "head", "sensor_model", "telemetry",
+    ),
+}
+
+
+def _assert_finite(obj, path=""):
+    """No NaN/Infinity anywhere — strict RFC 8259 emitters map them to
+    null, so any non-finite float in a committed artifact is a writer
+    regression."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _assert_finite(v, f"{path}.{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _assert_finite(v, f"{path}[{i}]")
+    elif isinstance(obj, float):
+        assert math.isfinite(obj), f"non-finite float at {path}"
+
+
+@pytest.mark.parametrize("name", sorted(REQUIRED_KEYS))
+def test_bench_artifact_schema(name):
+    path = REPO / name
+    if not path.exists():
+        pytest.skip(f"{name} not generated in this checkout")
+    text = path.read_text()
+    # strict parse: the standard decoder accepts Infinity/NaN extensions,
+    # so reject those tokens explicitly before decoding
+    rec = json.loads(
+        text,
+        parse_constant=lambda tok: pytest.fail(
+            f"{name} contains non-standard JSON token {tok!r}"
+        ),
+    )
+    for key in REQUIRED_KEYS[name]:
+        assert key in rec, f"{name} is missing required key {key!r}"
+    _assert_finite(rec, name)
+
+
+def test_stream_bench_telemetry_overhead_guard():
+    """Acceptance gate: disabled-mode telemetry hooks cost <= 2% of the
+    scan-segment stream lane (recorded by benchmarks/stream_bench.py)."""
+    path = REPO / "BENCH_stream.json"
+    if not path.exists():
+        pytest.skip("BENCH_stream.json not generated in this checkout")
+    tel = json.loads(path.read_text())["telemetry"]
+    assert tel["disabled_overhead_frac"] <= 0.02
+    assert tel["hook_crossings"] > 0 and tel["disabled_hook_cost_s"] >= 0
+    # the fleet report embedded in the artifact reconciles with itself:
+    # kept fraction is windows_kept / windows_total of the same cells
+    fleet = tel["fleet_report"]["fleet"]
+    assert fleet["kept_fraction"] == pytest.approx(
+        fleet["windows_kept"] / max(fleet["windows_total"], 1)
+    )
+
+
+def test_telemetry_jsonl_artifacts_are_strict():
+    """The bench-written JSONL logs (uploaded by CI) parse line by line."""
+    found = list(REPO.glob("telemetry_*.jsonl"))
+    if not found:
+        pytest.skip("no telemetry JSONL artifacts in this checkout")
+    for path in found:
+        lines = path.read_text().strip().splitlines()
+        assert lines, f"{path.name} is empty"
+        events = [json.loads(line) for line in lines]
+        assert events[0]["event"] == "session_start"
+        assert events[-1]["event"] == "session_end"
+        for ev in events:
+            assert "ts" in ev and "event" in ev
+            json.dumps(ev, allow_nan=False)

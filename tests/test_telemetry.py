@@ -1,0 +1,283 @@
+"""Unified telemetry layer: registry cells, spans, JSONL, reconciliation.
+
+The fast ``-m telemetry`` CI lane.  Everything here uses the tiny 24x24
+spec so the whole module compiles a handful of small executables once
+(module-scoped serving fixture) and the rest is pure host-side checks.
+"""
+
+from __future__ import annotations
+
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro import fpca
+from repro.core.mapping import FPCASpec
+from repro.fpca import telemetry
+from repro.fpca.cache import ExecutableCache
+from repro.fpca.telemetry import MetricFamily, OVERFLOW_LABEL
+from repro.serving.fpca_pipeline import FPCAPipeline, PipelineStats
+from repro.serving.observe import (
+    assert_reconciled,
+    fleet_report,
+    render_fleet_report,
+)
+from repro.serving.streaming import StreamServer
+
+pytestmark = pytest.mark.telemetry
+
+SPEC = FPCASpec(image_h=24, image_w=24, out_channels=4, kernel=3, stride=2)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_session():
+    yield
+    telemetry.disable()
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """One gated fleet served with telemetry on: per-tick ticks, then a
+    compiled segment, then per-tick again (span nesting across modes)."""
+    path = tmp_path_factory.mktemp("telemetry") / "events.jsonl"
+    rng = np.random.default_rng(0)
+    kernel = rng.normal(size=(4, 3, 3, 3)).astype(np.float32)
+    pipe = FPCAPipeline(backend="basis")
+    pipe.register("edges", SPEC, kernel)
+    server = StreamServer(
+        pipe,
+        gate=fpca.DeltaGateConfig(threshold=0.05, keyframe_interval=6),
+        controller=fpca.GateControllerConfig(target=0.5),
+    )
+    server.add_stream("cam0", "edges")
+    frames = (rng.normal(size=(12, 24, 24, 3)) * 0.1).astype(np.float32)
+    telemetry.enable(path, device_time_rate=2)
+    list(server.serve("cam0", frames[:4]))
+    list(server.serve_segments("cam0", frames[4:8], segment_length=4))
+    list(server.serve("cam0", frames[8:]))
+    telemetry.disable()
+    return types.SimpleNamespace(
+        pipe=pipe, server=server, path=path,
+        events=telemetry.read_jsonl(path),
+    )
+
+
+# -- JSONL export ------------------------------------------------------------
+
+
+def test_jsonl_strict_roundtrip(served):
+    """Every line is strict RFC 8259 JSON with ts/event keys; the session
+    frames the log."""
+    raw = served.path.read_text().strip().splitlines()
+    assert len(raw) == len(served.events) > 2
+    for line, ev in zip(raw, served.events):
+        assert json.loads(line) == ev          # parse == parsed
+        json.dumps(ev, allow_nan=False)        # strictly re-serialisable
+        assert "Infinity" not in line and "NaN" not in line
+        assert "ts" in ev and "event" in ev
+    assert served.events[0]["event"] == "session_start"
+    assert served.events[-1]["event"] == "session_end"
+
+
+def test_span_nesting_across_segments(served):
+    """run_segment spans nest under serve_segment; tick spans are roots."""
+    spans = [e for e in served.events if e["event"] == "span"]
+    by_name = {}
+    for s in spans:
+        by_name.setdefault(s["span"], []).append(s)
+    assert set(by_name) >= {"serve_tick", "serve_segment", "run_segment"}
+    for s in by_name["run_segment"]:
+        assert s["parent"] == "serve_segment"
+        assert s["depth"] >= 1
+    for s in by_name["serve_segment"] + by_name["serve_tick"]:
+        assert s["parent"] is None
+        assert s["dur_s"] >= 0
+
+
+def test_device_time_sampling(served):
+    """device_time_rate=2 blocked on every 2nd instrumented launch."""
+    samples = [e for e in served.events if e["event"] == "device_time"]
+    assert samples, "no device-time samples despite device_time_rate=2"
+    for s in samples:
+        assert s["dur_s"] >= 0
+        assert s["backend"] == "basis"
+
+
+# -- reconciliation / single-sourcing ----------------------------------------
+
+
+def test_stats_surfaces_reconcile_exactly(served):
+    assert_reconciled(served.pipe, served.server)
+
+
+def test_fleet_report_matches_legacy_counters(served):
+    rep = fleet_report(served.server)
+    s = served.server.stats
+    fleet = rep["fleet"]
+    assert fleet["frames"] == s.frames == 12
+    assert fleet["windows_total"] == s.windows_total
+    assert fleet["windows_kept"] == s.windows_kept
+    assert fleet["segments"] == s.segments == 1
+    assert fleet["segment_ticks"] == s.segment_ticks == 4
+    assert fleet["serve_seconds"] == s.serve_seconds > 0
+    info = served.pipe.cache_info()
+    assert fleet["cache"]["hits"] == info.hits
+    assert fleet["cache"]["misses"] == info.misses
+    json.dumps(rep, allow_nan=False)           # strict-JSON-able
+    table = render_fleet_report(rep)
+    assert "cam0" in table and "edges" in table
+
+
+def test_no_double_counting(served):
+    """The old bug: windows_executed mirrored into the pipeline AND the
+    handle.  Parent-chained cells make the pipeline total exactly the sum
+    of its handles' cells — no more, no less."""
+    handles = list(served.pipe._handles.values())
+    assert handles
+    total = sum(h.stats.windows_executed for h in handles)
+    assert served.pipe.stats.windows_executed == total
+    total_skip = sum(h.stats.launches_skipped for h in handles)
+    assert served.pipe.stats.launches_skipped == total_skip
+
+
+def test_servo_telemetry_gauges(served):
+    text = telemetry.registry().render()
+    assert 'fpca_gate_threshold{controller="cam0/edges"}' in text
+    ctl = served.server.sessions["cam0"].controller
+    fam = telemetry.registry().gauge("fpca_gate_threshold")
+    assert ctl.threshold == fam.labels(controller="cam0/edges").value
+
+
+# -- StatsView semantics -----------------------------------------------------
+
+
+def test_parent_chain_and_parent_map():
+    parent = PipelineStats()
+    child = fpca.FrontendStats(parent=parent)
+    child.runs += 2
+    child.windows_executed += 5
+    child.reprograms += 1
+    assert parent.batches == 2                 # _PARENT_MAP runs -> batches
+    assert parent.windows_executed == 5
+    assert child.snapshot()[0] == 2
+    with pytest.raises(AttributeError):
+        child.not_a_field
+    with pytest.raises(AttributeError):
+        child.not_a_field = 1
+    d = child.as_dict()
+    assert d["runs"] == 2 and d["reprograms"] == 1
+
+
+def test_registry_export_tracks_views_live():
+    view = fpca.FrontendStats()
+    view.windows_total += 7
+    inst = view._labels["instance"]
+    rows = {
+        (n, l.get("instance")): v
+        for n, _k, l, v in telemetry.registry().collect()
+    }
+    assert rows[("fpca_frontend_windows_total", inst)] == 7
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_label_cardinality_bounded():
+    fam = MetricFamily("test_bounded_total", "counter", "", ("stream",),
+                       max_label_sets=4)
+    for i in range(10):
+        fam.labels(stream=f"s{i}").add(1)
+    # 4 interned + 1 shared overflow cell, never more
+    assert len(fam._cells) == 5
+    assert fam.overflowed == 6
+    overflow = fam.labels(stream="anything_new")
+    assert overflow is fam._cells[(OVERFLOW_LABEL,)]
+    total = sum(c.value for c in fam._cells.values())
+    assert total == 10                          # totals stay honest
+
+
+def test_prometheus_render_shape():
+    reg = telemetry.registry()
+    reg.histogram("test_render_seconds", "help text", ("site",)).labels(
+        site="x").observe(0.002)
+    text = reg.render()
+    assert "# TYPE test_render_seconds histogram" in text
+    assert "# HELP test_render_seconds help text" in text
+    assert 'test_render_seconds_bucket{site="x",le="+Inf"} 1' in text
+    assert 'test_render_seconds_count{site="x"} 1' in text
+    cnt = reg.counter("test_render_total")
+    cnt.cell().add(3)
+    assert "test_render_total 3" in reg.render()
+
+
+def test_snapshot_is_strict_json():
+    snap = telemetry.registry().snapshot()
+    json.dumps(snap, allow_nan=False)
+
+
+# -- disabled mode -----------------------------------------------------------
+
+
+def test_disabled_mode_allocates_nothing():
+    telemetry.disable()
+    assert not telemetry.enabled()
+    # the null span is ONE shared object: no per-call allocation at all
+    s1, s2 = telemetry.span("serve_tick"), telemetry.span("compile")
+    assert s1 is s2 is telemetry._NULL_SPAN
+    fields = {"stream": "cam0"}
+    assert telemetry.span("serve_tick", fields) is s1
+    # events are dropped without touching any session state
+    telemetry.event("servo_actuate", err=1.0)
+
+
+def test_disabled_instrumented_launch_is_passthrough():
+    calls = []
+
+    def fn(x):
+        calls.append(x)
+        return x * 2
+
+    telemetry.disable()
+    wrapped = telemetry.instrument_launch(fn, site="test", backend="ref")
+    fam = telemetry.registry().counter("fpca_launches_total")
+    cell = fam.labels(site="test", backend="ref")
+    before = cell.value
+    assert wrapped(21) == 42
+    assert cell.value == before                # nothing counted when off
+    telemetry.enable(None)
+    assert wrapped(1) == 2
+    assert cell.value == before + 1            # counted when on
+    telemetry.disable()
+    assert wrapped.__wrapped__ is fn
+
+
+# -- executable cache --------------------------------------------------------
+
+
+def test_cache_eviction_ordering_and_verbose_info():
+    cache = ExecutableCache(capacity=2)
+    cache.get(("a",), lambda: "A")
+    cache.get(("b",), lambda: "B")
+    cache.get(("a",), lambda: "A")             # refresh a: b is now LRU
+    cache.get(("c",), lambda: "C")             # evicts b
+    cache.get(("d",), lambda: "D")             # evicts a
+    info = cache.info(verbose=True)
+    assert info.eviction_log == (("b",), ("a",))
+    assert info.resident == (("c",), ("d",))   # LRU-first ordering
+    assert info.by_key[("a",)] == (1, 1)       # 1 hit, 1 miss
+    assert info.by_key[("b",)] == (0, 1)
+    assert (info.hits, info.misses, info.evictions) == (1, 4, 2)
+    # non-verbose stays the stable 5-tuple the API contract pins
+    assert cache.info() == (1, 4, 2, 2, 2)
+
+
+def test_eviction_log_is_bounded():
+    cache = ExecutableCache(capacity=1)
+    cache.eviction_log_cap  # class attr exists
+    for i in range(cache.eviction_log_cap + 10):
+        cache.get((i,), lambda: i)
+    log = cache.info(verbose=True).eviction_log
+    assert len(log) == cache.eviction_log_cap
+    assert log[-1] == (cache.eviction_log_cap + 8,)   # newest retained
