@@ -1,12 +1,13 @@
 """Shared benchmark-artifact helpers: strict-JSON record writing.
 
-Every ``BENCH_*.json`` at the repo root goes through :func:`write_json`:
-the executed-window accounting legitimately reports ``fps = inf`` for
-all-skipped histories (and a pathological record could carry NaN), but bare
-``json.dumps`` would emit the non-standard ``Infinity`` / ``NaN`` tokens
-that strict RFC 8259 parsers (and most CI tooling) reject.  ``jsonable``
-maps every non-finite float to ``None`` first, and ``allow_nan=False``
-guarantees nothing non-standard can ever slip into an artifact.
+Every ``BENCH_*.json`` at the repo root goes through :func:`write_json`.
+The executed-window accounting spells undefined samples (fps with zero work
+executed) as the repo-wide ``None`` sentinel, but a pathological record
+could still carry ``inf``/NaN from raw arithmetic — and bare ``json.dumps``
+would emit the non-standard ``Infinity`` / ``NaN`` tokens that strict
+RFC 8259 parsers (and most CI tooling) reject.  ``jsonable`` maps every
+non-finite float to ``None`` first, and ``allow_nan=False`` guarantees
+nothing non-standard can ever slip into an artifact.
 """
 
 from __future__ import annotations

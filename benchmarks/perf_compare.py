@@ -99,6 +99,12 @@ def compare_stream(frontend_path: Path, stream_path: Path) -> None:
               f"ema {ctl_e['final_ema']:.3f})")
 
 
+def _fps(v) -> str:
+    """Render an fps figure; ``None`` is the zero-work sentinel (an idle
+    stream executed nothing — the rate is undefined, shown as ``–``)."""
+    return "–" if v is None else f"{v:.0f}"
+
+
 def compare_model(frontend_path: Path, model_path: Path) -> None:
     """Whole-model classifier (frontend + head) vs the frontend baseline."""
     fe = json.loads(frontend_path.read_text())
@@ -133,7 +139,7 @@ def compare_model(frontend_path: Path, model_path: Path) -> None:
           f"{sm['energy_vs_dense']:.2f}x dense, whole model "
           f"{sm['model_energy_vs_dense']:.2f}x energy / "
           f"{sm['model_latency_vs_dense']:.2f}x latency, "
-          f"fps_effective {sm['model_fps_effective']:.0f}")
+          f"fps_effective {_fps(sm['model_fps_effective'])}")
 
 
 def show_telemetry(path: Path) -> None:

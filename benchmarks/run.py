@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.kernel_bench",
     "benchmarks.stream_bench",
     "benchmarks.model_bench",
+    "benchmarks.fleet_bench",
     "benchmarks.roofline_report",
 ]
 

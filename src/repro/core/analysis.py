@@ -11,7 +11,6 @@ c_o=32 erases the savings, BR grows with stride, binning buys frame rate).
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 
@@ -93,8 +92,9 @@ def frontend_latency(
     t_io = w_o * const.b_adc / (const.bw_io * const.n_io_pads)
     t_total = n_c * (const.t_exp + const.t_adc + t_io)
     # an all-skipped frame fires zero cycles (t_total == 0): the sensor is
-    # idle, not infinitely slow — report fps as inf rather than divide by zero
-    fps = 1.0 / t_total if t_total > 0 else math.inf
+    # idle — fps is undefined, not infinite.  None is the zero-work sentinel
+    # everywhere (observe.fleet_report, strict-JSON artifacts reject Infinity)
+    fps = 1.0 / t_total if t_total > 0 else None
     return {"n_cycles": n_c, "t_io": t_io, "t_total": t_total, "fps": fps}
 
 
@@ -134,8 +134,8 @@ def streaming_frontend_report(
         "e_total": e_total,
         "t_total": t_total,
         # a history of all-skipped frames executes nothing (t_total == 0);
-        # the effective rate is unbounded, not a division error
-        "fps_effective": n / t_total if t_total > 0 else math.inf,
+        # fps is undefined (None, the shared zero-work sentinel), not Infinity
+        "fps_effective": n / t_total if t_total > 0 else None,
         "energy_vs_dense": e_total / (n * dense_e["e_total"]),
         "latency_vs_dense": t_total / (n * dense_t["t_total"]),
     }
@@ -253,7 +253,8 @@ def model_streaming_report(
         "t_head_total": n * head["t_head"],
         "e_model_total": e_model,
         "t_model_total": t_model,
-        "model_fps_effective": n / t_model if t_model > 0 else math.inf,
+        # undefined when zero work executed (None — the zero-work sentinel)
+        "model_fps_effective": n / t_model if t_model > 0 else None,
         "model_energy_vs_dense": e_model / (n * dense_e),
         "model_latency_vs_dense": t_model / (n * dense_t),
     }

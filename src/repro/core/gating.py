@@ -186,11 +186,17 @@ class HostGateKernels(NamedTuple):
     compare identical float32 bits.  ``step`` fuses the effective-frame and
     block-delta stages into ONE dispatch (the serving hot loop blocks on the
     gate result before it can build the tick's window mask, so per-call
-    overhead is paid synchronously)."""
+    overhead is paid synchronously).  ``step_batch`` is its vmapped twin:
+    a fleet tick gates every stream of a group in one dispatch instead of
+    one per stream, which is what keeps the per-tick host cost flat as the
+    fleet grows (the weak-scaling lane of ``benchmarks/fleet_bench.py``).
+    It compiles once per fleet size; the per-row math is the identical
+    trace, so batched and solo gate decisions agree bit for bit."""
 
-    eff: Callable       # frame -> effective frame
-    delta: Callable     # (prev_eff, cur_eff) -> block |Δ| grid
-    step: Callable      # (prev_eff, frame) -> (cur_eff, block |Δ| grid)
+    eff: Callable        # frame -> effective frame
+    delta: Callable      # (prev_eff, cur_eff) -> block |Δ| grid
+    step: Callable       # (prev_eff, frame) -> (cur_eff, block |Δ| grid)
+    step_batch: Callable  # (n, ...) stacked twin of ``step``
 
 
 @functools.lru_cache(maxsize=None)
@@ -198,9 +204,10 @@ def host_gate_kernels(spec: FPCASpec) -> HostGateKernels:
     eff = jax.jit(lambda frame: effective_frame(frame, spec))
     delta = jax.jit(lambda prev, cur: block_delta(prev, cur, spec))
 
-    @jax.jit
-    def step(prev_eff, frame):
+    def _step(prev_eff, frame):
         cur = effective_frame(frame, spec)
         return cur, block_delta(prev_eff, cur, spec)
 
-    return HostGateKernels(eff, delta, step)
+    return HostGateKernels(
+        eff, delta, jax.jit(_step), jax.jit(jax.vmap(_step))
+    )

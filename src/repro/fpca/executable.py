@@ -778,6 +778,17 @@ class CompiledFrontend:
 
         return self._cache.get(key, build)
 
+    @property
+    def data_parallelism(self) -> int:
+        """Devices the fused batch shards over (1 = unsharded single device).
+
+        The batch-carrying extent of the compiled mesh — what
+        :meth:`_padded_batch` rounds the launch up to and what the fleet
+        weak-scaling bench sweeps (`benchmarks/fleet_bench.py`).  Gate state
+        never shards: it stays host-local per stream.
+        """
+        return 1 if self.mesh is None else data_extent(self.mesh)
+
     # -- internals -----------------------------------------------------------
     def _require_weights(self) -> jax.Array:
         if self._kernel is None:

@@ -388,6 +388,10 @@ def _fmt_labels(labels: dict, **extra) -> str:
 
 
 def _fmt_num(v) -> str:
+    # None is the repo-wide zero-work sentinel (undefined sample, e.g. fps
+    # with nothing executed); Prometheus spells "no value" as NaN
+    if v is None:
+        return "NaN"
     if isinstance(v, float):
         if v != v or v in (float("inf"), float("-inf")):
             return "NaN" if v != v else ("+Inf" if v > 0 else "-Inf")

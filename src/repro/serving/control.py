@@ -41,6 +41,7 @@ independently to the shared budget.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import math
 
 import numpy as np
@@ -219,6 +220,21 @@ class GateController:
                 threshold=self.threshold, ema=self._ema,
             )
 
+    def retarget(self, target: float) -> None:
+        """Re-point the servo at a new budget (fleet arbitration pushes a
+        fresh per-stream target at every rebalance).  EMA, integrator and
+        history carry over, so the handoff is bumpless — the next
+        observation simply servos toward the new target."""
+        target = float(target)
+        if target != self.config.target:
+            # dataclasses.replace re-runs GateControllerConfig validation
+            self.config = dataclasses.replace(self.config, target=target)
+            if telemetry.enabled():
+                telemetry.event(
+                    "servo_retarget", controller=self.name,
+                    tick=self._tick, target=target,
+                )
+
     def observe_segment(
         self,
         block_masks: "np.ndarray | list",
@@ -241,6 +257,12 @@ class GateController:
         """
         cfg = self.config
         n = len(block_masks)
+        if n == 0:
+            # zero-tick segment (early-exit fired before serving anything):
+            # no observation was made, so neither fold the (possibly stale)
+            # EMA nor spend this boundary's actuation on it — the threshold
+            # must be exactly what the last real observation left it at
+            return self.threshold
         for i in range(n):
             kf = bool(keyframes[i]) if keyframes is not None else False
             observed: float | None = None

@@ -63,7 +63,9 @@ def _stream_rows(server, const) -> list[dict]:
 
 
 def fleet_report(
-    server, const: analysis.FrontendConstants | None = None
+    server,
+    const: analysis.FrontendConstants | None = None,
+    fleet=None,
 ) -> dict:
     """Per-(stream, config) serving table plus fleet-level totals.
 
@@ -75,12 +77,16 @@ def fleet_report(
     stats objects (see :func:`assert_reconciled`).  Strict-JSON-able
     (non-finite floats map to ``None`` via
     :func:`repro.fpca.telemetry.jsonable`).
+
+    With a :class:`repro.serving.fleet.FleetController` passed as
+    ``fleet``, the report also carries its ``arbitration`` table — budget,
+    per-stream priority/activity/allocation and admission counters.
     """
     s = server.stats
     pipe = server.pipeline
     info = pipe.cache_info()
     gets = info.hits + info.misses
-    fleet = {
+    fleet_totals = {
         "ticks": s.ticks,
         "frames": s.frames,
         "windows_total": s.windows_total,
@@ -104,9 +110,10 @@ def fleet_report(
             "maxsize": info.maxsize,
         },
     }
-    return telemetry.jsonable(
-        {"streams": _stream_rows(server, const), "fleet": fleet}
-    )
+    report = {"streams": _stream_rows(server, const), "fleet": fleet_totals}
+    if fleet is not None:
+        report["arbitration"] = fleet.arbitration_table()
+    return telemetry.jsonable(report)
 
 
 _COLS = (
@@ -157,6 +164,22 @@ def render_fleet_report(report: dict) -> str:
         f"cache hit-rate {_fmt(f['cache']['hit_rate'])}, "
         f"wall fps {_fmt(f['fps_wall'])}"
     )
+    arb = report.get("arbitration")
+    if arb:
+        lines.append(
+            f"arbitration: budget {_fmt(arb['budget'])} "
+            f"(allocated {_fmt(arb['allocated'])}), "
+            f"{arb['admitted']}/{arb['capacity']} streams admitted, "
+            f"{len(arb['queued'])} queued, {arb['rejections']} rejected, "
+            f"{arb['rebalances']} rebalances"
+        )
+        for r in arb["streams"]:
+            lines.append(
+                f"  {r['stream']}: prio {_fmt(r['priority'])}  "
+                f"activity {_fmt(r['activity'])}  "
+                f"allocation {_fmt(r['allocation'])}  "
+                f"thr {_fmt(r['threshold'])}"
+            )
     return "\n".join(lines)
 
 

@@ -352,7 +352,11 @@ class StreamSession:
         """This config's gate state (shared state unless per-config)."""
         return self._by_name.get(config)
 
-    def step(self, frame: np.ndarray) -> np.ndarray | None:
+    def step(
+        self,
+        frame: np.ndarray,
+        precomputed: tuple[np.ndarray, np.ndarray] | None = None,
+    ) -> np.ndarray | None:
         """Advance one frame; returns the block keep mask (None = dense).
 
         A block is kept iff it changed within the last ``hysteresis + 1``
@@ -366,18 +370,28 @@ class StreamSession:
         :attr:`last_window_mask`) is the **union** over configs — what the
         fused call must execute; each config's own decision is on its
         :meth:`state_for` entry.
+
+        ``precomputed`` is this tick's ``(effective frame, block |Δ| grid)``
+        when the server already computed it in a fleet-batched gate dispatch
+        (:func:`repro.core.gating.HostGateKernels.step_batch` — bit-identical
+        to the solo kernel); the per-config threshold comparisons and age
+        bookkeeping still run here, per stream.
         """
         if not self.gating:
             self.frame_idx += 1
             return None
-        kernels = gating.host_gate_kernels(self.spec)
         delta_blocks = None
-        if self._prev is None:
+        if precomputed is not None:
+            cur = np.asarray(precomputed[0])
+            delta_blocks = np.asarray(precomputed[1])
+        elif self._prev is None:
+            kernels = gating.host_gate_kernels(self.spec)
             cur = np.asarray(kernels.eff(np.asarray(frame, np.float32)))
         else:
             # ONE fused dispatch per tick (effective frame + block delta):
             # the gate result is needed synchronously to build this tick's
             # window mask, so per-call overhead sits on the serving hot loop
+            kernels = gating.host_gate_kernels(self.spec)
             cur_d, delta_d = kernels.step(
                 np.asarray(self._prev, np.float32),
                 np.asarray(frame, np.float32),
@@ -721,9 +735,32 @@ class StreamServer:
             entries = []
             keeps = []
             gated = any(session.gating for session, _ in members)
-            for session, frame in members:
+            # fleet-batched host gating: every warmed-up gated stream of the
+            # group computes its effective frame + block |Δ| grid in ONE
+            # vmapped dispatch (bit-identical to the solo kernel), so the
+            # per-tick host cost stays flat as the fleet grows; first-frame
+            # and dense streams fall through to the per-stream path
+            pre: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+            rows = [
+                i for i, (s, _) in enumerate(members)
+                if s.gating and s._prev is not None
+            ]
+            if len(rows) > 1:
+                kern = gating.host_gate_kernels(spec)
+                curs, deltas = kern.step_batch(
+                    np.stack([
+                        np.asarray(members[i][0]._prev, np.float32)
+                        for i in rows
+                    ]),
+                    np.stack([
+                        np.asarray(members[i][1], np.float32) for i in rows
+                    ]),
+                )
+                curs, deltas = np.asarray(curs), np.asarray(deltas)
+                pre = {i: (curs[j], deltas[j]) for j, i in enumerate(rows)}
+            for row, (session, frame) in enumerate(members):
                 frame_idx = session.frame_idx
-                block = session.step(frame)
+                block = session.step(frame, precomputed=pre.get(row))
                 window = session.last_window_mask if session.gating else None
                 kept = int(window.sum()) if window is not None else h_o * w_o
                 entry = {
@@ -864,21 +901,30 @@ class StreamServer:
         """
         inflight: collections.deque[list[dict]] = collections.deque()
         for frames in ticks:
+            # single-exit wall-clock billing: the dispatch half of the tick
+            # is accumulated exactly once even when the gate/batch path
+            # raises, so fps_wall never loses (or double-counts) time
             t0 = time.perf_counter()
-            with telemetry.span("serve_tick", self._span_fields):
-                inflight.append(self._dispatch(frames))
-            self.stats.ticks += 1
-            self.stats.serve_seconds += time.perf_counter() - t0
-            while len(inflight) > self.depth:
-                t0 = time.perf_counter()
-                out = self._finalize(inflight.popleft())
+            try:
+                with telemetry.span("serve_tick", self._span_fields):
+                    inflight.append(self._dispatch(frames))
+                self.stats.ticks += 1
+            finally:
                 self.stats.serve_seconds += time.perf_counter() - t0
-                yield out
+            while len(inflight) > self.depth:
+                yield self._finalize_timed(inflight.popleft())
         while inflight:
-            t0 = time.perf_counter()
-            out = self._finalize(inflight.popleft())
+            yield self._finalize_timed(inflight.popleft())
+
+    def _finalize_timed(self, launches: list[dict]) -> list[StreamFrameResult]:
+        """Realise one in-flight tick, billing its wall time exactly once
+        (``try/finally`` — a device error mid-realisation still accounts
+        the seconds already spent)."""
+        t0 = time.perf_counter()
+        try:
+            return self._finalize(launches)
+        finally:
             self.stats.serve_seconds += time.perf_counter() - t0
-            yield out
 
     def serve(self, stream_id: str, frames: Iterable[Any]) -> Iterator[StreamFrameResult]:
         """Single-stream convenience wrapper around :meth:`run`.
@@ -914,13 +960,16 @@ class StreamServer:
         feed the unserved tail to the next call).  Single-config streams
         only; per-config fan-out must use per-tick :meth:`run`.
         """
+        # same single-exit billing contract as run(): an exception inside
+        # the segment launch still accounts the wall time already spent
         t0 = time.perf_counter()
-        with telemetry.span("serve_segment", self._seg_fields.get(stream_id)):
-            results = self._run_segment_inner(
-                stream_id, frames, m_bucket=m_bucket, early_exit=early_exit
-            )
-        self.stats.serve_seconds += time.perf_counter() - t0
-        return results
+        try:
+            with telemetry.span("serve_segment", self._seg_fields.get(stream_id)):
+                return self._run_segment_inner(
+                    stream_id, frames, m_bucket=m_bucket, early_exit=early_exit
+                )
+        finally:
+            self.stats.serve_seconds += time.perf_counter() - t0
 
     def _run_segment_inner(
         self,
@@ -1042,6 +1091,7 @@ class StreamServer:
         segment_length: int = 16,
         m_bucket: int | None = None,
         early_exit: int | None = None,
+        on_segment: Any = None,
     ) -> Iterator[StreamFrameResult]:
         """Segment-mode twin of :meth:`serve`: buffers the frame iterable
         into ``segment_length`` chunks and serves each as one compiled
@@ -1051,6 +1101,11 @@ class StreamServer:
         ticks; the unserved tail is carried into the next chunk.  The final
         partial chunk compiles one executable for its own length — steady
         streams see exactly one compile per distinct chunk length.
+
+        ``on_segment`` (callable of the segment's result list) fires at
+        every segment boundary, after the servo's boundary actuation —
+        where :class:`repro.serving.fleet.FleetController` re-solves the
+        fleet budget split.
         """
         if segment_length < 1:
             raise ValueError("segment_length must be >= 1")
@@ -1064,6 +1119,8 @@ class StreamServer:
                     m_bucket=m_bucket,
                     early_exit=early_exit,
                 )
+                if on_segment is not None:
+                    on_segment(results)
                 yield from results
                 buf = buf[len(results):]
         while buf:
@@ -1073,5 +1130,7 @@ class StreamServer:
                 m_bucket=m_bucket,
                 early_exit=early_exit,
             )
+            if on_segment is not None:
+                on_segment(results)
             yield from results
             buf = buf[len(results):]

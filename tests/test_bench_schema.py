@@ -25,6 +25,10 @@ REQUIRED_KEYS = {
         "workload", "batched_dense", "stream_dense", "stream_masked",
         "scan_segment", "head", "sensor_model", "telemetry",
     ),
+    "BENCH_fleet.json": (
+        "workload", "devices", "weak_scaling", "arbitration",
+        "idle_stream", "admission", "fleet_report",
+    ),
 }
 
 

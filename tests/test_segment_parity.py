@@ -556,6 +556,31 @@ def test_boundary_servo_steps_once_per_segment(bucket_model):
     )
 
 
+def test_boundary_servo_zero_tick_segment_is_a_no_op():
+    """A zero-tick segment (early-exit fired before serving anything) made
+    no observation, so the boundary servo must neither fold the stale EMA
+    nor spend an actuation — the threshold stays bit-exactly where the last
+    real observation left it."""
+    from repro.serving.control import GateController
+
+    spec = _spec()
+    ctl = GateController(
+        fpca.GateControllerConfig(target=0.3), spec, GATE.threshold
+    )
+    # seed real state: one observed segment moves the threshold
+    bh = -(-spec.eff_h // spec.skip_block)
+    bw = -(-spec.eff_w // spec.skip_block)
+    masks = np.ones((3, bh, bw), bool)
+    thr1 = ctl.observe_segment(masks, keyframes=[True, False, False])
+    ema1, hist1, tick1 = ctl.ema, len(ctl.history), ctl._tick
+    assert thr1 != GATE.threshold
+    # the zero-tick boundary: identical threshold, EMA, history, tick count
+    thr2 = ctl.observe_segment(np.zeros((0, bh, bw), bool))
+    assert thr2 == thr1 == ctl.threshold
+    assert ctl.ema == ema1
+    assert len(ctl.history) == hist1 and ctl._tick == tick1
+
+
 def test_segment_bucket_suggestion_threads_to_next_segment(bucket_model):
     """The finished segment sizes the next one's compacted row bucket
     (pow2 of the max informative kept count); serving with it stays
@@ -615,3 +640,30 @@ def test_host_gate_kernels_are_single_source():
         np.asarray(kernels.delta(ea, np.asarray(eb))),
         rtol=0, atol=1e-6,
     )
+
+
+def test_host_gate_step_batch_matches_solo_bitwise():
+    """The vmapped fleet kernel gates every stream of a group in ONE
+    dispatch; per row it must return the same float32 bits as the solo
+    fused step — a 1-ulp drift would flip keep/skip decisions and break
+    the parity contract for batched fleet serving."""
+    for spec in (_spec(), FPCASpec(image_h=H, image_w=18, out_channels=C_O,
+                                   kernel=3, stride=3, binning=2)):
+        kernels = gating.host_gate_kernels(spec)
+        rng = np.random.default_rng(1)
+        n = 5
+        prevs = rng.uniform(
+            0, 1, (n, spec.eff_h, spec.eff_w)
+        ).astype(np.float32)
+        frames = rng.uniform(
+            0, 1, (n, spec.image_h, spec.image_w, 3)
+        ).astype(np.float32)
+        curs, deltas = kernels.step_batch(prevs, frames)
+        for i in range(n):
+            cur_i, delta_i = kernels.step(prevs[i], frames[i])
+            np.testing.assert_array_equal(
+                np.asarray(curs)[i], np.asarray(cur_i)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(deltas)[i], np.asarray(delta_i)
+            )

@@ -18,6 +18,8 @@ Contracts pinned here:
 
 from __future__ import annotations
 
+import json
+
 import numpy as np
 import pytest
 
@@ -490,16 +492,20 @@ def test_zero_kept_accounting_no_division_by_zero():
     empty = np.zeros((bh, bw), bool)
     lat = analysis.frontend_latency(spec, block_mask=empty)
     assert lat["n_cycles"] == 0 and lat["t_total"] == 0
-    assert lat["fps"] == float("inf")
+    # zero work executed -> fps is the None sentinel (never Infinity: the
+    # strict-JSON artifact writer rejects non-finite floats)
+    assert lat["fps"] is None
     rep = analysis.streaming_frontend_report(spec, [empty, empty])
     assert rep["executed_windows"] == 0 and rep["executed_cycles"] == 0
     assert rep["kept_window_frac"] == 0 and rep["energy_vs_dense"] == 0
-    assert rep["fps_effective"] == float("inf")
+    assert rep["fps_effective"] is None
+    json.dumps(rep, allow_nan=False)   # idle stream round-trips strict JSON
     # ...and through the session-level report
     session = StreamSession("s", "cam", spec, DeltaGateConfig())
     session.block_masks.extend([empty, empty])
     srep = session.energy_report()
     assert srep["executed_windows"] == 0
+    assert srep["fps_effective"] is None
 
 
 def test_all_skipped_stream_ticks_skip_launches(bucket_model):
@@ -517,6 +523,55 @@ def test_all_skipped_stream_ticks_skip_launches(bucket_model):
     assert [r.kept_windows for r in results[1:]] == [0, 0, 0]
     assert all(np.all(r.counts == 0) for r in results[1:])
     assert server.stats.launches_skipped == 3
+
+
+def test_serve_seconds_brackets_hand_timed_wall_clock(bucket_model):
+    """``serve_seconds`` accumulates exactly the dispatch+finalize halves of
+    each tick, so it is positive and never exceeds an enclosing hand-timed
+    bracket; ``fps_wall`` derives from it (and is the None sentinel on a
+    server that has never served)."""
+    import time
+
+    from repro.serving.observe import fleet_report
+
+    spec = _spec()
+    _, kernel = _data(spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    server = StreamServer(pipe, DeltaGateConfig(threshold=0.05))
+    server.add_stream("s0", "cam")
+    assert server.stats.serve_seconds == 0
+    assert fleet_report(server)["fleet"]["fps_wall"] is None
+    frames = _data(spec, batch=6, seed=2)[0]
+    t0 = time.perf_counter()
+    results = list(server.serve("s0", frames))
+    elapsed = time.perf_counter() - t0
+    assert len(results) == 6
+    assert 0 < server.stats.serve_seconds <= elapsed
+    rep = fleet_report(server)["fleet"]
+    assert rep["fps_wall"] == pytest.approx(6 / server.stats.serve_seconds)
+
+
+def test_serve_seconds_billed_when_serving_raises(bucket_model):
+    """The billing is single-exit (try/finally): a tick that raises
+    mid-dispatch still accounts the wall time already spent, so fps_wall
+    stays honest across failures."""
+    spec = _spec()
+    _, kernel = _data(spec)
+    pipe = FPCAPipeline(bucket_model, backend="basis")
+    pipe.register("cam", spec, kernel)
+    server = StreamServer(pipe, DeltaGateConfig(threshold=0.05))
+    server.add_stream("s0", "cam")
+    good = _data(spec, batch=1, seed=3)[0][0]
+    bad = np.zeros((7, 7, 3), np.float32)          # wrong sensor geometry
+    with pytest.raises((ValueError, TypeError)):
+        list(server.serve("s0", [good, bad]))
+    assert server.stats.serve_seconds > 0
+    # ...and segment mode bills through the same contract
+    before = server.stats.serve_seconds
+    with pytest.raises((ValueError, TypeError)):
+        server.run_segment("s0", np.zeros((2, 7, 7, 3), np.float32))
+    assert server.stats.serve_seconds > before
 
 
 # ---------------------------------------------------------------------------

@@ -150,6 +150,50 @@ def test_servo_telemetry_gauges(served):
     assert ctl.threshold == fam.labels(controller="cam0/edges").value
 
 
+def test_fleet_allocation_gauges_sum_to_budget_and_reconcile():
+    """The fleet arbiter's per-tenant rollups: allocation gauges sum to the
+    global budget gauge, and admission rejections leave every stats surface
+    exactly reconciled (a rejected stream must not touch serving counters)."""
+    from repro.serving.fleet import (
+        FleetAdmissionError,
+        FleetConfig,
+        FleetController,
+    )
+
+    rng = np.random.default_rng(1)
+    kernel = rng.normal(size=(4, 3, 3, 3)).astype(np.float32)
+    pipe = FPCAPipeline(backend="basis")
+    pipe.register("edges", SPEC, kernel)
+    server = StreamServer(
+        pipe,
+        gate=fpca.DeltaGateConfig(threshold=0.05, keyframe_interval=6),
+        controller=fpca.GateControllerConfig(target=0.5),
+    )
+    fc = FleetController(server, FleetConfig(budget=0.6, floor=0.2))
+    fc.add_stream("t0", "edges")
+    fc.add_stream("t1", "edges", priority=2.0)
+    fc.add_stream("t2", "edges")
+    with pytest.raises(FleetAdmissionError):        # capacity = 3
+        fc.add_stream("t3", "edges")
+    reg = telemetry.registry()
+    alloc = {
+        labels["stream"]: value
+        for name, _k, labels, value in reg.collect()
+        if name == "fpca_fleet_allocation"
+        and labels.get("stream") in ("t0", "t1", "t2")
+    }
+    budget = [v for n, _k, _l, v in reg.collect() if n == "fpca_fleet_budget"]
+    assert sum(alloc.values()) == pytest.approx(budget[0]) == 0.6
+    # the rendered export carries the same cells
+    text = reg.render()
+    assert 'fpca_fleet_allocation{stream="t1"}' in text
+    assert "fpca_fleet_rejected_total" in text
+    # rejected admission left serving telemetry untouched and reconciled
+    assert len(server.sessions) == 3
+    assert_reconciled(pipe, server)
+    json.dumps(fc.arbitration_table(), allow_nan=False)
+
+
 # -- StatsView semantics -----------------------------------------------------
 
 
