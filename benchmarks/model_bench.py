@@ -18,6 +18,13 @@ beat dense on the synthetic low-change scene), and the head's
 FLOPs/latency/energy accounting (`analysis.model_streaming_report`) to
 ``BENCH_model.json`` at the repo root — diff against the batch-frontend
 baseline with ``python -m benchmarks.perf_compare --model``.
+
+Two model-zoo lanes ride along: **detection** (the zoo's ``fpca_detect``
+arch streaming per-tick per-cell class scores + boxes through the same
+skip-aware head path) and **events** (the delta gate's changed blocks as an
+address-event stream, moving vs static scene — a zero-event static scene
+records the ``None`` fps sentinel, never inf/nan, per the strict-JSON
+writer contract).
 """
 
 from __future__ import annotations
@@ -34,7 +41,7 @@ from repro.core import analysis
 from repro.core.curvefit import fit_bucket_model
 from repro.core.mapping import FPCASpec, output_dims
 from repro.data.pipeline import SyntheticMovingObject
-from repro.fpca import DeltaGateConfig, DenseSpec, telemetry
+from repro.fpca import DeltaGateConfig, DenseSpec, build_model, telemetry
 from repro.fpca import compile as fpca_compile
 from repro.configs.fpca_cnn import make_model_program
 from repro.serving.fpca_pipeline import FPCAPipeline
@@ -136,6 +143,37 @@ def run() -> list[Row]:
     n_events = telemetry.session().events_written
     telemetry.disable()
 
+    # detection lane: the zoo's fpca_detect arch on the SAME frontend spec
+    # and kernel, streamed delta-gated with an event tap attached — per-tick
+    # per-coarse-cell class scores + box regression through the skip-aware
+    # patched-head path
+    det_model = build_model(
+        {"arch": "fpca_detect", "spec": spec, "n_classes": 2, "width": 8}
+    )
+    det_params = det_model.init_head(jax.random.PRNGKey(1))
+    pipe.register("det", det_model, kernel, head_params=det_params)
+    det_frames = [cams["cam0"].frame_at(t) for t in range(N_FRAMES)]
+
+    def _serve_det(stack):
+        srv = StreamServer(pipe, GATE, depth=2, gating=True)
+        srv.add_stream("cam0", "det", events=True)
+        t0 = time.perf_counter()
+        for r in srv.serve("cam0", stack):
+            assert r.detections is not None and r.events is not None
+        return time.perf_counter() - t0, srv
+
+    _serve_det(det_frames)               # warm-up (compiles)
+    t_det, det_srv = _serve_det(det_frames)
+    fps_det = N_FRAMES / t_det
+    ev = det_srv.event_taps["cam0"].stats
+    # event lanes: moving scene vs an all-static scene.  A zero-event lane
+    # records the None fps sentinel — the strict-JSON writer (allow_nan
+    # off) forbids inf/nan, and 0/t would misread as "measured zero rate"
+    events_per_s = ev.events / t_det if ev.events else None
+    t_static, static_srv = _serve_det([det_frames[0]] * 8)
+    sev = static_srv.event_taps["cam0"].stats
+    static_events_per_s = sev.events / t_static if sev.events else None
+
     n_served = N_FRAMES * N_STREAMS
     fps_gated = n_served / t_gated
     fps_dense = n_served / t_dense
@@ -184,6 +222,25 @@ def run() -> list[Row]:
             "model_latency_vs_dense": rep["model_latency_vs_dense"],
             "model_fps_effective": rep["model_fps_effective"],
         },
+        "detection": {
+            "arch": "fpca_detect",
+            "s_total": t_det,
+            "frames_per_s": fps_det,
+            "grid": [h_o, w_o],
+            "n_classes": det_model.detect_classes,
+            "head_macs_per_frame": analysis.head_flops(det_model)["macs"],
+        },
+        "events": {
+            "moving_scene": {
+                "ticks": ev.ticks, "events": ev.events,
+                "events_pos": ev.events_pos, "events_neg": ev.events_neg,
+                "events_per_s": events_per_s,
+            },
+            "static_scene": {
+                "ticks": sev.ticks, "events": sev.events,
+                "events_per_s": static_events_per_s,
+            },
+        },
         "telemetry": {
             "jsonl": TELEMETRY_JSONL.name,
             "events": n_events,
@@ -212,4 +269,11 @@ def run() -> list[Row]:
         ("model_head_cost", 0.0,
          f"{rep['head_macs_per_frame']/1e6:.2f} MMAC/frame "
          f"({rep['head_params']/1e3:.0f}k params)"),
+        ("model_detect_stream", t_det / N_FRAMES * 1e6,
+         f"fpca_detect {h_o}x{w_o} grid -> {fps_det:.0f} frames/s "
+         f"(scores+boxes every tick)"),
+        ("model_event_stream", 0.0,
+         f"{ev.events} events/{ev.ticks} ticks "
+         f"(+{ev.events_pos}/-{ev.events_neg}); static scene "
+         f"{sev.events} events"),
     ]

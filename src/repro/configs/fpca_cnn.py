@@ -23,6 +23,26 @@ N_HIDDEN = 64
 HEAD = (DenseSpec(N_HIDDEN, activation="relu"), DenseSpec(N_CLASSES))
 
 
+# Model-zoo config for the same network: ``repro.fpca.zoo.build_model(CFG)``
+# (or ``build()`` below) constructs a byte-identical model program — same
+# signature, shared warm executables, zero recompiles — stamped with
+# ``arch="fpca_cnn"`` for the per-workload telemetry breakout.
+CFG = {
+    "arch": "fpca_cnn",
+    "spec": FRONTEND_SPEC,
+    "hidden": N_HIDDEN,
+    "n_classes": N_CLASSES,
+    "input_scale": 1.0,
+}
+
+
+def build(cfg=None, **overrides):
+    """Zoo-built twin of :func:`make_model_program` (defaults = ``CFG``)."""
+    from repro.fpca.zoo import build_model
+
+    return build_model({**CFG, **(dict(cfg) if cfg else {})}, **overrides)
+
+
 def make_model_program(
     spec: FPCASpec = FRONTEND_SPEC,
     *,

@@ -165,9 +165,16 @@ def head_flops(model) -> dict:
 
     Returns per-layer ``(kind, macs, params)`` rows plus totals; pooling and
     activation stages count as element ops, not MACs.
+
+    Zoo :class:`repro.models.heads.HeadGraph` heads are costed per node in
+    topological order: Conv/Dense/Detect nodes carry MACs + params (a
+    DetectSpec is a SAME conv emitting ``n_classes + 4`` channels),
+    Add/Concat joins and activations count as element ops.
     """
     from repro.fpca.program import ConvSpec, DenseSpec, PoolSpec
 
+    if getattr(model, "is_graph_head", False):
+        return _graph_head_flops(model)
     shapes = model.head_shapes()
     per_layer: list[dict] = []
     macs = params = elem_ops = 0
@@ -196,6 +203,61 @@ def head_flops(model) -> dict:
             l_elem = int(np.prod(nxt))
         per_layer.append(
             {"layer": type(layer).__name__, "macs": l_macs,
+             "params": l_params, "elem_ops": l_elem}
+        )
+        macs += l_macs
+        params += l_params
+        elem_ops += l_elem
+    return {
+        "per_layer": per_layer,
+        "macs": macs,
+        "flops": 2 * macs,
+        "params": params,
+        "elem_ops": elem_ops,
+    }
+
+
+def _graph_head_flops(model) -> dict:
+    """Per-node cost of a :class:`repro.models.heads.HeadGraph` head."""
+    from repro.fpca.program import ConvSpec, DenseSpec, PoolSpec
+    from repro.models.heads import AddSpec, ConcatSpec, DetectSpec
+
+    graph = model.head
+    shapes = graph.shapes(model.frontend.out_shape)
+    per_layer: list[dict] = []
+    macs = params = elem_ops = 0
+    for node in graph.toposort():
+        op = node.op
+        cur = shapes[node.inputs[0]]
+        nxt = shapes[node.name]
+        if isinstance(op, (ConvSpec, DetectSpec)):
+            kernel = op.kernel
+            k2c = kernel * kernel * cur[-1]
+            l_macs = nxt[0] * nxt[1] * nxt[2] * k2c
+            l_params = op.out_channels * (k2c + 1)
+            act = getattr(op, "activation", None)
+            l_elem = int(np.prod(nxt)) if act else 0
+        elif isinstance(op, DenseSpec):
+            d_in = 1
+            for d in cur:
+                d_in *= int(d)
+            l_macs = d_in * op.features
+            l_params = op.features * (d_in + 1)
+            l_elem = op.features if op.activation else 0
+        elif isinstance(op, PoolSpec):
+            l_macs = l_params = 0
+            l_elem = nxt[0] * nxt[1] * nxt[2] * op.size * op.size
+        elif isinstance(op, (AddSpec, ConcatSpec)):
+            l_macs = l_params = 0
+            # one element op per joined input element (+ the activation)
+            l_elem = sum(int(np.prod(shapes[r])) for r in node.inputs)
+            if op.activation:
+                l_elem += int(np.prod(nxt))
+        else:                           # ActivationSpec
+            l_macs = l_params = 0
+            l_elem = int(np.prod(nxt))
+        per_layer.append(
+            {"layer": f"{node.name}:{type(op).__name__}", "macs": l_macs,
              "params": l_params, "elem_ops": l_elem}
         )
         macs += l_macs

@@ -30,6 +30,10 @@ Layer map:
   buckets, mesh sharding, stats);
 * :mod:`repro.fpca.cache`      — the introspectable
   :class:`ExecutableCache` / :class:`CacheInfo`;
+* :mod:`repro.fpca.zoo`        — the model-zoo meta-architecture registry
+  (:func:`register_arch` / :func:`build_model`): config-driven construction
+  of classifier and detection model programs over
+  :class:`repro.models.heads.HeadGraph` head graphs;
 * :mod:`repro.fpca.telemetry`  — the process-wide metrics registry every
   stats object reports into, span traces
   (``telemetry.enable(jsonl_path=...)``) and opt-in device-profile hooks.
@@ -75,6 +79,15 @@ from repro.fpca.program import (
     ProgrammedModel,
     spec_signature,
 )
+from repro.models.heads import (
+    AddSpec,
+    ConcatSpec,
+    DetectSpec,
+    Detections,
+    HeadGraph,
+    Node,
+)
+from repro.fpca.zoo import available_archs, build_model, register_arch
 
 __all__ = [
     # program spec
@@ -91,6 +104,16 @@ __all__ = [
     "DenseSpec",
     "ActivationSpec",
     "CompiledModel",
+    # model zoo (meta-arch registry + head graphs + detections)
+    "register_arch",
+    "build_model",
+    "available_archs",
+    "HeadGraph",
+    "Node",
+    "AddSpec",
+    "ConcatSpec",
+    "DetectSpec",
+    "Detections",
     # re-exported building blocks of a program
     "FPCASpec",
     "CircuitParams",

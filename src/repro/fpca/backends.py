@@ -104,13 +104,15 @@ class Backend:
         The frontend stage is this backend's :attr:`make_executable` closure
         (inlined into the trace — still the registry-dispatched kernel math);
         the head is :meth:`repro.fpca.FPCAModelProgram.apply_head` lowered as
-        plain jnp ops, so the fused logits are bit-identical to composing a
+        plain jnp ops, so the fused outputs are bit-identical to composing a
         frontend handle with the reference head apply.  Signature:
-        ``(images, kernel, bn_offset, head_params) -> logits``, with a
-        trailing ``window_mask`` argument when ``m_bucket`` is set (the
-        region-skip compacted path; skipped windows enter the head as exact
-        zeros).  Head parameters enter traced, so reprogramming them — like
-        NVM weights — never recompiles.
+        ``(images, kernel, bn_offset, head_params) -> head outputs`` — class
+        logits for chain heads, any ``head_out_shape`` for zoo head graphs
+        (e.g. per-cell detection maps) — with a trailing ``window_mask``
+        argument when ``m_bucket`` is set (the region-skip compacted path;
+        skipped windows enter the head as exact zeros).  Head parameters
+        enter traced, so reprogramming them — like NVM weights — never
+        recompiles.
         """
         frontend = self.make_executable(
             bucket_model,
@@ -187,6 +189,10 @@ class Backend:
         is present iff ``gated``; ``carry`` is the flat gate-state tuple
         (plus ``(eff, logits)`` for models) and ``outs`` maps ``counts``,
         ``block_keep``, ``kept``, ``keyframe``, ``ticks`` (and ``logits``).
+        The head slot of the carry is shape-generic: chain heads carry
+        ``(n_classes,)`` logits, zoo head graphs whatever
+        ``FPCAModelProgram.head_out_shape`` says (per-cell detection maps
+        included) — the per-tick ``outs["logits"]`` stacks ``K`` of them.
         ``donate=True`` donates the carry buffers (previous frame / ages /
         previous logits) to the next segment — skip on CPU, where jax does
         not implement donation.

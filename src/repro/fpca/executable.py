@@ -54,6 +54,22 @@ __all__ = [
 
 _USE_PROGRAM = object()   # stream() sentinel: "inherit from program"
 
+# Model-side workload accounting, broken out per zoo architecture (the
+# ``arch`` stamp on FPCAModelProgram; "custom" for hand-rolled programs).
+# These are fleet-global labeled families — fleet_report()'s "workloads"
+# table and the Prometheus render split classifier vs detection vs event
+# traffic from them without any per-handle plumbing.
+_C_MODEL_RUNS = telemetry.registry().counter(
+    "fpca_model_runs_total",
+    "model-side executable dispatches (fused, patched or segment)",
+    ("arch",), max_label_sets=64,
+)
+_C_MODEL_FRAMES = telemetry.registry().counter(
+    "fpca_model_frames_total",
+    "frames/ticks served by model-side dispatches",
+    ("arch",), max_label_sets=64,
+)
+
 
 class FrontendStats(telemetry.StatsView):
     """Per-handle serving counters (all monotonic) — thin views over
@@ -161,7 +177,20 @@ class SegmentResult:
     first_frame_idx: int             # stream frame index of tick 0
     gated: bool
     state: SegmentState
-    logits: Any | None = None        # model segments: (K, n_classes)
+    logits: Any | None = None        # model segments: (K,) + head_out_shape
+    detect_classes: int | None = None  # detection segments: class count
+
+    def detections(self) -> list:
+        """Per-tick :class:`repro.models.heads.Detections` of a detection
+        segment (first ``ticks`` entries; raises for classifier segments)."""
+        if self.detect_classes is None:
+            raise ValueError(
+                "not a detection segment: this model's head emits logits"
+            )
+        from repro.models.heads import Detections
+
+        raw = np.asarray(self.logits)[: self.ticks]
+        return [Detections.from_raw(r, self.detect_classes) for r in raw]
 
 
 def _round_up_pow2(n: int) -> int:
@@ -709,6 +738,9 @@ class CompiledFrontend:
         if is_model:
             new_state.eff, new_state.logits = new_carry[4], new_carry[5]
         new_state.suggested_bucket = suggested
+        detect_classes = (
+            self.model_program.detect_classes if is_model else None
+        )
         self.stats.runs += 1
         self.stats.segments += 1
         self.stats.segment_ticks += ticks
@@ -728,6 +760,7 @@ class CompiledFrontend:
             gated=gated,
             state=new_state,
             logits=outs.get("logits"),
+            detect_classes=detect_classes,
         )
 
     def _fresh_segment_state(
@@ -737,7 +770,10 @@ class CompiledFrontend:
         if is_model:
             h_o, w_o = output_dims(self.spec)
             st.eff = jnp.zeros((h_o, w_o, self.out_channels), jnp.float32)
-            st.logits = jnp.zeros((self.n_classes,), jnp.float32)
+            # head_out_shape generalises (n_classes,) to detection maps
+            st.logits = jnp.zeros(
+                self.model_program.head_out_shape, jnp.float32
+            )
         return st
 
     def _segment_executable(
@@ -897,6 +933,10 @@ class CompiledModel(CompiledFrontend):
         self.model_program = model_program
         self._model_sig = model_program.signature()
         self._head_params: Any | None = None
+        # arch-labeled workload cells (zoo stamp; "custom" off-registry)
+        self.arch = model_program.arch or "custom"
+        self._m_runs = _C_MODEL_RUNS.labels(arch=self.arch)
+        self._m_frames = _C_MODEL_FRAMES.labels(arch=self.arch)
         if head_params is not None:
             self.reprogram(head_params=head_params)
 
@@ -904,6 +944,18 @@ class CompiledModel(CompiledFrontend):
     @property
     def n_classes(self) -> int:
         return self.model_program.n_classes
+
+    @property
+    def head_out_shape(self) -> tuple[int, ...]:
+        return self.model_program.head_out_shape
+
+    @property
+    def output_kind(self) -> str:
+        return self.model_program.output_kind
+
+    @property
+    def detect_classes(self) -> int | None:
+        return self.model_program.detect_classes
 
     @property
     def head_params(self) -> Any | None:
@@ -965,6 +1017,28 @@ class CompiledModel(CompiledFrontend):
         return self._head_params
 
     # -- execution -----------------------------------------------------------
+    def run(
+        self,
+        images: Any,
+        *,
+        block_mask: np.ndarray | None = None,
+        window_keep: np.ndarray | None = None,
+    ) -> Any:
+        """Serve one frame or batch through the fused frontend+head jit.
+
+        Classifiers return logits ``(n_classes,)`` / ``(B, n_classes)``;
+        detection models return :class:`repro.models.heads.Detections`
+        (scores + boxes split lazily from the raw per-cell map)."""
+        out = super().run(
+            images, block_mask=block_mask, window_keep=window_keep
+        )
+        dc = self.detect_classes
+        if dc is not None:
+            from repro.models.heads import Detections
+
+            return Detections.from_raw(out, dc)
+        return out
+
     def run_weighted(
         self,
         kernel: jax.Array,
@@ -974,7 +1048,9 @@ class CompiledModel(CompiledFrontend):
         *,
         head_params: Any | None = None,
     ) -> jax.Array:
-        """One fused frontend+head call -> ``(b, n_classes)`` logits.
+        """One fused frontend+head call -> ``(b,) + head_out_shape`` raw
+        outputs (logits, or per-cell detection maps for a detection head —
+        :meth:`run` wraps those in :class:`repro.models.heads.Detections`).
 
         Routed through the same padding / sharding / sticky-bucket engine as
         the frontend handle; the executable itself is the backend's
@@ -983,6 +1059,8 @@ class CompiledModel(CompiledFrontend):
         the head on the exact-zero activation map instead.
         """
         hp = self._require_head() if head_params is None else head_params
+        self._m_runs.add(1)
+        self._m_frames.add(int(np.shape(images)[0]))
 
         def empty(b: int, h_o: int, w_o: int, c_o: int) -> jax.Array:
             zeros = jnp.zeros((b, h_o, w_o, c_o), jnp.float32)
@@ -1011,6 +1089,7 @@ class CompiledModel(CompiledFrontend):
     def head_logits(self, counts: Any, head_params: Any | None = None) -> jax.Array:
         """Digital head on an explicit activation map (non-blocking)."""
         hp = self._require_head() if head_params is None else head_params
+        self._m_runs.add(1)
         return self._head_executable()(hp, jnp.asarray(counts, jnp.float32))
 
     def patched_logits(
@@ -1028,8 +1107,36 @@ class CompiledModel(CompiledFrontend):
         LRU), dispatched asynchronously.
         """
         hp = self._require_head() if head_params is None else head_params
+        self._m_runs.add(1)
+        self._m_frames.add(int(np.shape(counts)[0]))
         return self._patch_executable()(
             hp,
+            jnp.asarray(counts, jnp.float32),
+            jnp.asarray(prev_eff, jnp.float32),
+            jnp.asarray(window_keep),
+        )
+
+    def fused_patched_logits(
+        self,
+        head_params_rows: Any,
+        counts: Any,
+        prev_eff: Any,
+        window_keep: Any,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Shared-head fusion: ONE vmapped patch+head pass over stacked
+        per-config rows, each row binding its OWN head parameters
+        (``head_params_rows`` is the per-row pytree stack, leading axis ==
+        ``counts.shape[0]``).
+
+        Row-for-row bit-identical to per-config :meth:`patched_logits`
+        calls — every op in the patch body and the head is row-independent,
+        the same contract the segment parity harness already pins for the
+        in-scan head — asserted by the fused-vs-unfused parity test.
+        """
+        self._m_runs.add(1)
+        self._m_frames.add(int(np.shape(counts)[0]))
+        return self._fused_patch_executable()(
+            head_params_rows,
             jnp.asarray(counts, jnp.float32),
             jnp.asarray(prev_eff, jnp.float32),
             jnp.asarray(window_keep),
@@ -1053,13 +1160,18 @@ class CompiledModel(CompiledFrontend):
         """Model variant of :meth:`CompiledFrontend.run_segment_weighted`:
         the per-tick head pass (skip-aware effective-map patch + logits) runs
         inside the scan, carrying the previous effective map and logits on
-        the device.  ``result.logits`` is ``(K, n_classes)``."""
+        the device.  ``result.logits`` is ``(K,) + head_out_shape`` (class
+        logits, or raw per-cell maps — ``result.detections()`` splits
+        those)."""
         hp = self._require_head() if head_params is None else head_params
-        return self._dispatch_segment(
+        seg = self._dispatch_segment(
             kernel, bn_offset, frames, length=length, state=state, gate=gate,
             m_bucket=m_bucket, early_exit=early_exit, donate=donate,
             head_params=hp,
         )
+        self._m_runs.add(1)
+        self._m_frames.add(seg.ticks)
+        return seg
 
     # -- streaming -----------------------------------------------------------
     def _stream_launch(
@@ -1083,7 +1195,14 @@ class CompiledModel(CompiledFrontend):
         return {"counts": counts, "logits": logits}
 
     def _stream_extra_results(self, entry: dict) -> dict:
-        return {"logits": np.asarray(entry["logits"])[0]}
+        lg = np.asarray(entry["logits"])[0]
+        out: dict = {"logits": lg}
+        dc = self.detect_classes
+        if dc is not None:
+            from repro.models.heads import Detections
+
+            out["detections"] = Detections.from_raw(lg, dc)
+        return out
 
     # -- internals -----------------------------------------------------------
     def _model_executable(self, m_bucket: int | None) -> Callable:
@@ -1128,6 +1247,20 @@ class CompiledModel(CompiledFrontend):
                 return head(head_params, eff), eff
 
             return self.backend.instrumented(run, site="head_patch")
+
+        return self._cache.get(key, build)
+
+    def _fused_patch_executable(self) -> Callable:
+        key = self._model_sig + ("head-patch-fused",)
+        head = self.model_program.apply_head
+
+        def build() -> Callable:
+            def one(hp, c, pe, wk):
+                eff = jnp.where(wk[..., None], c, pe)
+                return head(hp, eff[None])[0], eff
+
+            run = jax.jit(jax.vmap(one))
+            return self.backend.instrumented(run, site="head_patch_fused")
 
         return self._cache.get(key, build)
 

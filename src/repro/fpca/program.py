@@ -399,15 +399,32 @@ class FPCAModelProgram:
     static to the compiled executable (signature), trained parameters (NVM
     planes AND head weights) enter traced — reprogramming either never
     recompiles (:meth:`repro.fpca.CompiledModel.reprogram`).
+
+    ``head`` may alternatively be a :class:`repro.models.heads.HeadGraph`
+    (residual / multi-branch / detection topologies from the model zoo,
+    :mod:`repro.fpca.zoo`); graph heads extend the signature under a
+    distinct ``"head_graph"`` tag, so every chain-head signature stays
+    byte-identical.  ``arch`` is the registered zoo name this program was
+    built under (``None`` for hand-rolled programs) — a telemetry label
+    only, deliberately **excluded** from :meth:`signature`.
     """
 
     frontend: FPCAProgram
-    head: tuple
+    head: Any
     input_scale: float = 1.0
+    arch: str | None = None
 
     def __post_init__(self) -> None:
         if not isinstance(self.frontend, FPCAProgram):
             raise TypeError("frontend must be an FPCAProgram")
+        from repro.models.heads import HeadGraph
+
+        if isinstance(self.head, HeadGraph):
+            if not float(self.input_scale) > 0.0:
+                raise ValueError("input_scale must be > 0")
+            # validates node geometry against the frontend's output shape
+            self.head.shapes(self.frontend.out_shape)
+            return
         object.__setattr__(self, "head", tuple(self.head))
         if not self.head:
             raise ValueError("model head needs at least one layer spec")
@@ -423,8 +440,20 @@ class FPCAModelProgram:
         self.head_shapes()   # validates the layer geometry chains
 
     # -- derived geometry ----------------------------------------------------
+    @property
+    def is_graph_head(self) -> bool:
+        from repro.models.heads import HeadGraph
+
+        return isinstance(self.head, HeadGraph)
+
     def head_shapes(self) -> list[tuple[int, ...]]:
         """Output shape after each head stage (index 0 = frontend output)."""
+        if self.is_graph_head:
+            raise TypeError(
+                "head_shapes() is for chain heads; a HeadGraph head exposes "
+                "per-node shapes via "
+                "model.head.shapes(model.frontend.out_shape)"
+            )
         shapes: list[tuple[int, ...]] = [self.frontend.out_shape]
         for i, layer in enumerate(self.head):
             cur = shapes[-1]
@@ -470,7 +499,29 @@ class FPCAModelProgram:
 
     @property
     def n_classes(self) -> int:
+        if self.is_graph_head:
+            return int(self.head.n_classes)
         return int(self.head[-1].features)
+
+    @property
+    def head_out_shape(self) -> tuple[int, ...]:
+        """Per-example output shape of the head: ``(n_classes,)`` for chain
+        classifiers, the graph output shape (e.g. ``(gh, gw, C + 4)`` for a
+        detection head) otherwise."""
+        if self.is_graph_head:
+            return tuple(self.head.out_shape(self.frontend.out_shape))
+        return (self.n_classes,)
+
+    @property
+    def output_kind(self) -> str:
+        """``"logits"`` (classifier) or ``"detections"`` (per-cell maps)."""
+        return self.head.output_kind if self.is_graph_head else "logits"
+
+    @property
+    def detect_classes(self) -> int | None:
+        """Class count of a detection head (``None`` for classifiers) — the
+        split point :class:`repro.models.heads.Detections` needs."""
+        return self.n_classes if self.output_kind == "detections" else None
 
     @property
     def spec(self) -> FPCASpec:
@@ -484,7 +535,10 @@ class FPCAModelProgram:
     def init_head(self, key: jax.Array) -> list[dict]:
         """Fresh head parameters: one dict per stage (``{}`` for
         parameterless pool/activation stages) — the pytree
-        :meth:`apply_head` consumes and :class:`ProgrammedModel` binds."""
+        :meth:`apply_head` consumes and :class:`ProgrammedModel` binds.
+        Graph heads return a dict keyed by node name instead."""
+        if self.is_graph_head:
+            return self.head.init(key, self.frontend.out_shape)
         from repro.models.layers import init_conv2d, init_linear
 
         params: list[dict] = []
@@ -512,6 +566,8 @@ class FPCAModelProgram:
         :meth:`repro.serving.FPCAPipeline.register`, so a stage-count or
         weight-shape mismatch fails at the call site, not inside a jitted
         trace."""
+        if self.is_graph_head:
+            return self.head.bind(params, self.frontend.out_shape)
         import jax.numpy as jnp
 
         bound = [
@@ -558,6 +614,9 @@ class FPCAModelProgram:
 
         from repro.models.layers import avg_pool2d, conv2d, linear, max_pool2d
 
+        if self.is_graph_head:
+            x = jnp.asarray(counts, jnp.float32) * jnp.float32(self.input_scale)
+            return self.head.apply(params, x)
         if len(params) != len(self.head):
             raise ValueError(
                 f"head has {len(self.head)} stages but got {len(params)} "
@@ -589,13 +648,16 @@ class FPCAModelProgram:
         and excluded — reprogramming them never recompiles."""
         sig = self.__dict__.get("_signature")
         if sig is None:
+            if self.is_graph_head:
+                head_sig = ("head_graph",) + self.head._sig_entries()
+            else:
+                head_sig = ("head",) + tuple(
+                    layer._sig() for layer in self.head
+                )
             sig = (
                 (_MODEL_SIG_VERSION,)
                 + self.frontend.signature()
-                + (
-                    ("head",) + tuple(layer._sig() for layer in self.head),
-                    ("input_scale", float(self.input_scale)),
-                )
+                + (head_sig, ("input_scale", float(self.input_scale)))
             )
             object.__setattr__(self, "_signature", sig)
         return sig

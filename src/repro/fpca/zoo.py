@@ -1,0 +1,188 @@
+"""Model zoo: the meta-architecture registry (``register_arch`` /
+``build_model``).
+
+d2go-style config-driven model construction: an architecture is a named
+builder ``fn(cfg) -> FPCAModelProgram`` registered under a string name;
+``build_model({"arch": name, ...})`` dispatches to it.  The built program is
+stamped with ``arch=name`` so model-side telemetry (the ``fpca_model_*``
+families in :mod:`repro.fpca.executable`) and ``fleet_report()`` break out
+workloads per architecture.
+
+Three architectures ship registered:
+
+* ``"fpca_cnn"`` — the repo's original sequential classifier, *unchanged*:
+  the builder constructs the exact same chain-head tuple as
+  ``repro.configs.fpca_cnn.make_model_program``, so its ``signature()`` is
+  byte-identical and every warm executable is shared (zero recompiles,
+  pinned in ``tests/test_zoo.py``);
+* ``"fpca_resnet"`` — a residual classifier over a
+  :class:`repro.models.heads.HeadGraph` (conv trunk, post-add relu join);
+* ``"fpca_detect"`` — a detection head: per-coarse-cell class scores + box
+  regression (:class:`repro.models.heads.DetectSpec`), streaming per-tick
+  :class:`repro.models.heads.Detections` through ``serve`` / ``run_segment``.
+
+``cfg`` keys every builder understands: ``spec`` (an
+:class:`repro.core.mapping.FPCASpec` or kwargs mapping; defaults to the
+repo config's ``FRONTEND_SPEC``), ``frontend`` (a full
+:class:`repro.fpca.FPCAProgram`, or extra ``FPCAProgram`` kwargs such as
+``gate``), ``input_scale``, ``n_classes``; per-arch knobs (``hidden``,
+``width``, ``detect_kernel``) are documented on each builder.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+from repro.core.mapping import FPCASpec
+from repro.fpca.program import (
+    ConvSpec,
+    DenseSpec,
+    FPCAModelProgram,
+    FPCAProgram,
+    PoolSpec,
+)
+from repro.models.heads import AddSpec, DetectSpec, HeadGraph, Node
+
+__all__ = ["register_arch", "build_model", "available_archs"]
+
+_ARCHS: dict[str, Callable[[Mapping], FPCAModelProgram]] = {}
+
+
+def register_arch(name: str, *, overwrite: bool = False):
+    """Decorator registering a builder ``fn(cfg) -> FPCAModelProgram`` under
+    ``name``.  Duplicate names are an error unless ``overwrite=True`` —
+    silently shadowing an architecture would silently change what a fleet
+    serves."""
+    if not name or not isinstance(name, str):
+        raise ValueError("architecture name must be a non-empty string")
+
+    def deco(fn: Callable[[Mapping], FPCAModelProgram]):
+        if name in _ARCHS and not overwrite:
+            raise ValueError(
+                f"architecture {name!r} already registered; pass "
+                f"overwrite=True to replace it"
+            )
+        _ARCHS[name] = fn
+        return fn
+
+    return deco
+
+
+def available_archs() -> tuple[str, ...]:
+    """Registered architecture names, sorted."""
+    return tuple(sorted(_ARCHS))
+
+
+def build_model(cfg: Mapping | None = None, **overrides) -> FPCAModelProgram:
+    """Build the architecture named by ``cfg["arch"]`` (kwargs override cfg
+    keys).  The returned program carries ``arch=name`` for telemetry; the
+    signature is untouched by that stamp."""
+    merged: dict[str, Any] = {**(dict(cfg) if cfg else {}), **overrides}
+    if "arch" not in merged:
+        raise KeyError(
+            "build_model(cfg) needs an 'arch' key naming a registered "
+            "architecture"
+        )
+    name = merged["arch"]
+    builder = _ARCHS.get(name)
+    if builder is None:
+        raise KeyError(
+            f"unknown architecture {name!r}; registered: "
+            f"{list(available_archs())}"
+        )
+    model = builder(merged)
+    if model.arch != name:
+        model = model.replace(arch=name)
+    return model
+
+
+def _frontend(cfg: Mapping) -> FPCAProgram:
+    fe = cfg.get("frontend")
+    if isinstance(fe, FPCAProgram):
+        return fe
+    spec = cfg.get("spec")
+    if spec is None:
+        from repro.configs.fpca_cnn import FRONTEND_SPEC
+
+        spec = FRONTEND_SPEC
+    if isinstance(spec, Mapping):
+        spec = FPCASpec(**spec)
+    kw = dict(fe) if isinstance(fe, Mapping) else {}
+    return FPCAProgram(spec=spec, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registered architectures
+# ---------------------------------------------------------------------------
+
+@register_arch("fpca_cnn")
+def _build_fpca_cnn(cfg: Mapping) -> FPCAModelProgram:
+    """The original sequential classifier.  Knobs: ``hidden`` (dense width),
+    ``n_classes``, or a full ``head`` tuple.  The default head tuple equals
+    ``repro.configs.fpca_cnn.HEAD`` — byte-identical signature, shared
+    executables."""
+    from repro.configs import fpca_cnn as defaults
+
+    head = cfg.get("head")
+    if head is None:
+        hidden = int(cfg.get("hidden", defaults.N_HIDDEN))
+        n_classes = int(cfg.get("n_classes", defaults.N_CLASSES))
+        head = (DenseSpec(hidden, activation="relu"), DenseSpec(n_classes))
+    return FPCAModelProgram(
+        frontend=_frontend(cfg),
+        head=tuple(head),
+        input_scale=float(cfg.get("input_scale", 1.0)),
+    )
+
+
+@register_arch("fpca_resnet")
+def _build_fpca_resnet(cfg: Mapping) -> FPCAModelProgram:
+    """Residual classifier: SAME-conv stem, two-conv residual branch joined
+    by a post-add relu, avg-pool, two dense stages.  Knobs: ``width`` (conv
+    channels), ``hidden``, ``n_classes``."""
+    width = int(cfg.get("width", 16))
+    hidden = int(cfg.get("hidden", 32))
+    n_classes = int(cfg.get("n_classes", 2))
+    graph = HeadGraph(
+        nodes=(
+            Node("stem", ConvSpec(width, 3, padding="SAME"), ("input",)),
+            Node("conv1", ConvSpec(width, 3, padding="SAME"), ("stem",)),
+            Node("conv2",
+                 ConvSpec(width, 3, padding="SAME", activation=None),
+                 ("conv1",)),
+            Node("join", AddSpec(activation="relu"), ("stem", "conv2")),
+            Node("pool", PoolSpec(2, kind="avg"), ("join",)),
+            Node("fc", DenseSpec(hidden, activation="relu"), ("pool",)),
+            Node("logits", DenseSpec(n_classes), ("fc",)),
+        ),
+        output="logits",
+    )
+    return FPCAModelProgram(
+        frontend=_frontend(cfg),
+        head=graph,
+        input_scale=float(cfg.get("input_scale", 1.0)),
+    )
+
+
+@register_arch("fpca_detect")
+def _build_fpca_detect(cfg: Mapping) -> FPCAModelProgram:
+    """Detection head: SAME-conv trunk then a :class:`DetectSpec` emitting
+    ``n_classes`` class scores + 4 box channels per coarse cell of the
+    frontend grid.  Knobs: ``width`` (trunk channels), ``n_classes``,
+    ``detect_kernel`` (SAME conv size of the detect stage)."""
+    width = int(cfg.get("width", 16))
+    n_classes = int(cfg.get("n_classes", 2))
+    graph = HeadGraph(
+        nodes=(
+            Node("trunk", ConvSpec(width, 3, padding="SAME"), ("input",)),
+            Node("det",
+                 DetectSpec(n_classes, kernel=int(cfg.get("detect_kernel", 1))),
+                 ("trunk",)),
+        ),
+        output="det",
+    )
+    return FPCAModelProgram(
+        frontend=_frontend(cfg),
+        head=graph,
+        input_scale=float(cfg.get("input_scale", 1.0)),
+    )

@@ -208,6 +208,7 @@ class FleetController:
         priority: float = 1.0,
         gate: Any = _USE_SERVER,
         controller: Any = _USE_SERVER,
+        events: bool = False,
     ) -> StreamSession | None:
         """Admission-controlled :meth:`StreamServer.add_stream`.
 
@@ -216,6 +217,9 @@ class FleetController:
         :meth:`remove_stream`; queued requests return ``None``.  Admitted
         streams must carry a :class:`GateController` (the push target of
         every rebalance), inherit the server default or pass ``controller=``.
+        ``events=True`` attaches the server's
+        :class:`repro.serving.events.EventTap` on admission (queued requests
+        keep the flag and attach when admitted).
         """
         if priority <= 0.0:
             raise ValueError("priority must be > 0")
@@ -229,7 +233,7 @@ class FleetController:
                     self._queued.append(
                         (stream_id, config,
                          dict(priority=priority, gate=gate,
-                              controller=controller))
+                              controller=controller, events=events))
                     )
                 return None
             raise FleetAdmissionError(
@@ -238,12 +242,13 @@ class FleetController:
                 f"cannot admit {stream_id!r}"
             )
         session = self.server.add_stream(
-            stream_id, config, gate=gate, controller=controller
+            stream_id, config, gate=gate, controller=controller, events=events
         )
         if not any(st.controller is not None for st in session._states):
             # roll the attach back — an unservoed stream has no actuator for
             # arbitration to push targets into
             self.server.sessions.pop(stream_id, None)
+            self.server.event_taps.pop(stream_id, None)
             self.server._seg_fields.pop(stream_id, None)
             raise ValueError(
                 f"fleet stream {stream_id!r} needs a GateController "
@@ -264,6 +269,7 @@ class FleetController:
             raise KeyError(f"stream {stream_id!r} is not admitted")
         self.server.sessions.pop(stream_id, None)
         self.server._seg_fields.pop(stream_id, None)
+        self.server.event_taps.pop(stream_id, None)
         _G_ALLOC.labels(stream=stream_id).set(0.0)
         _G_ACTIVITY.labels(stream=stream_id).set(0.0)
         admitted: list[StreamSession] = []

@@ -56,6 +56,7 @@ from repro.core.device_models import CircuitParams
 from repro.core.fpca_sim import WeightEncoding
 from repro.core.mapping import FPCASpec, active_window_mask, output_dims
 from repro.fpca.cache import ExecutableCache
+from repro.models.heads import Detections
 from repro.fpca.executable import (
     _USE_PROGRAM,
     CompiledFrontend,
@@ -681,6 +682,7 @@ class FPCAPipeline:
             [jnp.asarray(requests[i].image, jnp.float32) for i in idxs]
         )
         window_keep = self._group_window_keep(cfg, [requests[i] for i in idxs])
+        dc = None
         if isinstance(cfg, ProgrammedModel):
             # whole-model config: ONE fused frontend+head jit -> logits
             counts = self._run_batch(
@@ -688,12 +690,17 @@ class FPCAPipeline:
                 handle=self.model_handle_for(cfg.model),
                 head_params=cfg.head_params,
             )
+            dc = cfg.model.detect_classes
         else:
             counts = self._run_batch(
                 cfg.program, cfg.kernel, cfg.bn_offset, images, window_keep
             )
         for j, i in enumerate(idxs):
-            results[i] = counts[j]
+            results[i] = (
+                Detections.from_raw(counts[j], dc)
+                if dc is not None
+                else counts[j]
+            )
 
     def _submit_merged(
         self,
@@ -736,8 +743,13 @@ class FPCAPipeline:
                     counts[row : row + len(rows), ..., lo:hi],
                     head_params=cfg.head_params,
                 )
+                dc = cfg.model.detect_classes
                 for j, i in enumerate(rows):
-                    results[i] = logits[j]
+                    results[i] = (
+                        Detections.from_raw(logits[j], dc)
+                        if dc is not None
+                        else logits[j]
+                    )
                 row += len(rows)
             else:
                 for i in rows:

@@ -81,6 +81,11 @@ def fleet_report(
     With a :class:`repro.serving.fleet.FleetController` passed as
     ``fleet``, the report also carries its ``arbitration`` table — budget,
     per-stream priority/activity/allocation and admission counters.
+
+    The ``workloads`` table breaks the fleet out per architecture: every
+    arch-labeled ``fpca_model_*`` / ``fpca_events_*`` registry row (model
+    zoo classifier/detector traffic, neuromorphic event lanes), summed
+    across instances.
     """
     s = server.stats
     pipe = server.pipeline
@@ -97,6 +102,7 @@ def fleet_report(
         "bucket_shrinks_deferred": s.bucket_shrinks_deferred,
         "segments": s.segments,
         "segment_ticks": s.segment_ticks,
+        "fused_head_calls": s.fused_head_calls,
         "serve_seconds": s.serve_seconds,
         "fps_wall": (
             s.frames / s.serve_seconds if s.serve_seconds > 0 else None
@@ -110,10 +116,34 @@ def fleet_report(
             "maxsize": info.maxsize,
         },
     }
-    report = {"streams": _stream_rows(server, const), "fleet": fleet_totals}
+    report = {
+        "streams": _stream_rows(server, const),
+        "fleet": fleet_totals,
+        "workloads": _workload_rows(),
+    }
     if fleet is not None:
         report["arbitration"] = fleet.arbitration_table()
     return telemetry.jsonable(report)
+
+
+def _workload_rows() -> dict[str, dict[str, float]]:
+    """Per-architecture workload breakout: every arch-labeled registry row
+    (the ``fpca_model_*`` run/frame counters stamped by
+    :class:`repro.fpca.CompiledModel` and the ``fpca_events_*`` lanes of
+    attached :class:`repro.serving.events.EventTap`\\ s), summed across
+    instances.  Registry-global by design — one dashboard row per workload
+    kind regardless of how many compiled handles serve it."""
+    workloads: dict[str, dict[str, float]] = {}
+    for name, _kind, labels, value in telemetry.registry().collect():
+        arch = labels.get("arch")
+        if arch is None:
+            continue
+        if not (name.startswith("fpca_model_")
+                or name.startswith("fpca_events_")):
+            continue
+        row = workloads.setdefault(arch, {})
+        row[name] = row.get(name, 0) + value
+    return workloads
 
 
 _COLS = (
@@ -205,8 +235,14 @@ def assert_reconciled(pipeline, server=None) -> None:
        the parent-chain single-sourcing contract (no double counting, no
        missed increments).
     3. Derived cache counters == :meth:`ExecutableCache.info`.
+    4. Event-tap accounting (server streams with ``events=True``): the
+       polarity split sums to the event total, and the tap's event count
+       equals the gate's own changed-block count — per-tick and
+       segment-reconstructed packets both honour it.
     """
     views = [pipeline.stats] + ([server.stats] if server is not None else [])
+    taps = list(getattr(server, "event_taps", {}).values()) if server else []
+    views.extend(t.stats for t in taps)
     for view in views:
         exported = _registry_rows_for(view)
         legacy = view.as_dict()
@@ -236,3 +272,15 @@ def assert_reconciled(pipeline, server=None) -> None:
     assert pipeline.stats.cache_hits == info.hits
     assert pipeline.stats.cache_misses == info.misses
     assert pipeline.stats.evictions == info.evictions
+    for tap in taps:
+        es = tap.stats
+        assert es.events == es.events_pos + es.events_neg, (
+            f"event polarity split {es.events_pos}+{es.events_neg} != "
+            f"total {es.events} on stream {tap.session.stream_id!r}"
+        )
+        st = tap.session._primary
+        assert st is not None and es.events == st.changed_total, (
+            f"event stream {tap.session.stream_id!r}: tap counted "
+            f"{es.events} events, gate counted "
+            f"{st.changed_total if st is not None else None} changed blocks"
+        )

@@ -71,6 +71,7 @@ import math
 import time
 from typing import Any, Iterable, Iterator, Mapping, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -81,6 +82,7 @@ from repro.fpca.program import (
     GateControllerConfig,
     ProgrammedModel,
 )
+from repro.models.heads import Detections
 from repro.serving.control import GateController
 from repro.serving.fpca_pipeline import FPCAPipeline
 
@@ -173,6 +175,13 @@ class _GateState:
         self.last_keyframe = False
         self.last_block_mask: np.ndarray | None = None
         self.last_window_mask: np.ndarray | None = None
+        # changed-block accounting for the event stream: ``last_changed`` is
+        # the raw threshold comparison of the most recent gated tick (None
+        # before the first delta), ``changed_total`` its running count —
+        # EventTap packets must reconcile with it EXACTLY
+        # (repro.serving.observe.assert_reconciled)
+        self.last_changed: np.ndarray | None = None
+        self.changed_total = 0
         # gate history for energy accounting, bounded so a long-running
         # stream does not leak (the report covers the retained window)
         self.block_masks: collections.deque[np.ndarray] = collections.deque(
@@ -193,6 +202,10 @@ class _GateState:
             # delta within 1 ulp of the threshold decides identically
             changed = delta_blocks > np.float32(self.gate.threshold)
             self.age = np.where(changed, 0, self.age + 1)
+            self.last_changed = changed
+            self.changed_total += int(changed.sum())
+        else:
+            self.last_changed = None
         keyframe = delta_blocks is None or (
             self.gate.keyframe_interval > 0
             and frame_idx % self.gate.keyframe_interval == 0
@@ -271,6 +284,11 @@ class StreamSession:
         # device-resident carry threaded between compiled segment launches
         # (None until the stream first serves a segment)
         self._segment_state: Any | None = None
+        # set by an attached EventTap: step() then retains the SIGNED block
+        # mean delta (the gate only needs |Δ|) so event polarity can be read
+        # after the previous frame is overwritten
+        self.want_events = False
+        self._last_signed: np.ndarray | None = None
 
         def _pick(mapping_or_one: Any, name: str, kind: str) -> Any:
             if isinstance(mapping_or_one, Mapping):
@@ -398,6 +416,17 @@ class StreamSession:
             )
             cur = np.asarray(cur_d)
             delta_blocks = np.asarray(delta_d)
+        if self.want_events:
+            # polarity source for the event tap: signed block-mean change,
+            # captured before ``_prev`` is overwritten below
+            self._last_signed = (
+                None
+                if delta_blocks is None or self._prev is None
+                else _block_reduce_mean(
+                    cur - np.asarray(self._prev, np.float32),
+                    self.spec.skip_block,
+                )
+            )
         union_keep: np.ndarray | None = None
         union_window: np.ndarray | None = None
         for st in self._states:
@@ -515,7 +544,10 @@ class StreamFrameResult:
     kept_windows: int
     total_windows: int
     config: str = ""                # configuration these counts belong to
-    logits: np.ndarray | None = None  # (n_classes,) — model configs only
+    logits: np.ndarray | None = None  # (n_classes,) logits, or the raw
+    #                                 # (gh, gw, n_classes + 4) detection map
+    detections: Any | None = None   # heads.Detections — detection configs
+    events: Any | None = None       # events.EventPacket — event-tap streams
 
     @property
     def kept_fraction(self) -> float:
@@ -523,7 +555,12 @@ class StreamFrameResult:
 
     @property
     def predicted_class(self) -> int | None:
-        return None if self.logits is None else int(np.argmax(self.logits))
+        """Argmax class of a classifier tick; None for dense-counts-only
+        ticks AND for detection ticks (whose logits are per-cell maps —
+        use :attr:`detections`)."""
+        if self.logits is None or np.ndim(self.logits) != 1:
+            return None
+        return int(np.argmax(self.logits))
 
 
 class StreamStats(telemetry.StatsView):
@@ -535,7 +572,10 @@ class StreamStats(telemetry.StatsView):
     short-circuits AND zero-kept ticks inside device-compiled segments);
     ``bucket_switches`` / ``bucket_shrinks_deferred`` mirror the sticky
     bucket hysteresis; ``segments`` / ``segment_ticks`` cover compiled
-    segment launches; ``serve_seconds`` accumulates wall-clock time spent
+    segment launches; ``fused_head_calls`` counts shared-head fusion
+    launches (several same-signature model configs served by ONE batched
+    head pass — see :meth:`StreamServer._model_head_pass`);
+    ``serve_seconds`` accumulates wall-clock time spent
     in the serving loop (dispatch + realisation) — the denominator
     :func:`repro.serving.observe.fleet_report` derives fps from.
 
@@ -556,6 +596,7 @@ class StreamStats(telemetry.StatsView):
         "bucket_shrinks_deferred",
         "segments",
         "segment_ticks",
+        "fused_head_calls",
         "serve_seconds",
     )
 
@@ -595,6 +636,7 @@ class StreamServer:
         depth: int = 2,
         gating: bool = True,
         controller: GateControllerConfig | None = None,
+        fuse_shared_heads: bool = True,
     ):
         if depth < 1:
             raise ValueError("depth must be >= 1")
@@ -602,7 +644,14 @@ class StreamServer:
         self.gate = gate if gating else None
         self.controller = controller if gating else None
         self.depth = depth
+        # when several model configs of one fused launch bind the SAME model
+        # signature (zoo archs sharing a head, A/B weight variants), run ONE
+        # vmapped head pass over all (config, stream) rows instead of one
+        # call per config; bit-identical to the per-config path (pinned in
+        # tests) because the patched-head math is row-independent
+        self.fuse_shared_heads = fuse_shared_heads
         self.sessions: dict[str, StreamSession] = {}
+        self.event_taps: dict[str, Any] = {}
         self.stats = StreamStats()
         # prebuilt span label dicts (one per server / per stream) so an
         # enabled-telemetry tick allocates no dicts on the hot loop
@@ -616,8 +665,14 @@ class StreamServer:
         *,
         gate: Any = _USE_SERVER,
         controller: Any = _USE_SERVER,
+        events: bool = False,
     ) -> StreamSession:
         """Attach a camera stream to registered pipeline configuration(s).
+
+        ``events=True`` attaches an :class:`repro.serving.events.EventTap`:
+        every served tick additionally emits the delta gate's changed blocks
+        as an address-event packet on ``StreamFrameResult.events`` (requires
+        a gated, shared-gate stream).
 
         A sequence of names fans the stream out to several programmed
         configurations sharing one spec: each tick is gated and served
@@ -708,6 +763,18 @@ class StreamServer:
             )
         self.sessions[stream_id] = session
         self._seg_fields[stream_id] = {"stream": stream_id}
+        if events:
+            from repro.serving.events import EventTap
+
+            try:
+                self.event_taps[stream_id] = EventTap(session)
+            except Exception:
+                # leave no half-attached stream behind: the session was
+                # registered above, but an events=True caller asked for a
+                # contract this stream cannot honour
+                del self.sessions[stream_id]
+                del self._seg_fields[stream_id]
+                raise
         return session
 
     # -- serving loop --------------------------------------------------------
@@ -779,6 +846,12 @@ class StreamServer:
                         )
                         for st in session._states
                     }
+                tap = self.event_taps.get(session.stream_id)
+                if tap is not None:
+                    # emit this tick's address-event packet from the gate
+                    # state session.step() just wrote (same changed array the
+                    # gate counted — the reconciliation contract)
+                    entry["events"] = tap.observe_tick(frame_idx)
                 entries.append(entry)
                 if gated:
                     keeps.append(
@@ -820,14 +893,30 @@ class StreamServer:
         non-blocking call per model config, so the double-buffered overlap
         is preserved.  An all-skipped tick patches nothing and reproduces
         the previous logits exactly.
+
+        **Shared-head fusion** (``fuse_shared_heads``): model configs of one
+        launch binding the SAME model signature (zoo archs sharing a head
+        graph, A/B weight variants) collapse into ONE vmapped head pass over
+        all stacked (config, stream) rows — each row binds its own config's
+        head parameters.  The patched-head math is row-independent, so fused
+        and per-config results are bit-identical (pinned in the zoo tests).
         """
         counts = launch["counts"]
         logits_by_config: dict[str, Any] = {}
+        detect_by_config: dict[str, int] = {}
+        model_slices: list[tuple] = []
         for name, lo, hi in launch["slices"]:
             cfg = self.pipeline._configs[name]
             if not isinstance(cfg, ProgrammedModel):
                 continue
-            handle = self.pipeline.model_handle_for(cfg.model)
+            model_slices.append((name, lo, hi, cfg))
+            dc = cfg.model.detect_classes
+            if dc is not None:
+                detect_by_config[name] = dc
+        if not model_slices:
+            return
+
+        def gather(name, lo, hi, cfg):
             sliced = counts if lo is None else counts[..., lo:hi]
             prevs, keeps = [], []
             for session, _ in members:
@@ -840,15 +929,53 @@ class StreamServer:
                     keeps.append(st.last_window_mask)
                 else:
                     keeps.append(np.ones((h_o, w_o), bool))
-            logits, eff = handle.patched_logits(
-                sliced, jnp.stack(prevs), np.stack(keeps),
-                head_params=cfg.head_params,
-            )
-            for row, (session, _) in enumerate(members):
-                session._eff[name] = eff[row]
-            logits_by_config[name] = logits
+            return sliced, prevs, keeps
+
+        groups: dict[tuple, list[tuple]] = {}
+        for item in model_slices:
+            groups.setdefault(item[3].model.signature(), []).append(item)
+        n = len(members)
+        for group in groups.values():
+            handle = self.pipeline.model_handle_for(group[0][3].model)
+            if len(group) == 1 or not self.fuse_shared_heads:
+                for name, lo, hi, cfg in group:
+                    sliced, prevs, keeps = gather(name, lo, hi, cfg)
+                    logits, eff = handle.patched_logits(
+                        sliced, jnp.stack(prevs), np.stack(keeps),
+                        head_params=cfg.head_params,
+                    )
+                    for row, (session, _) in enumerate(members):
+                        session._eff[name] = eff[row]
+                    logits_by_config[name] = logits
+            else:
+                # config-major row stacking: rows [g*n, (g+1)*n) are group
+                # member g's streams, each row binding g's head params
+                rows_c, rows_p, rows_k, hp_rows = [], [], [], []
+                for name, lo, hi, cfg in group:
+                    sliced, prevs, keeps = gather(name, lo, hi, cfg)
+                    rows_c.append(sliced)
+                    rows_p.extend(prevs)
+                    rows_k.extend(keeps)
+                    hp_rows.extend([cfg.head_params] * n)
+                hp_stack = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *hp_rows
+                )
+                logits, eff = handle.fused_patched_logits(
+                    hp_stack,
+                    jnp.concatenate(rows_c, axis=0),
+                    jnp.stack(rows_p),
+                    np.stack(rows_k),
+                )
+                self.stats.fused_head_calls += 1
+                for g, (name, lo, hi, cfg) in enumerate(group):
+                    base = g * n
+                    for row, (session, _) in enumerate(members):
+                        session._eff[name] = eff[base + row]
+                    logits_by_config[name] = logits[base:base + n]
         if logits_by_config:
             launch["logits"] = logits_by_config
+        if detect_by_config:
+            launch["detect"] = detect_by_config
 
     def _finalize(self, launches: list[dict]) -> list[StreamFrameResult]:
         """Device side of one tick: realise the batch (blocks) and unpack.
@@ -864,9 +991,10 @@ class StreamServer:
                 name: np.asarray(lg)
                 for name, lg in launch.get("logits", {}).items()
             }
+            detect = launch.get("detect", {})
             for row, e in enumerate(launch["entries"]):
                 per_config = e.get("per_config")
-                for name, lo, hi in launch["slices"]:
+                for idx, (name, lo, hi) in enumerate(launch["slices"]):
                     sliced = (
                         counts[row] if lo is None else counts[row, ..., lo:hi]
                     )
@@ -875,6 +1003,9 @@ class StreamServer:
                         block, kept, window = per_config[name]
                         sliced = sliced * window[..., None].astype(sliced.dtype)
                     lg = logits_np.get(name)
+                    det = None
+                    if lg is not None and name in detect:
+                        det = Detections.from_raw(lg[row], detect[name])
                     results.append(
                         StreamFrameResult(
                             stream_id=e["stream_id"],
@@ -885,6 +1016,10 @@ class StreamServer:
                             total_windows=e["total"],
                             config=name,
                             logits=None if lg is None else lg[row],
+                            detections=det,
+                            # one packet per (stream, tick): attach to the
+                            # first fanned-out config's result only
+                            events=e.get("events") if idx == 0 else None,
                         )
                     )
         return results
@@ -996,6 +1131,18 @@ class StreamServer:
         if state is None and session.frame_idx > 0:
             state = self._state_from_session(session, name)
         start_idx = session.frame_idx
+        tap = self.event_taps.get(stream_id)
+        # event reconstruction inputs, captured BEFORE the launch mutates
+        # them: the effective frame carried INTO the segment and the
+        # threshold the scan traces (the servo actuates only at the boundary,
+        # inside absorb_segment)
+        if tap is not None:
+            prev_eff_in = (
+                np.asarray(state.prev_eff, np.float32)
+                if state is not None and bool(state.has_prev)
+                else None
+            )
+            thr_in = float(session.gate.threshold)
         pstats = self.pipeline.stats
         before = (pstats.launches_skipped, pstats.segments, pstats.segment_ticks)
         seg = self.pipeline.run_config_segment(
@@ -1026,8 +1173,28 @@ class StreamServer:
         self.stats.windows_kept += int(seg.kept_windows[:ticks].sum())
         counts = np.asarray(seg.counts)        # blocks until the scan is done
         logits = None if seg.logits is None else np.asarray(seg.logits)
+        packets = None
+        if tap is not None:
+            # the scan never materialises per-tick gate internals on the
+            # host; re-derive the served ticks' event packets through the
+            # same gating kernels the scan traced (bit-identical decisions —
+            # the per-tick-vs-segment differential test pins it) and fold
+            # them into tap + gate accounting in lock-step
+            from repro.serving.events import segment_events
+
+            packets = segment_events(
+                session.spec,
+                np.asarray(frames, np.float32)[:ticks],
+                prev_eff_in,
+                thr_in,
+                stream_id,
+                start_idx,
+            )
+            tap.absorb_packets(packets)
+        detect_classes = cfg.model.detect_classes if is_model else None
         results = []
         for t in range(ticks):
+            lg = None if logits is None else logits[t]
             results.append(
                 StreamFrameResult(
                     stream_id=stream_id,
@@ -1039,7 +1206,13 @@ class StreamServer:
                     kept_windows=int(seg.kept_windows[t]),
                     total_windows=total,
                     config=name,
-                    logits=None if logits is None else logits[t],
+                    logits=lg,
+                    detections=(
+                        Detections.from_raw(lg, detect_classes)
+                        if lg is not None and detect_classes is not None
+                        else None
+                    ),
+                    events=None if packets is None else packets[t],
                 )
             )
         return results
