@@ -61,10 +61,12 @@ BATCH = 16
 GATE = DeltaGateConfig(threshold=0.02, hysteresis=1, keyframe_interval=24)
 
 
-def _serve(pipe: FPCAPipeline, cams: dict, gating: bool) -> tuple[float, StreamServer]:
+def _serve(
+    pipe: FPCAPipeline, cams: dict, gating: bool, config: str = "cls"
+) -> tuple[float, StreamServer]:
     server = StreamServer(pipe, GATE, depth=2, gating=gating)
     for name in cams:
-        server.add_stream(name, "cls")
+        server.add_stream(name, config)
     ticks = (
         {name: cam.frame_at(t) for name, cam in cams.items()}
         for t in range(N_FRAMES)
@@ -114,10 +116,10 @@ def run() -> list[Row]:
         for name, cam in cams.items()
     }
 
-    def _serve_scan(m_bucket=None):
+    def _serve_scan(m_bucket=None, config="cls"):
         srv = StreamServer(pipe, GATE, depth=2, gating=True)
         for name in frame_stacks:
-            srv.add_stream(name, "cls")
+            srv.add_stream(name, config)
         t0 = time.perf_counter()
         for name, stack in frame_stacks.items():
             srv.run_segment(name, stack, m_bucket=m_bucket)
@@ -184,6 +186,41 @@ def run() -> list[Row]:
         model, list(server.sessions["cam0"].block_masks)
     )
 
+    # quantised int8 lanes: the SAME classifier compiled precision="int8" —
+    # LUT-collapsed bucket transfer in the basis frontend + int8 head with
+    # exact int32 accumulation, activation scales calibrated on the batched
+    # frames' counts.  Parity vs f32 is bounded, not bit-exact (pinned in
+    # tests/test_quant.py); the lanes here record the measured numbers.
+    from repro.models.quant import logit_parity, quantize_head_params
+
+    model_i8 = model.replace(precision="int8")
+    fe_cal = fpca_compile(model.frontend, backend="basis", weights=kernel,
+                          model=bucket_model)
+    head_params_i8 = quantize_head_params(
+        model_i8, head_params, sample_counts=fe_cal.run(frames)
+    )
+    m_i8 = fpca_compile(model_i8, backend="basis", weights=kernel,
+                        head_params=head_params_i8, model=bucket_model)
+    us_batched_i8 = time_fn(lambda: m_i8.run(frames), iters=5)
+    fps_batched_i8 = BATCH / (us_batched_i8 * 1e-6)
+    parity = logit_parity(np.asarray(m.run(frames)), np.asarray(m_i8.run(frames)))
+
+    pipe.register("cls8", model_i8, kernel, head_params=head_params_i8)
+    _serve(pipe, cams, gating=True, config="cls8")      # warm-up (compiles)
+    pipe.reset_bucket_state()
+    t_gated_i8, _ = _serve(pipe, cams, gating=True, config="cls8")
+    fps_gated_i8 = n_served / t_gated_i8
+
+    _, probe_i8 = _serve_scan(config="cls8")
+    scan_bucket_i8 = max(
+        probe_i8.sessions[n]._segment_state.suggested_bucket or 1
+        for n in frame_stacks
+    )
+    _serve_scan(m_bucket=scan_bucket_i8, config="cls8")  # warm-up
+    t_scan_i8, _ = _serve_scan(m_bucket=scan_bucket_i8, config="cls8")
+    fps_scan_i8 = n_served / t_scan_i8
+    head_model = analysis.head_report(model)
+
     record = {
         "workload": {
             "streams": N_STREAMS, "frames_per_stream": N_FRAMES,
@@ -248,6 +285,36 @@ def run() -> list[Row]:
             "enabled_overhead_frac": t_scan_tel / t_scan - 1.0,
             "fleet_report": fleet,
         },
+        "quantised_int8": {
+            "batched": {
+                "us_per_batch": us_batched_i8,
+                "frames_per_s": fps_batched_i8,
+                "speedup_vs_f32": fps_batched_i8 / fps_batched,
+            },
+            "stream_masked": {
+                "s_total": t_gated_i8,
+                "frames_per_s": fps_gated_i8,
+                "speedup_vs_f32": fps_gated_i8 / fps_gated,
+            },
+            "scan_segment": {
+                "s_total": t_scan_i8,
+                "frames_per_s": fps_scan_i8,
+                "m_bucket": scan_bucket_i8,
+                "speedup_vs_f32": fps_scan_i8 / fps_scan,
+            },
+            "parity": {
+                "max_abs_divergence": float(parity["max_abs_divergence"]),
+                "top1_agreement": float(parity["top1_agreement"]),
+            },
+            "head_model": {
+                "t_head_f32": head_model["t_head_f32"],
+                "t_head_int8": head_model["t_head_int8"],
+                "e_head_f32": head_model["e_head_f32"],
+                "e_head_int8": head_model["e_head_int8"],
+                "int8_speedup": head_model["int8_speedup"],
+                "int8_energy_ratio": head_model["int8_energy_ratio"],
+            },
+        },
     }
     write_json(BENCH_JSON, record)
 
@@ -276,4 +343,15 @@ def run() -> list[Row]:
          f"{ev.events} events/{ev.ticks} ticks "
          f"(+{ev.events_pos}/-{ev.events_neg}); static scene "
          f"{sev.events} events"),
+        ("model_e2e_batched_int8", us_batched_i8,
+         f"B={BATCH} int8 -> {fps_batched_i8:.0f} frames/s "
+         f"({fps_batched_i8 / fps_batched:.2f}x f32, max |dlogit| "
+         f"{parity['max_abs_divergence']:.3f}, top-1 agree "
+         f"{parity['top1_agreement']:.2f})"),
+        ("model_stream_masked_int8", t_gated_i8 / n_served * 1e6,
+         f"{fps_gated_i8:.0f} frames/s "
+         f"({fps_gated_i8 / fps_gated:.2f}x f32 masked)"),
+        ("model_scan_segment_int8", t_scan_i8 / n_served * 1e6,
+         f"{fps_scan_i8:.0f} frames/s "
+         f"({fps_scan_i8 / fps_scan:.2f}x f32 scan, bucket {scan_bucket_i8})"),
     ]

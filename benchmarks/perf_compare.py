@@ -140,6 +140,24 @@ def compare_model(frontend_path: Path, model_path: Path) -> None:
           f"{sm['model_energy_vs_dense']:.2f}x energy / "
           f"{sm['model_latency_vs_dense']:.2f}x latency, "
           f"fps_effective {_fps(sm['model_fps_effective'])}")
+    # int8 lanes (absent in pre-quantisation BENCH_model.json files)
+    q = md.get("quantised_int8")
+    if q:
+        par = q["parity"]
+        print(f"  int8 batched               : "
+              f"{q['batched']['frames_per_s']:8.1f} frames/s "
+              f"({q['batched']['speedup_vs_f32']:.2f}x f32 fused)")
+        print(f"  int8 stream / scan         : "
+              f"{q['stream_masked']['frames_per_s']:8.1f} frames/s masked "
+              f"({q['stream_masked']['speedup_vs_f32']:.2f}x f32), "
+              f"{q['scan_segment']['frames_per_s']:.1f} frames/s scan "
+              f"({q['scan_segment']['speedup_vs_f32']:.2f}x f32)")
+        print(f"  int8 parity vs f32         : max |dlogit| "
+              f"{par['max_abs_divergence']:.4f}, top-1 agreement "
+              f"{par['top1_agreement']:.2f}")
+        hm = q["head_model"]
+        print(f"  int8 head datapath model   : {hm['int8_speedup']:.1f}x "
+              f"latency, {hm['int8_energy_ratio']:.2f}x energy per frame")
 
 
 def show_telemetry(path: Path) -> None:

@@ -66,11 +66,14 @@ def load_export(path: str) -> tuple[FPCAModelProgram, dict]:
     while f"head{i}_w" in bundle:
         head_params.append({"w": bundle[f"head{i}_w"], "b": bundle[f"head{i}_b"]})
         i += 1
-    return model, {
+    out = {
         "kernel": bundle["kernel"],
         "bn_offset": bundle["bn_offset"],
         "head_params": head_params,
     }
+    if "quant_scales" in bundle:
+        out["quant_scales"] = bundle["quant_scales"]
+    return model, out
 
 
 def fresh_network(image_h: int, seed: int = 0) -> tuple[FPCAModelProgram, dict]:
@@ -94,6 +97,9 @@ def main() -> None:
                     help="sensor size for the fresh-network path")
     ap.add_argument("--frames", type=int, default=16)
     ap.add_argument("--backend", default="basis")
+    ap.add_argument("--precision", choices=("f32", "int8"), default="f32",
+                    help="int8 serves the calibrated quantised lowering "
+                         "(bounded parity vs the f32 reference)")
     args = ap.parse_args()
 
     if args.weights:
@@ -103,6 +109,20 @@ def main() -> None:
         model, params = fresh_network(args.image_h)
         print("serving a freshly-initialised network (pass --weights for the "
               "trained one)")
+
+    serve_model, serve_head = model, params["head_params"]
+    if args.precision == "int8":
+        from repro.models.quant import quantize_head_params, unpack_act_scales
+
+        serve_model = model.replace(precision="int8")
+        act_scales = (unpack_act_scales(model, params["quant_scales"])
+                      if "quant_scales" in params else None)
+        serve_head = quantize_head_params(
+            serve_model, params["head_params"], act_scales=act_scales
+        )
+        print("precision: int8 "
+              + ("(export-calibrated activation scales)" if act_scales
+                 else "(data-free full-scale calibration)"))
     spec = model.spec
     print(f"model: {spec.image_h}x{spec.image_w}x{spec.in_channels} "
           f"-> frontend {model.frontend.out_shape} -> head "
@@ -111,8 +131,8 @@ def main() -> None:
 
     # 1. compile the WHOLE model once; serve a batch of frames as logits
     m = fpca_compile(
-        model, backend=args.backend, weights=params["kernel"],
-        bn_offset=params["bn_offset"], head_params=params["head_params"],
+        serve_model, backend=args.backend, weights=params["kernel"],
+        bn_offset=params["bn_offset"], head_params=serve_head,
     )
     rng = np.random.default_rng(1)
     batch = rng.uniform(0, 1, (8, spec.image_h, spec.image_w, 3)).astype(np.float32)
@@ -120,14 +140,23 @@ def main() -> None:
     print(f"batched run: {batch.shape[0]} frames -> logits {logits.shape}, "
           f"classes {np.argmax(logits, -1).tolist()}")
 
-    # parity: the fused executable == frontend handle + reference head apply
+    # parity: f32 fused executable is bit-identical to frontend handle +
+    # reference head apply; int8 is parity-BOUNDED against that f32 reference
     fe = fpca_compile(model.frontend, backend=args.backend,
                       weights=params["kernel"], bn_offset=params["bn_offset"],
                       model=m.model)
     ref = np.asarray(model.apply_head(params["head_params"], fe.run(batch)))
-    assert np.array_equal(logits, ref), "fused logits diverge from reference"
-    print("parity: fused frontend+head jit is bit-identical to the composed "
-          "reference")
+    if args.precision == "int8":
+        from repro.models.quant import logit_parity
+
+        par = logit_parity(ref, logits)
+        print(f"parity (int8 vs f32 reference): max |dlogit| "
+              f"{par['max_abs_divergence']:.4f}, top-1 agreement "
+              f"{par['top1_agreement']:.2f}")
+    else:
+        assert np.array_equal(logits, ref), "fused logits diverge from reference"
+        print("parity: fused frontend+head jit is bit-identical to the "
+              "composed reference")
 
     # 2. reprogram NVM planes AND head weights: guaranteed zero recompiles
     misses = m.cache_info().misses
@@ -138,8 +167,7 @@ def main() -> None:
     assert m.cache_info().misses == misses, "reprogram must never recompile"
     print(f"reprogram (NVM + head): zero recompiles "
           f"(cache misses still {misses})")
-    m.reprogram(params["kernel"], params["bn_offset"],
-                head_params=params["head_params"])
+    m.reprogram(params["kernel"], params["bn_offset"], head_params=serve_head)
 
     # 3. skip-aware streaming classification off the handle
     cam = SyntheticMovingObject((spec.image_h, spec.image_w), seed=3)
@@ -158,8 +186,8 @@ def main() -> None:
 
     # 4. fleet path: pipeline + StreamServer, head cost accounted
     pipe = FPCAPipeline(m.model, backend=args.backend)
-    pipe.register("vww", model, params["kernel"], params["bn_offset"],
-                  head_params=params["head_params"])
+    pipe.register("vww", serve_model, params["kernel"], params["bn_offset"],
+                  head_params=serve_head)
     out = pipe.serve([FrontendRequest("vww", batch[0])])
     print(f"pipeline serve: logits {np.asarray(out[0]).shape} "
           f"(class {int(np.argmax(np.asarray(out[0])))})")

@@ -143,8 +143,17 @@ def export_model_program(
     return model, head_params
 
 
-def save_export(path: str, layer: FPCAFrontend, params: dict) -> None:
-    """Serialize the export for examples/serve_fpca_cnn.py (npz bundle)."""
+def save_export(
+    path: str, layer: FPCAFrontend, params: dict, calib_images=None
+) -> None:
+    """Serialize the export for examples/serve_fpca_cnn.py (npz bundle).
+
+    When ``calib_images`` is given, the bundle also carries per-stage int8
+    activation scales (``quant_scales``) calibrated by running the trained
+    f32 head on the circuit-oracle counts for those images —
+    ``serve_fpca_cnn.py --precision int8`` picks them up to serve the
+    quantised lowering with data-calibrated (not worst-case) scales.
+    """
     model, head_params = export_model_program(layer, params)
     spec, adc, enc = layer.config.spec, layer.config.adc, layer.config.enc
     meta = {
@@ -162,6 +171,18 @@ def save_export(path: str, layer: FPCAFrontend, params: dict) -> None:
     for i, p in enumerate(head_params):
         arrays[f"head{i}_w"] = np.asarray(p["w"], np.float32)
         arrays[f"head{i}_b"] = np.asarray(p["b"], np.float32)
+    if calib_images is not None:
+        from repro.models.quant import calibrate_head_scales, pack_act_scales
+
+        # the frontend oracle emits activation units (counts * input_scale);
+        # the model program consumes raw counts, so divide the scale back out
+        acts = layer.apply(params["frontend"], jnp.asarray(calib_images),
+                           train=False)
+        counts = jnp.asarray(acts) / jnp.float32(model.input_scale)
+        scales = calibrate_head_scales(
+            model, model.bind_head_params(head_params), counts
+        )
+        arrays["quant_scales"] = pack_act_scales(model, scales)
     np.savez(path, **arrays)
     print(f"exported FPCAModelProgram parameters -> {path} "
           f"(serve with examples/serve_fpca_cnn.py --weights {path})")
@@ -207,7 +228,8 @@ def main() -> None:
         print(f"  [{mode}] deployed-on-circuit accuracy: {acc*100:.1f}% "
               f"({time.time()-t0:.0f}s)")
         if mode == "hw_aware" and args.export:
-            save_export(args.export, layer, params)
+            save_export(args.export, layer, params,
+                        calib_images=data.batch_at(0, args.batch)["images"])
 
     gap = results["hw_aware"] - results["naive"]
     print(f"\nco-design gap (hw-aware - naive, both deployed on analog oracle): "

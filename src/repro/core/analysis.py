@@ -152,11 +152,18 @@ class DigitalConstants:
 
     Representative 28nm edge-DSP numbers (stated assumptions, same posture
     as the timing constants above): per-MAC energy and sustained MAC
-    throughput of the digital classifier the FPCA frontend feeds.
+    throughput of the digital classifier the FPCA frontend feeds, for both
+    the full-precision serving datapath and the quantised int8 lowering
+    (``FPCAModelProgram(precision="int8")``).  The int8 datapath of an edge
+    MAC array is ~4x cheaper per op and ~4x higher throughput than the
+    full-precision one on the same silicon (narrower multipliers, 4-wide
+    SIMD lanes).
     """
 
-    e_mac: float = 1.0e-12      # J / MAC (8-bit, 28nm edge accelerator)
-    macs_per_s: float = 4e9     # sustained MAC/s
+    e_mac: float = 1.0e-12        # J / MAC, full-precision serving datapath
+    macs_per_s: float = 4e9       # sustained MAC/s, full-precision
+    e_mac_int8: float = 0.25e-12  # J / MAC, int8 datapath (4-wide SIMD)
+    macs_per_s_int8: float = 16e9  # sustained int8 MAC/s
 
 
 def head_flops(model) -> dict:
@@ -274,13 +281,31 @@ def _graph_head_flops(model) -> dict:
 
 def head_report(model, digital: DigitalConstants = DigitalConstants()) -> dict:
     """Energy / latency of one frame through the digital head (Eq.-2-style
-    accounting for the backend the frontend feeds)."""
+    accounting for the backend the frontend feeds).
+
+    Reports both precisions side by side (``e_head_f32``/``e_head_int8``,
+    same for ``t_``) plus the datapath ratios; the headline ``e_head`` /
+    ``t_head`` follow the model program's own ``precision`` so downstream
+    aggregates (:func:`model_streaming_report`) account the lowering that
+    actually serves.
+    """
     fl = head_flops(model)
     ops = fl["macs"] + fl["elem_ops"]
+    e_f32, t_f32 = ops * digital.e_mac, ops / digital.macs_per_s
+    e_int8, t_int8 = ops * digital.e_mac_int8, ops / digital.macs_per_s_int8
+    precision = getattr(model, "precision", "f32")
+    e_head, t_head = (e_int8, t_int8) if precision == "int8" else (e_f32, t_f32)
     return {
         **fl,
-        "e_head": ops * digital.e_mac,
-        "t_head": ops / digital.macs_per_s,
+        "precision": precision,
+        "e_head": e_head,
+        "t_head": t_head,
+        "e_head_f32": e_f32,
+        "t_head_f32": t_f32,
+        "e_head_int8": e_int8,
+        "t_head_int8": t_int8,
+        "int8_energy_ratio": e_int8 / e_f32,
+        "int8_speedup": t_f32 / t_int8,
     }
 
 

@@ -87,6 +87,11 @@ from repro.models.heads import (
     HeadGraph,
     Node,
 )
+from repro.models.quant import (
+    calibrate_head_scales,
+    logit_parity,
+    quantize_head_params,
+)
 from repro.fpca.zoo import available_archs, build_model, register_arch
 
 __all__ = [
@@ -104,6 +109,10 @@ __all__ = [
     "DenseSpec",
     "ActivationSpec",
     "CompiledModel",
+    # quantised int8 serving (precision="int8" on FPCAModelProgram)
+    "quantize_head_params",
+    "calibrate_head_scales",
+    "logit_parity",
     # model zoo (meta-arch registry + head graphs + detections)
     "register_arch",
     "build_model",

@@ -75,6 +75,12 @@ class Backend:
     # evaluate densely and mask post-hoc (the reference oracle) serve every
     # bucket with one executable, so caches can collapse the key.
     bucket_sensitive: bool = True
+    # whether make_executable accepts transfer="int8" — the quantised
+    # bucket-transfer LUT of precision="int8" model programs.  Backends
+    # without it keep serving the f32 frontend under int8 models (the
+    # reference backend stays the f32-frontend oracle the parity harness
+    # bounds against); only flag backends whose factory takes the kwarg.
+    quant_transfer: bool = False
     description: str = ""
 
     def instrumented(self, fn: Callable, *, site: str) -> Callable:
@@ -113,7 +119,15 @@ class Backend:
         skipped windows enter the head as exact zeros).  Head parameters
         enter traced, so reprogramming them — like NVM weights — never
         recompiles.
+
+        A ``precision="int8"`` model program selects the quantised head
+        lowering through ``apply_head`` (same dispatch, traced quant
+        pytree); on :attr:`quant_transfer` backends the frontend stage also
+        serves the int8 bucket-transfer LUT.
         """
+        kw = {}
+        if self.quant_transfer and model_program.precision == "int8":
+            kw["transfer"] = "int8"
         frontend = self.make_executable(
             bucket_model,
             spec=model_program.frontend.spec,
@@ -121,6 +135,7 @@ class Backend:
             enc=model_program.frontend.enc,
             interpret=interpret,
             m_bucket=m_bucket,
+            **kw,
         )
         head = model_program.apply_head
 
@@ -212,6 +227,14 @@ class Backend:
         common = dict(
             spec=spec, adc=adc, enc=enc, interpret=interpret
         )
+        if (
+            self.quant_transfer
+            and model_program is not None
+            and model_program.precision == "int8"
+        ):
+            # int8 model segments serve the quantised bucket transfer in
+            # every in-scan frontend branch, matching the fused model jit
+            common["transfer"] = "int8"
         if not gated:
             mb = None
             fe_dense = self.make_executable(bucket_model, m_bucket=None, **common)
@@ -388,6 +411,7 @@ def register_backend(
     fused: bool = True,
     differentiable: bool = False,
     bucket_sensitive: bool = True,
+    quant_transfer: bool = False,
     description: str = "",
     overwrite: bool = False,
 ) -> Callable[[Callable], Callable]:
@@ -397,7 +421,11 @@ def register_backend(
     ``factory(model, *, spec, adc, enc, interpret=None, m_bucket=None)`` and
     return a jitted ``(images, kernel, bn_offset) -> counts`` closure —
     ``(images, kernel, bn_offset, window_mask)`` when ``m_bucket`` is set
-    (the region-skip compacted serving path).
+    (the region-skip compacted serving path).  With
+    ``quant_transfer=True`` the factory must additionally accept
+    ``transfer="f32" | "int8"`` (the quantised bucket-transfer lowering of
+    ``precision="int8"`` model programs); the kwarg is never passed to
+    backends registered without it.
     """
 
     def deco(make_executable: Callable) -> Callable:
@@ -410,6 +438,7 @@ def register_backend(
             fused=fused,
             differentiable=differentiable,
             bucket_sensitive=bucket_sensitive,
+            quant_transfer=quant_transfer,
             description=description,
         )
         return make_executable
@@ -478,12 +507,13 @@ def _fused_factory(impl: str) -> Callable:
         enc: WeightEncoding | None = None,
         interpret: bool | None = None,
         m_bucket: int | None = None,
+        transfer: str = "f32",
     ) -> Callable:
         from repro.kernels.fpca_conv.ops import make_fpca_conv_executable
 
         return make_fpca_conv_executable(
             model, spec=spec, adc=adc, enc=enc, impl=impl,
-            interpret=interpret, m_bucket=m_bucket,
+            interpret=interpret, m_bucket=m_bucket, transfer=transfer,
         )
 
     return make_executable
@@ -498,6 +528,7 @@ register_backend(
 register_backend(
     "basis",
     conv=_fused_conv("basis"),
+    quant_transfer=True,
     description="basis-expanded matmul-bank math lowered through XLA "
     "(fast serving path on non-TPU hosts)",
 )(_fused_factory("basis"))

@@ -849,19 +849,35 @@ class CompiledFrontend:
         )
         return jax.device_put(images, sharding)
 
+    def _frontend_transfer(self) -> str:
+        """Bucket-transfer lowering the frontend executables serve: "int8"
+        for a precision="int8" model program on a quant_transfer backend
+        (so streaming counts match the fused model jit's frontend stage),
+        "f32" everywhere else — frontend-only handles included."""
+        mp = getattr(self, "model_program", None)
+        if (
+            mp is not None
+            and mp.precision == "int8"
+            and self.backend.quant_transfer
+        ):
+            return "int8"
+        return "f32"
+
     def _executable(self, m_bucket: int | None) -> Callable:
         # bucket-insensitive backends (dense eval + post-hoc mask) serve
         # every bucket size with one executable: collapse the key so sticky
         # bucket transitions don't churn the shared LRU with identical jits
         if m_bucket is not None and not self.backend.bucket_sensitive:
             m_bucket = -1
-        key = self._sig + (self.backend.name, m_bucket)
+        transfer = self._frontend_transfer()
+        key = self._sig + (self.backend.name, m_bucket, transfer)
 
         def build() -> Callable:
             # a FRESH jitted closure per signature: its compiled programs are
             # owned by the closure, so LRU eviction genuinely frees the
             # executable (a shared module-level jit cache would keep them
             # alive).
+            kw = {"transfer": transfer} if transfer != "f32" else {}
             return self.backend.instrumented(
                 self.backend.make_executable(
                     self.model,
@@ -870,6 +886,7 @@ class CompiledFrontend:
                     enc=self.program.enc,
                     interpret=self.interpret,
                     m_bucket=m_bucket,
+                    **kw,
                 ),
                 site="frontend",
             )

@@ -407,16 +407,31 @@ class FPCAModelProgram:
     byte-identical.  ``arch`` is the registered zoo name this program was
     built under (``None`` for hand-rolled programs) — a telemetry label
     only, deliberately **excluded** from :meth:`signature`.
+
+    ``precision`` selects the digital-head lowering: ``"f32"`` (the
+    bit-exact reference) or ``"int8"`` — per-channel symmetric int8
+    weights, calibrated int8 activations and int32 accumulation
+    (:mod:`repro.models.quant`), parity-bounded against f32.  It is a
+    *compile* option (in the signature: the two lowerings are distinct
+    executables), but the quantised parameters — scales included — enter
+    traced, so :meth:`repro.fpca.CompiledModel.reprogram` stays
+    zero-recompile either way.
     """
 
     frontend: FPCAProgram
     head: Any
     input_scale: float = 1.0
     arch: str | None = None
+    precision: str = "f32"
 
     def __post_init__(self) -> None:
         if not isinstance(self.frontend, FPCAProgram):
             raise TypeError("frontend must be an FPCAProgram")
+        if self.precision not in ("f32", "int8"):
+            raise ValueError(
+                f"unknown precision {self.precision!r}; available: "
+                f"('f32', 'int8')"
+            )
         from repro.models.heads import HeadGraph
 
         if isinstance(self.head, HeadGraph):
@@ -559,13 +574,31 @@ class FPCAModelProgram:
                 params.append({})
         return params
 
-    def bind_head_params(self, params: Any) -> list[dict]:
-        """Validate + coerce a head parameter pytree for serving (one f32
-        dict per stage) — the single binding path used by
+    def bind_head_params(self, params: Any) -> Any:
+        """Validate + coerce a head parameter pytree for serving — the
+        single binding path used by
         :meth:`repro.fpca.CompiledModel.reprogram` and
         :meth:`repro.serving.FPCAPipeline.register`, so a stage-count or
         weight-shape mismatch fails at the call site, not inside a jitted
-        trace."""
+        trace.
+
+        ``precision="f32"`` binds one f32 dict per stage.  With
+        ``precision="int8"`` an already-quantised pytree (``w_q`` leaves,
+        e.g. calibrated at export time) is validated and bound as-is; a
+        plain f32 pytree is quantised on the spot with the data-free
+        full-scale calibration (:func:`repro.models.quant.
+        quantize_head_params` — pass explicit ``act_scales`` there for a
+        data-calibrated bundle)."""
+        if self.precision == "int8":
+            from repro.models import quant
+
+            if quant.is_quantized_params(params):
+                return quant.bind_quant_head_params(self, params)
+            return quant.quantize_head_params(self, params)
+        return self._bind_f32(params)
+
+    def _bind_f32(self, params: Any) -> Any:
+        """The f32 binding path (also the pre-quantisation validator)."""
         if self.is_graph_head:
             return self.head.bind(params, self.frontend.out_shape)
         import jax.numpy as jnp
@@ -609,11 +642,20 @@ class FPCAModelProgram:
         (:meth:`repro.fpca.CompiledModel.run`) traces exactly these ops after
         the frontend, so its logits are bit-identical to composing a
         frontend handle with this apply.
+
+        With ``precision="int8"`` the contract is instead the quantised
+        lowering (:func:`repro.models.quant.apply_head_int8`): same dispatch
+        site, so every executable — fused model jit, head jit, patched
+        streaming head, in-scan segment head — serves the int8 path.
         """
         import jax.numpy as jnp
 
         from repro.models.layers import avg_pool2d, conv2d, linear, max_pool2d
 
+        if self.precision == "int8":
+            from repro.models.quant import apply_head_int8
+
+            return apply_head_int8(self, params, counts)
         if self.is_graph_head:
             x = jnp.asarray(counts, jnp.float32) * jnp.float32(self.input_scale)
             return self.head.apply(params, x)
@@ -659,6 +701,10 @@ class FPCAModelProgram:
                 + self.frontend.signature()
                 + (head_sig, ("input_scale", float(self.input_scale)))
             )
+            if self.precision != "f32":
+                # appended only off the f32 default, so every pre-existing
+                # f32 signature stays byte-identical (golden-pinned)
+                sig = sig + (("precision", self.precision),)
             object.__setattr__(self, "_signature", sig)
         return sig
 

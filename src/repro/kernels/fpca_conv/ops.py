@@ -59,6 +59,55 @@ __all__ = [
 
 _LANES = 128
 
+# int8 transfer: the bucket-sigmoid gate bank collapses into a LUT over the
+# 8-bit requantised gate input (256 levels — the SS-ADC's own resolution).
+_TRANSFER_LEVELS = 256
+
+
+def _stable_sigmoid(z: np.ndarray) -> np.ndarray:
+    out = np.empty_like(z)
+    pos = z >= 0
+    out[pos] = 1.0 / (1.0 + np.exp(-z[pos]))
+    ez = np.exp(z[~pos])
+    out[~pos] = ez / (1.0 + ez)
+    return out
+
+
+def _transfer_lut(model: BucketCurvefitModel, tables: dict) -> tuple:
+    """Bake the bucket-sigmoid transfer into a 256-entry coefficient LUT.
+
+    The f32 path evaluates, per element, ``v = sum_i gate_i(xg) * (const_i
+    + sum_p c_i[p] * term_p)`` — ``n_buckets`` pairs of sigmoids over the
+    full activation plane.  Swapping the sums gives ``v = ceff_const(xg) +
+    sum_p ceff_p(xg) * term_p`` where every effective coefficient depends
+    on ``xg`` alone, so requantising ``xg`` to 8 bits (the ADC's own level
+    count) turns the whole gate bank into ONE gather from a ``(256,
+    1 + n_pairs)`` table — the int8-DSP deployment form of a calibrated
+    transfer curve.  Entries are evaluated at level centers in f64 and
+    stored f32; parity against the sigmoid bank is bounded (<= 1 ADC LSB on
+    a vanishing fraction of counts), pinned by the quant parity harness.
+    """
+    T = _TRANSFER_LEVELS
+    grid = (np.arange(T, dtype=np.float64) + 0.5) / T
+    edges = np.arange(model.n_buckets, dtype=np.float64) / model.n_buckets
+    gates = np.stack(
+        [
+            _stable_sigmoid(model.sharpness * (grid - edges[i]))
+            + _stable_sigmoid(
+                model.sharpness * (edges[i] + 1.0 / model.n_buckets - grid)
+            )
+            - 1.0
+            for i in range(model.n_buckets)
+        ],
+        axis=1,
+    )                                               # (T, n_buckets)
+    pairs = list(tables["by_pair"])
+    cols = [gates @ np.asarray(tables["const"], np.float64)]
+    cols += [
+        gates @ np.asarray(tables["by_pair"][p], np.float64) for p in pairs
+    ]
+    return np.stack(cols, axis=1).astype(np.float32), pairs
+
 
 def window_bucket(n_keep: int, m_total: int) -> int:
     """Static row-bucket size for ``n_keep`` kept windows out of ``m_total``.
@@ -229,6 +278,7 @@ def fpca_conv_basis_jnp(
     row_valid: jax.Array | None = None,
     fuse_phases: bool = False,
     compute_dtype=None,
+    transfer: str = "f32",
 ) -> jax.Array:
     """The Pallas kernel's exact math as a flat jnp program (no tiling).
 
@@ -240,15 +290,27 @@ def fpca_conv_basis_jnp(
     ``row_valid (M,)``, if given, marks the real rows of a region-skip
     compacted patch bucket; invalid rows come out as exact zeros (same
     epilogue contract as the Pallas kernel).
+
+    ``transfer="int8"`` serves the quantised bucket transfer: the gate
+    input ``xg`` requantises to 8 bits and the whole sigmoid bank becomes
+    one gather from the baked :func:`_transfer_lut` coefficient table —
+    the dominant speed lane of ``precision="int8"`` model programs
+    (parity-bounded, not bit-exact; selected only through backends with
+    ``quant_transfer``).
     """
     from repro.kernels.fpca_conv.kernel import _bucket_tables, precompute_weight_planes
 
+    if transfer not in ("f32", "int8"):
+        raise ValueError(f"unknown transfer {transfer!r}")
     M, N = patches.shape
     if mask is None:
         mask = jnp.ones((N,), jnp.float32)
         n_real = n_real or N
     cdt = compute_dtype or jnp.float32
     tables = _bucket_tables(model)
+    lut = lut_pairs = None
+    if transfer == "int8":
+        lut, lut_pairs = _transfer_lut(model, tables)
     x = patches.astype(cdt)
     x2, x3 = x * x, x * x * x
     xp = {1: x, 2: x2, 3: x3}
@@ -267,6 +329,23 @@ def fpca_conv_basis_jnp(
         mm = {(a, b): _dot(xp[a], planes["w_pows"][b - 1]) for (a, b) in ((1, 1), (1, 2), (2, 1))}
         v_est = _dot(a_i, planes["aw"])
         xg = v_est / model.v_range
+        if transfer == "int8":
+            # quantised transfer: one LUT gather replaces the sigmoid bank
+            xg_q = jnp.clip(
+                jnp.floor(xg * _TRANSFER_LEVELS).astype(jnp.int32),
+                0, _TRANSFER_LEVELS - 1,
+            )
+            g = jnp.take(jnp.asarray(lut), xg_q, axis=0)    # (M, C, 1 + P)
+            v_pred = g[..., 0]
+            for k, (a, b) in enumerate(lut_pairs):
+                if a == 0:
+                    term = planes["cs"][b][None, :]
+                elif b == 0:
+                    term = rv[a]
+                else:
+                    term = mm[(a, b)]
+                v_pred = v_pred + g[..., k + 1] * term
+            return v_pred
         v_pred = jnp.zeros_like(xg)
         for i in range(model.n_buckets):
             gate = (
@@ -319,7 +398,13 @@ def _fpca_conv_impl(
     interpret: bool | None,
     impl: str,
     m_bucket: int | None = None,
+    transfer: str = "f32",
 ) -> jax.Array:
+    if transfer != "f32" and impl != "basis":
+        raise ValueError(
+            f"transfer={transfer!r} is only lowered by the basis impl "
+            f"(got impl={impl!r})"
+        )
     model = thaw_model(frozen)
     w_pos, w_neg = encode_weights(kernel, spec, enc)            # (c_o, N)
     patches = extract_windows(images, spec)                     # (B, h_o, w_o, N)
@@ -355,6 +440,7 @@ def _fpca_conv_impl(
             mask=mask,
             n_real=spec.n_active_pixels,
             row_valid=row_valid,
+            transfer=transfer,
         )
     else:
         counts = fpca_conv_pallas(
@@ -386,7 +472,7 @@ _fpca_conv_jit = functools.partial(
     jax.jit,
     static_argnames=(
         "frozen", "spec", "adc", "enc", "block_m", "block_c", "interpret", "impl",
-        "m_bucket",
+        "m_bucket", "transfer",
     ),
 )(_fpca_conv_impl)
 
@@ -402,6 +488,7 @@ def make_fpca_conv_executable(
     interpret: bool | None = None,
     impl: str = "pallas",
     m_bucket: int | None = None,
+    transfer: str = "f32",
 ):
     """A fresh jitted ``(images, kernel, bn_offset) -> counts`` executable.
 
@@ -427,6 +514,13 @@ def make_fpca_conv_executable(
     enc = enc or WeightEncoding()
     if impl not in ("pallas", "basis"):
         raise ValueError(f"unknown impl {impl!r}")
+    if transfer not in ("f32", "int8"):
+        raise ValueError(f"unknown transfer {transfer!r}")
+    if transfer != "f32" and impl != "basis":
+        raise ValueError(
+            f"transfer={transfer!r} is only lowered by the basis impl "
+            f"(got impl={impl!r})"
+        )
     frozen = freeze_model(model)
 
     if m_bucket is None:
@@ -437,6 +531,7 @@ def make_fpca_conv_executable(
                 images, kernel, bn_offset,
                 frozen=frozen, spec=spec, adc=adc, enc=enc,
                 block_m=block_m, block_c=block_c, interpret=interpret, impl=impl,
+                transfer=transfer,
             )
 
     else:
@@ -450,7 +545,7 @@ def make_fpca_conv_executable(
                 images, kernel, bn_offset, window_mask,
                 frozen=frozen, spec=spec, adc=adc, enc=enc,
                 block_m=block_m, block_c=block_c, interpret=interpret, impl=impl,
-                m_bucket=m_bucket,
+                m_bucket=m_bucket, transfer=transfer,
             )
 
     return run

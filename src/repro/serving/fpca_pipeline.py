@@ -76,8 +76,19 @@ __all__ = [
     "FrontendConfig",
     "PipelineStats",
     "FPCAPipeline",
+    "CalibrationKeyError",
     "spec_signature",
 ]
+
+
+class CalibrationKeyError(ValueError):
+    """A calibration handed to :class:`FPCAPipeline` as a plain
+    :class:`BucketCurvefitModel` is implicitly keyed to the **default**
+    :class:`CircuitParams` — serving a program that carries a custom circuit
+    from it would silently pair the wrong physics with the wrong program
+    (either by mis-using the supplied calibration or by quietly refitting and
+    ignoring it).  Key calibrations explicitly as
+    ``{(circuit, n_pixels): model}`` to serve custom-circuit programs."""
 
 
 def __getattr__(name: str) -> Any:
@@ -240,12 +251,19 @@ class FPCAPipeline:
         # calibrations unless keyed by an explicit (circuit, n_pixels) tuple.
         default_circuit = CircuitParams()
         self._models: dict[tuple[CircuitParams, int], BucketCurvefitModel] = {}
+        # keys that came in WITHOUT an explicit circuit: these are trusted
+        # only for default-circuit programs (see CalibrationKeyError)
+        self._implicitly_keyed: set[tuple[CircuitParams, int]] = set()
         if isinstance(model, BucketCurvefitModel):
-            self._models[(default_circuit, model.n_pixels)] = model
+            key = (default_circuit, model.n_pixels)
+            self._models[key] = model
+            self._implicitly_keyed.add(key)
         elif isinstance(model, dict):
             for k, v in model.items():
                 key = k if isinstance(k, tuple) else (default_circuit, k)
                 self._models[key] = v
+                if not isinstance(k, tuple):
+                    self._implicitly_keyed.add(key)
         self._configs: dict[str, ProgrammedConfig | ProgrammedModel] = {}
         # one CompiledFrontend per compile signature, all sharing one bounded
         # executable cache — reprogramming weights never recompiles, and the
@@ -344,6 +362,17 @@ class FPCAPipeline:
     def _model_for(self, program: FPCAProgram) -> BucketCurvefitModel:
         key = (program.circuit, program.spec.n_active_pixels)
         if key not in self._models:
+            implicit_key = (CircuitParams(), key[1])
+            if implicit_key in self._implicitly_keyed:
+                raise CalibrationKeyError(
+                    f"this pipeline holds a calibration for "
+                    f"n_pixels={key[1]} passed as a plain "
+                    f"BucketCurvefitModel (implicitly a default-CircuitParams "
+                    f"calibration), but the program being served carries a "
+                    f"custom CircuitParams — refusing to guess which physics "
+                    f"it was fitted against.  Pass calibrations keyed "
+                    f"explicitly as {{(circuit, n_pixels): model}}."
+                )
             self._models[key] = fit_bucket_model(
                 program.circuit, n_pixels=key[1]
             )

@@ -17,23 +17,23 @@ quantize/dequantize (the semantics the test pins down).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+# the symmetric int8 leaf numerics are single-sourced with the quantised
+# head lowering (repro.models.quant) — gradient compression and int8
+# serving must agree on the same quantise/dequantise semantics
+from repro.models.quant import dequantize_leaf, quantize_leaf_symmetric
+
 __all__ = ["init_error_state", "compress_decompress", "sync_grads_compressed"]
+
+_quantize_leaf = quantize_leaf_symmetric
 
 
 def init_error_state(params: Any) -> Any:
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-
-def _quantize_leaf(g: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q, scale
 
 
 def compress_decompress(
@@ -44,7 +44,7 @@ def compress_decompress(
     def one(g, e):
         x = g.astype(jnp.float32) + e
         q, scale = _quantize_leaf(x)
-        deq = q.astype(jnp.float32) * scale
+        deq = dequantize_leaf(q, scale)
         return deq, x - deq
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)

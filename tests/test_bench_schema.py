@@ -24,6 +24,7 @@ REQUIRED_KEYS = {
     "BENCH_model.json": (
         "workload", "batched_dense", "stream_dense", "stream_masked",
         "scan_segment", "head", "sensor_model", "telemetry",
+        "quantised_int8",
     ),
     "BENCH_fleet.json": (
         "workload", "devices", "weak_scaling", "arbitration",
@@ -63,6 +64,36 @@ def test_bench_artifact_schema(name):
     for key in REQUIRED_KEYS[name]:
         assert key in rec, f"{name} is missing required key {key!r}"
     _assert_finite(rec, name)
+
+
+def test_model_bench_int8_lanes():
+    """The quantised-int8 lanes of BENCH_model.json carry the full
+    speedup/parity row set, strict-JSON finite throughout (the events
+    lanes' ``None`` fps sentinel stays the one sanctioned non-number)."""
+    path = REPO / "BENCH_model.json"
+    if not path.exists():
+        pytest.skip("BENCH_model.json not generated in this checkout")
+    rec = json.loads(path.read_text())
+    q = rec["quantised_int8"]
+    for lane in ("batched", "stream_masked", "scan_segment"):
+        assert "frames_per_s" in q[lane] and "speedup_vs_f32" in q[lane]
+        assert q[lane]["frames_per_s"] > 0
+        assert math.isfinite(q[lane]["speedup_vs_f32"])
+    par = q["parity"]
+    assert math.isfinite(par["max_abs_divergence"])
+    assert 0.0 <= par["top1_agreement"] <= 1.0
+    hm = q["head_model"]
+    for key in ("t_head_f32", "t_head_int8", "e_head_f32", "e_head_int8",
+                "int8_speedup", "int8_energy_ratio"):
+        assert math.isfinite(hm[key]), f"head_model.{key} not finite"
+    # the int8 datapath model must claim a cheaper head, not a dearer one
+    assert hm["t_head_int8"] < hm["t_head_f32"]
+    assert hm["e_head_int8"] < hm["e_head_f32"]
+    # zero-work fps sentinel contract: any absent rate in the events lanes
+    # is None, never 0/inf/nan
+    for scene in rec["events"].values():
+        fps = scene["events_per_s"]
+        assert fps is None or (isinstance(fps, float) and fps > 0)
 
 
 def test_stream_bench_telemetry_overhead_guard():

@@ -284,6 +284,37 @@ def test_pipeline_data_parallel_mesh(bucket_model):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_plain_calibration_rejected_for_custom_circuit(bucket_model):
+    """A calibration passed as a plain BucketCurvefitModel is implicitly a
+    default-CircuitParams fit — serving a custom-circuit program from that
+    pipeline must raise CalibrationKeyError, not silently pair the wrong
+    physics (or quietly refit and ignore the supplied model)."""
+    from repro.core.curvefit import fit_bucket_model
+    from repro.core.device_models import CircuitParams
+    from repro.fpca import FPCAProgram
+    from repro.serving.fpca_pipeline import CalibrationKeyError
+
+    pipe = _pipeline(bucket_model)
+    spec = _spec(5, 5, 1)
+    program = FPCAProgram(spec=spec, circuit=CircuitParams(drive_c=0.30))
+    rng = np.random.default_rng(0)
+    kernel = rng.normal(size=(spec.out_channels, 5, 5, 3)).astype(np.float32) * 0.2
+    pipe.register("custom", program, kernel)
+    with pytest.raises(CalibrationKeyError, match="plain"):
+        pipe.serve([FrontendRequest("custom", np.zeros((H, W, 3), np.float32))])
+    # keyed explicitly, the same circuit serves (fitted on demand)
+    explicit = FPCAPipeline(
+        {(program.circuit, spec.n_active_pixels): fit_bucket_model(
+            program.circuit, n_pixels=spec.n_active_pixels)},
+        backend="basis",
+    )
+    explicit.register("custom", program, kernel)
+    out = explicit.serve(
+        [FrontendRequest("custom", np.zeros((H, W, 3), np.float32))]
+    )
+    assert np.asarray(out[0]).shape == (*output_dims(spec), spec.out_channels)
+
+
 def test_unknown_config_raises(bucket_model):
     pipe = _pipeline(bucket_model)
     with pytest.raises(KeyError):

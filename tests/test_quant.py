@@ -1,0 +1,333 @@
+"""Quantised int8 serving path: calibrated digital-head lowering.
+
+What is pinned here:
+
+* **exact accumulation** — :func:`repro.models.quant.quant_bank_dot` is
+  bit-exact ``int8 x int8 -> int32`` through f32 sgemm carriers, including
+  reductions deeper than the 1024-term chunk bound;
+* **bounded parity** — the ``precision="int8"`` lowering tracks the f32
+  reference within pinned max-logit-divergence / top-1-agreement bounds
+  across the serving grid: dense batched, delta-gated masked streaming,
+  zero-kept ticks, and bucket-edge inputs;
+* **zero-recompile reprogram** — rewriting NVM planes *and* head weights
+  on an int8-compiled model never recompiles (scales ride traced);
+* **single-sourced leaf numerics** — gradient compression re-imports the
+  same symmetric int8 helpers (no second quantiser to drift);
+* **export round-trip** — calibrated activation scales pack/unpack through
+  the npz bundle representation for chain and graph heads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fpca
+from repro.core.mapping import FPCASpec
+from repro.models import quant
+
+pytestmark = pytest.mark.quant
+
+H = 20  # 4x4 window grid at kernel 5 / stride 5 — smallest honest workload
+
+
+def _programs(head=None, **frontend_kw):
+    spec = FPCASpec(image_h=H, image_w=H, out_channels=4, kernel=5, stride=5)
+    prog = fpca.FPCAProgram(
+        spec=spec, gate=fpca.DeltaGateConfig(threshold=0.02), **frontend_kw
+    )
+    head = head or (fpca.DenseSpec(16, activation="relu"), fpca.DenseSpec(3))
+    mp = fpca.FPCAModelProgram(frontend=prog, head=head)
+    return mp, mp.replace(precision="int8")
+
+
+def _kernel(mp, seed=0, scale=0.2):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=mp.frontend.kernel_shape) * scale).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# exact int32 accumulation through the f32 carrier bank
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(2, 64, 5), (1, 1024, 8), (3, 1500, 7), (2, 4096, 16)]
+)
+def test_bank_dot_is_exact_int32(m, k, n):
+    """quant_bank_dot == int64 reference for K below, at, and past the
+    chunk bound (incl. a non-multiple-of-1024 K that exercises padding)."""
+    rng = np.random.default_rng(k)
+    x_q = rng.integers(-127, 128, size=(m, k)).astype(np.float32)
+    w_q = rng.integers(-127, 128, size=(k, n)).astype(np.int8)
+    out = np.asarray(jax.jit(quant.quant_bank_dot)(x_q, jnp.asarray(w_q)))
+    ref = x_q.astype(np.int64) @ w_q.astype(np.int64)
+    assert out.dtype == np.int32
+    assert (out == ref).all()
+
+
+def test_compression_reimports_leaf_helpers():
+    """training/compression quantises with THE shared leaf helpers — the
+    symmetric int8 numerics have exactly one definition."""
+    from repro.training import compression
+
+    assert compression._quantize_leaf is quant.quantize_leaf_symmetric
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(9, 4)), jnp.float32)
+    q, s = quant.quantize_leaf_symmetric(g)
+    assert q.dtype == jnp.int8
+    deq = quant.dequantize_leaf(q, s)
+    # reconstruction error bounded by half a step
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(s) * 0.5 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# program surface
+# ---------------------------------------------------------------------------
+
+
+def test_precision_validated_and_signature_stable():
+    mp, mp_i8 = _programs()
+    with pytest.raises(ValueError, match="unknown precision"):
+        mp.replace(precision="fp4")
+    # every pre-existing f32 signature stays byte-identical; int8 extends it
+    assert mp.signature() == _programs()[0].signature()
+    assert not any("precision" in str(e) for e in mp.signature())
+    assert ("precision", "int8") in mp_i8.signature()
+    assert mp_i8.signature() != mp.signature()
+
+
+def test_bind_quant_error_paths():
+    mp, mp_i8 = _programs()
+    hp = mp.init_head(jax.random.PRNGKey(0))
+    qp = quant.quantize_head_params(mp_i8, hp)
+    bad = [dict(qp[0]), dict(qp[1])]
+    del bad[0]["x_scale"]
+    with pytest.raises(ValueError, match="needs keys"):
+        quant.bind_quant_head_params(mp_i8, bad)
+    bad = [dict(qp[0]), dict(qp[1])]
+    bad[1]["w_q"] = bad[1]["w_q"][:-1]
+    with pytest.raises(ValueError, match="do not match"):
+        quant.bind_quant_head_params(mp_i8, bad)
+    with pytest.raises(ValueError, match="stages"):
+        quant.bind_quant_head_params(mp_i8, qp[:1])
+    # the model program dispatches: raw f32 params quantise on the way in
+    bound = mp_i8.bind_head_params(hp)
+    assert quant.is_quantized_params(bound)
+    assert bound[0]["w_q"].dtype == jnp.int8
+
+
+def test_act_scale_pack_roundtrip_chain_and_graph():
+    mp, mp_i8 = _programs(
+        head=(
+            fpca.ConvSpec(6, 3, 1, "SAME", activation="relu"),
+            fpca.PoolSpec(2, 2, "avg"),
+            fpca.DenseSpec(5),
+        )
+    )
+    hp = mp.init_head(jax.random.PRNGKey(1))
+    counts = jnp.asarray(
+        np.random.default_rng(0).integers(0, 256, size=(2, 4, 4, 4)),
+        jnp.float32,
+    )
+    scales = quant.calibrate_head_scales(mp, mp.bind_head_params(hp), counts)
+    packed = quant.pack_act_scales(mp, scales)
+    assert packed.dtype == np.float32 and packed.shape == (len(mp.head),)
+    back = quant.unpack_act_scales(mp, packed)
+    assert back[1] is None  # pool stage stays parameterless
+    for b, s in zip(back, scales):
+        if s is None:
+            assert b is None
+        else:
+            assert b == pytest.approx(s, rel=1e-6)
+    with pytest.raises(ValueError, match="activation scales"):
+        quant.unpack_act_scales(mp, packed[:-1])
+
+    spec = FPCASpec(image_h=H, image_w=H, out_channels=4, kernel=5, stride=5)
+    g = fpca.build_model(
+        {"arch": "fpca_resnet", "spec": spec, "n_classes": 3, "width": 4}
+    )
+    gp = g.init_head(jax.random.PRNGKey(2))
+    gs = quant.calibrate_head_scales(g, g.bind_head_params(gp), counts)
+    gb = quant.unpack_act_scales(g, quant.pack_act_scales(g, gs))
+    assert gb == pytest.approx(gs, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bounded parity across the serving grid
+# ---------------------------------------------------------------------------
+
+# pinned bounds for the calibrated tiny classifier below (seeded, so the
+# numbers are deterministic on a given jax/XLA stack; bounds carry margin)
+MAX_LOGIT_DIVERGENCE = 0.35
+MIN_TOP1_AGREEMENT = 0.9
+
+
+def _compiled_pair(calibrate_on=None):
+    mp, mp_i8 = _programs()
+    kernel = _kernel(mp)
+    hp = mp.init_head(jax.random.PRNGKey(0))
+    m_f32 = fpca.compile(mp, backend="basis", weights=kernel, head_params=hp)
+    if calibrate_on is not None:
+        fe = fpca.compile(mp.frontend, backend="basis", weights=kernel)
+        hp_i8 = quant.quantize_head_params(
+            mp_i8, hp, sample_counts=fe.run(calibrate_on)
+        )
+    else:
+        hp_i8 = hp
+    m_i8 = fpca.compile(
+        mp_i8, backend="basis", weights=kernel, head_params=hp_i8
+    )
+    return mp, m_f32, m_i8
+
+
+def test_parity_dense_batched():
+    rng = np.random.default_rng(3)
+    frames = rng.uniform(0, 1, (8, H, H, 3)).astype(np.float32)
+    _, m_f32, m_i8 = _compiled_pair(calibrate_on=frames)
+    par = quant.logit_parity(m_f32.run(frames), m_i8.run(frames))
+    assert par["max_abs_divergence"] <= MAX_LOGIT_DIVERGENCE
+    assert par["top1_agreement"] >= MIN_TOP1_AGREEMENT
+
+
+def test_parity_bucket_edges():
+    """Constant frames sweeping [0, 1] drive the normalised bitline voltage
+    across every bucket edge — the worst case for the int8 transfer LUT."""
+    levels = np.linspace(0.0, 1.0, 11, dtype=np.float32)
+    frames = np.stack([np.full((H, H, 3), v) for v in levels])
+    _, m_f32, m_i8 = _compiled_pair(calibrate_on=frames)
+    par = quant.logit_parity(m_f32.run(frames), m_i8.run(frames))
+    assert par["max_abs_divergence"] <= MAX_LOGIT_DIVERGENCE
+    assert par["top1_agreement"] >= MIN_TOP1_AGREEMENT
+
+
+def test_parity_masked_and_zero_kept_stream():
+    """Per-tick parity through delta-gated streaming, including a repeated
+    frame whose tick keeps zero windows (quiet-branch logits)."""
+    rng = np.random.default_rng(5)
+    frames = rng.uniform(0, 1, (6, H, H, 3)).astype(np.float32)
+    # repeat a frame past the gate's hysteresis so one tick keeps nothing
+    frames[2] = frames[1]
+    frames[3] = frames[1]
+    frames[4] = frames[1]
+    _, m_f32, m_i8 = _compiled_pair(calibrate_on=frames)
+    got_zero_kept = False
+    for r32, r8 in zip(m_f32.stream(frames), m_i8.stream(frames)):
+        assert r32.kept_windows == r8.kept_windows  # gate sees raw frames
+        got_zero_kept |= r32.kept_windows == 0
+        par = quant.logit_parity(r32.logits, r8.logits)
+        assert par["max_abs_divergence"] <= MAX_LOGIT_DIVERGENCE
+    assert got_zero_kept, "grid must include a zero-kept tick"
+
+
+def test_int8_segment_matches_int8_stream_exactly():
+    """The lax.scan segment path serves the SAME int8 numerics as the
+    per-tick stream — bit-exact, zero-kept ticks included."""
+    rng = np.random.default_rng(7)
+    frames = rng.uniform(0, 1, (5, H, H, 3)).astype(np.float32)
+    frames[2] = frames[1]
+    _, _, m_i8 = _compiled_pair()
+    per_tick = np.stack([np.asarray(r.logits) for r in m_i8.stream(frames)])
+    seg = np.asarray(m_i8.run_segment(frames).logits)
+    np.testing.assert_array_equal(per_tick, seg.reshape(per_tick.shape))
+
+
+def test_reference_backend_serves_int8_head():
+    """Backends without quant_transfer (reference) serve the f32 frontend
+    under the int8 head — the head lowering is backend-independent."""
+    mp, mp_i8 = _programs()
+    kernel = _kernel(mp)
+    hp = mp.init_head(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    frames = rng.uniform(0, 1, (2, H, H, 3)).astype(np.float32)
+    m_ref = fpca.compile(
+        mp_i8, backend="reference", weights=kernel, head_params=hp
+    )
+    m_basis = fpca.compile(
+        mp_i8, backend="basis", weights=kernel, head_params=hp
+    )
+    # identical head quantisation; only the frontend transfer differs, and
+    # that by at most 1 LSB on a sliver of counts
+    par = quant.logit_parity(m_ref.run(frames), m_basis.run(frames))
+    assert par["max_abs_divergence"] <= MAX_LOGIT_DIVERGENCE
+
+
+def test_int8_lowering_matches_fake_quant_reference():
+    """apply_head_int8 == the fake-quant f32 simulation (dequantised
+    weights, requantised activations) — divergence from f32 is pure
+    quantisation error, never a lowering bug."""
+    mp, mp_i8 = _programs()
+    hp = mp.init_head(jax.random.PRNGKey(0))
+    counts = jnp.asarray(
+        np.random.default_rng(0).integers(0, 256, size=(3, 4, 4, 4)),
+        jnp.float32,
+    )
+    qp = quant.quantize_head_params(mp_i8, hp)
+    got = np.asarray(quant.apply_head_int8(mp_i8, qp, counts))
+
+    x = np.asarray(counts, np.float64).reshape(3, -1)
+    for q, act in zip(qp, ("relu", None)):
+        xs = float(q["x_scale"])
+        x_q = np.clip(np.round(x / xs), -127, 127)
+        acc = x_q @ np.asarray(q["w_q"], np.float64)
+        x = acc * (xs * np.asarray(q["w_scale"], np.float64)) + np.asarray(
+            q["b"], np.float64
+        )
+        if act == "relu":
+            x = np.maximum(x, 0.0)
+    np.testing.assert_allclose(got, x, atol=1e-4)
+
+
+def test_graph_head_int8_lowering():
+    """Zoo graph heads (residual adds, detect conv) lower stage-for-stage."""
+    spec = FPCASpec(image_h=H, image_w=H, out_channels=4, kernel=5, stride=5)
+    for cfg in (
+        {"arch": "fpca_resnet", "spec": spec, "n_classes": 3, "width": 4},
+        {"arch": "fpca_detect", "spec": spec, "n_classes": 2, "width": 4},
+    ):
+        g = fpca.build_model(cfg).replace(precision="int8")
+        gp = g.init_head(jax.random.PRNGKey(3))
+        counts = jnp.asarray(
+            np.random.default_rng(1).integers(0, 256, size=(2, 4, 4, 4)),
+            jnp.float32,
+        )
+        qp = quant.quantize_head_params(g, gp, sample_counts=counts)
+        out_i8 = np.asarray(g.apply_head(qp, counts))
+        out_f32 = np.asarray(
+            g.replace(precision="f32").apply_head(
+                g.replace(precision="f32").bind_head_params(gp), counts
+            )
+        )
+        assert out_i8.shape == out_f32.shape
+        scale = max(float(np.max(np.abs(out_f32))), 1.0)
+        assert float(np.max(np.abs(out_i8 - out_f32))) <= 0.1 * scale, cfg
+
+
+# ---------------------------------------------------------------------------
+# reprogramming
+# ---------------------------------------------------------------------------
+
+
+def test_int8_reprogram_is_zero_recompile():
+    """NVM planes, head weights AND freshly calibrated scales all ride
+    traced: reprogramming an int8-compiled model never recompiles."""
+    mp, mp_i8 = _programs()
+    kernel = _kernel(mp)
+    hp = mp.init_head(jax.random.PRNGKey(0))
+    m = fpca.compile(mp_i8, backend="basis", weights=kernel, head_params=hp)
+    rng = np.random.default_rng(13)
+    frames = rng.uniform(0, 1, (2, H, H, 3)).astype(np.float32)
+    before = np.asarray(m.run(frames))
+    misses = m.cache_info().misses
+    hp2 = mp.init_head(jax.random.PRNGKey(42))
+    m.reprogram(kernel * 0.7, head_params=hp2)
+    after = np.asarray(m.run(frames))
+    assert m.cache_info().misses == misses, "reprogram recompiled"
+    assert not np.array_equal(before, after), "reprogram was a no-op"
+    # streaming off the reprogrammed handle also stays on the warm cache
+    for _ in m.stream(frames):
+        pass
+    assert m.cache_info().misses > 0  # sanity: the cache is really in play
